@@ -1,0 +1,18 @@
+"""Shared trained cascade for the paper-table benchmarks (train once)."""
+import functools
+
+from repro.core.resnet_trainer import train_backtrack
+from repro.data.synth_images import make_image_splits
+from repro.models.resnet import CIResNet
+
+N_CLASSES = 10
+
+
+@functools.lru_cache(maxsize=1)
+def trained_cascade():
+    train, val, test = make_image_splits(n_classes=N_CLASSES, n_train=2048,
+                                         n_val=512, n_test=1024, seed=11)
+    model = CIResNet(n_blocks=1, n_classes=N_CLASSES, enhance_dim=64)
+    report = train_backtrack(model, train, n_epochs=3, batch_size=128,
+                             augment=False, test=test)
+    return model, report, (train, val, test)

@@ -1,0 +1,27 @@
+"""Figure 3 reproduction: accuracy vs average MACs curve swept over
+ε ∈ {20%, …, 1%, 0%} (the paper's grid)."""
+import numpy as np
+
+from benchmarks._shared import N_CLASSES, trained_cascade
+from repro.core.resnet_trainer import evaluate_tradeoff
+
+EPSILONS = [0.20, 0.15, 0.10, 0.08, 0.06, 0.04, 0.02, 0.01, 0.0]
+
+
+def run():
+    model, report, (train, val, test) = trained_cascade()
+    sweep = evaluate_tradeoff(model, report.params, report.state, val, test,
+                              EPSILONS, N_CLASSES)
+    rows = []
+    accs, macs = [], []
+    for eps, res in sweep:
+        rows.append((f"fig3/eps={eps:g}", 0.0,
+                     f"acc={res.accuracy:.4f};macs={res.avg_macs:.3g}"))
+        accs.append(res.accuracy)
+        macs.append(res.avg_macs)
+    # the paper's qualitative claim: the curve is monotone — less compute,
+    # (weakly) less accuracy
+    order = np.argsort(macs)
+    mono = all(np.diff(np.array(accs)[order]) >= -0.02)  # noise tolerance
+    rows.append(("fig3/monotone_tradeoff", 0.0, str(mono)))
+    return rows

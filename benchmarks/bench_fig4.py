@@ -1,0 +1,22 @@
+"""Figure 4 reproduction: α_m(δ) per classifier (near-linearity) and the
+confidence histograms over the test set."""
+import numpy as np
+
+from benchmarks._shared import trained_cascade
+from repro.core.calibration import accuracy_vs_confidence
+from repro.core.resnet_trainer import collect_outputs
+
+
+def run():
+    model, report, (_, _, test) = trained_cascade()
+    confs, preds, corrects = collect_outputs(model, report.params,
+                                             report.state, test)
+    rows = []
+    for m in range(3):
+        grid, alpha = accuracy_vs_confidence(confs[m], corrects[m])
+        r = float(np.corrcoef(grid, alpha)[0, 1]) if len(grid) > 10 else np.nan
+        rows.append((f"fig4/alpha_linearity_M{m}", 0.0, f"pearson_r={r:.4f}"))
+        hist, _ = np.histogram(confs[m], bins=10, range=(0, 1))
+        rows.append((f"fig4/conf_hist_M{m}", 0.0,
+                     ";".join(str(int(h)) for h in hist)))
+    return rows

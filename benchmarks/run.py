@@ -1,0 +1,38 @@
+"""Benchmark driver — one benchmark per paper table/figure plus the
+beyond-paper LLM-cascade and kernel benches.
+
+Prints ``name,us_per_call,derived`` CSV (and tees a copy to
+results/bench.csv when results/ exists).
+"""
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_table2, bench_fig3, bench_fig4,
+                            bench_llm_cascade, bench_kernels, bench_ablation)
+    mods = [("table2", bench_table2), ("fig3", bench_fig3),
+            ("fig4", bench_fig4), ("ablation", bench_ablation),
+            ("llm_cascade", bench_llm_cascade), ("kernels", bench_kernels)]
+    lines = ["name,us_per_call,derived"]
+    failed = False
+    for name, mod in mods:
+        try:
+            for row_name, us, derived in mod.run():
+                lines.append(f"{row_name},{us:.1f},{derived}")
+        except Exception as e:
+            failed = True
+            lines.append(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc()
+    out = "\n".join(lines)
+    print(out)
+    if os.path.isdir("results"):
+        with open("results/bench.csv", "w") as f:
+            f.write(out + "\n")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

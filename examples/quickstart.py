@@ -1,0 +1,58 @@
+"""Quickstart: build a cascade model, run a forward pass, decode with
+confidence-thresholded early exit, and change thresholds on the fly
+(Goal 1.2 — no retraining).
+
+    PYTHONPATH=src python examples/quickstart.py [--arch qwen2.5-3b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.confidence import softmax_outputs
+from repro.models.model import build_model, extra_input_shapes
+from repro.serving.engine import select_exit
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))          # smoke-scale variant
+    print(f"arch={cfg.name} family={cfg.family} layers={cfg.n_layers} "
+          f"segments={cfg.segments}")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 12)), jnp.int32)
+    extra = {k: jnp.zeros(s, jnp.float32)
+             for k, s in extra_input_shapes(cfg, 2).items()} or None
+
+    # 1) full-sequence forward: one logits tensor per cascade exit
+    logits, aux = model.forward_train(params, toks, extra)
+    for m, lg in enumerate(logits):
+        _, conf = softmax_outputs(lg[:, -1])
+        print(f"exit {m}: logits {lg.shape}, last-pos confidence "
+              f"{np.round(np.asarray(conf), 3)}")
+
+    # 2) prefill + a few decode steps with early exit
+    cache = model.init_cache(2, 32)
+    exit_logits, cache = model.prefill(params, toks, cache, extra)
+    t = toks.shape[1]
+    for thresholds in [(0.9, 0.0), (0.0, 0.0)]:   # on-the-fly change
+        tok, exit_idx, conf = select_exit(exit_logits, thresholds)
+        print(f"thresholds={thresholds}: next tokens "
+              f"{np.asarray(tok)}, exits {np.asarray(exit_idx)}")
+    step_logits, cache = model.decode_step(params, tok[:, None], t, cache,
+                                           extra)
+    tok2, exits2, _ = select_exit(step_logits, (0.5, 0.0))
+    print(f"decode step at t={t}: tokens {np.asarray(tok2)}, "
+          f"exits {np.asarray(exits2)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Flat-npz pytree checkpointing (orbax is not available offline).
+
+A checkpoint is a directory of ``step_<n>.npz`` files; each pytree leaf is
+stored under its slash-joined key path so restoration is structure-checked.
+Atomic via write-to-temp + rename.  Works for params, optimizer state, and
+cascade thresholds alike (anything jax.tree_util can flatten with string keys).
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.utils import path_str
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[path_str(path)] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure of ``like`` (shape- and key-checked)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        stored = dict(data)
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, leaf in paths_leaves:
+        key = path_str(path_keys)
+        if key not in stored:
+            raise KeyError(f"checkpoint {path} missing leaf {key}")
+        arr = stored[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs model {np.shape(leaf)}")
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,251 @@
+"""Configuration system for the cascaded-inference framework.
+
+Every assigned architecture is expressed as a :class:`ModelConfig`.  Configs are
+frozen dataclasses so they are hashable and can key jit caches.  Each arch file
+in this package exports ``CONFIG`` (the full, paper-cited configuration) and a
+``reduced()`` smoke variant (2 layers, d_model<=512, <=4 experts) used by the
+CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeConfig:
+    """Cascade (the paper's contribution) hyper-parameters.
+
+    ``n_components`` is the paper's ``n_m``.  ``exit_boundaries`` are the layer
+    indices *after which* an exit head branches (len == n_components - 1); the
+    final component exits at the last layer implicitly.  ``enhance_dim``
+    implements the paper's "classifier enhancement" (a widening projection in
+    the intermediate heads; 0 disables).  ``thresholds`` is the live
+    ``(δ̂_0 … δ̂_{n_m-1})`` vector — mutable at inference time *without
+    retraining* (Goal 1.2); the last entry must be 0.
+    """
+
+    n_components: int = 3
+    exit_boundaries: Tuple[int, ...] = ()
+    enhance_dim: int = 0
+    thresholds: Tuple[float, ...] = (0.9, 0.9, 0.0)
+    confidence: str = "softmax_max"  # or "entropy" (BranchyNet baseline)
+    # How exits execute on TPU: "select" = fixed graph (dry-run/roofline),
+    # "cond_batch" = lax.cond batch-uniform segment skipping.
+    exit_mode: str = "select"
+    # Whether deeper-layer KV / recurrent state is backfilled from the exit
+    # hidden state so later tokens can attend at full depth.
+    state_backfill: bool = True
+    # Share the final unembedding across exit heads (the LLM adaptation of the
+    # paper's "negligible parameter addition": per-exit norm + low-rank
+    # enhancement only; the vocab projection is shared).
+    share_unembed: bool = True
+    # Loss mode for train_step: "joint" (BranchyNet-style multi-loss baseline),
+    # "backtrack" (the paper's Algorithm 2, phase-controlled), "last" (phase 0).
+    loss_mode: str = "joint"
+    # Per-exit loss weights in joint mode.
+    joint_weights: Tuple[float, ...] = ()
+    # Train intermediate exit heads on every k-th position only (§Perf H7):
+    # the (B,S,vocab) intermediate logits dominate training HBM traffic for
+    # large-vocab archs; the heads see plenty of signal at stride 4.
+    exit_loss_stride: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One architecture.  Units follow each model card exactly."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm | cnn
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    source: str = ""   # paper / model-card citation
+
+    # --- attention ---
+    attn_window: int = 0          # 0 = full attention; >0 = sliding window
+    # chunked-attention tile sizes (§Perf H8): KV is re-read once per query
+    # chunk, so total attention HBM traffic ∝ S/attn_qchunk
+    attn_qchunk: int = 512
+    attn_kchunk: int = 1024
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    max_seq_len: int = 131072
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # --- xLSTM ---
+    slstm_every: int = 0          # every k-th layer is sLSTM (0 = none)
+
+    # --- hybrid (zamba2-style shared attention) ---
+    shared_attn_every: int = 0    # a shared attention block every k SSM layers
+
+    # --- VLM ---
+    cross_attn_every: int = 0     # every k-th layer has cross-attention
+    n_image_tokens: int = 0
+
+    # --- audio (enc-dec) ---
+    encoder_layers: int = 0
+    n_audio_frames: int = 0       # encoder output frames (stub frontend)
+
+    # --- numerics / misc ---
+    dtype: str = "bfloat16"
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    act: str = "swiglu"           # swiglu | gelu
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    use_kernels: bool = False     # route hot ops through Pallas kernels
+    remat: bool = True            # activation-checkpoint each block in training
+    # remat policy: "full" recomputes everything in backward (min memory,
+    # max recompute bytes); "dots" saves matmul outputs and recomputes only
+    # elementwise ops (§Perf H6 — trades temp memory for HBM traffic).
+    remat_policy: str = "full"
+    # Fully unroll the layer scans.  HLO size grows O(L) but XLA cost
+    # analysis then counts every layer (scan bodies are otherwise counted
+    # once) — used by the dry-run to extract exact roofline terms.
+    scan_unroll: bool = False
+
+    cascade: CascadeConfig = dataclasses.field(default_factory=CascadeConfig)
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def segments(self) -> Tuple[Tuple[int, int], ...]:
+        """(start, end) layer ranges of the n_components backbone segments."""
+        bounds = self.cascade.exit_boundaries or default_exit_boundaries(
+            self.n_layers, self.cascade.n_components)
+        out, prev = [], 0
+        for b in bounds:
+            out.append((prev, b))
+            prev = b
+        out.append((prev, self.n_layers))
+        return tuple(out)
+
+    def with_cascade(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(
+            self, cascade=dataclasses.replace(self.cascade, **kw))
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def default_exit_boundaries(n_layers: int, n_components: int) -> Tuple[int, ...]:
+    """Split ``n_layers`` into ``n_components`` near-equal segments.
+
+    Returns the n_components-1 interior boundaries.  Exits branch *after*
+    these layer indices.
+    """
+    if n_components < 2:
+        return ()
+    step = n_layers / n_components
+    return tuple(max(1, round(step * (i + 1))) for i in range(n_components - 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One assigned (seq_len, global_batch) workload."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Smoke-test variant of a config: 2 layers, d_model<=512, <=4 experts."""
+    d_model = min(cfg.d_model, 256)
+    n_heads = min(cfg.n_heads, 4)
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    # keep the GQA ratio if possible
+    if cfg.n_kv_heads < cfg.n_heads:
+        n_kv = max(1, n_heads // max(1, cfg.q_per_kv))
+    kw = dict(
+        n_layers=2,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=0,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        max_seq_len=512,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=32,
+        ssm_chunk=32,
+        n_image_tokens=min(cfg.n_image_tokens, 16) if cfg.n_image_tokens else 0,
+        encoder_layers=min(cfg.encoder_layers, 2) if cfg.encoder_layers else 0,
+        n_audio_frames=min(cfg.n_audio_frames, 30) if cfg.n_audio_frames else 0,
+        cross_attn_every=2 if cfg.cross_attn_every else 0,
+        shared_attn_every=2 if cfg.shared_attn_every else 0,
+        slstm_every=2 if cfg.slstm_every else 0,
+        attn_window=min(cfg.attn_window, 128) if cfg.attn_window else 0,
+        dtype="float32",
+        cascade=dataclasses.replace(cfg.cascade, exit_boundaries=(1,),
+                                    n_components=2,
+                                    thresholds=(0.9, 0.0)),
+    )
+    kw.update(overrides)
+    return dataclasses.replace(cfg, **kw)
+
+
+_REGISTRY = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    """Look up a registered architecture by ``--arch`` id."""
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs():
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all():
+    # import for registration side effect
+    from repro.configs import (  # noqa: F401
+        zamba2_1p2b, mixtral_8x7b, qwen3_moe_235b_a22b, minitron_4b,
+        xlstm_350m, deepseek_coder_33b, yi_9b, whisper_tiny,
+        llama_3p2_vision_90b, qwen2p5_3b, ci_resnet18)

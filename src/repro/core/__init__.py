@@ -1,0 +1,16 @@
+from repro.core.confidence import (entropy_confidence, softmax_confidence,
+                                   softmax_outputs)
+from repro.core.calibration import (accuracy_vs_confidence, calibrate_thresholds,
+                                    CalibrationResult, threshold_for_epsilon)
+from repro.core.cascade import (cascade_evaluate, cascade_infer_sequential,
+                                CascadeEvalResult)
+from repro.core.training import (backtrack_training_plan, cascade_loss,
+                                 trainability_mask)
+
+__all__ = [
+    "softmax_confidence", "softmax_outputs", "entropy_confidence",
+    "calibrate_thresholds", "accuracy_vs_confidence", "CalibrationResult",
+    "threshold_for_epsilon",
+    "cascade_evaluate", "cascade_infer_sequential", "CascadeEvalResult",
+    "backtrack_training_plan", "cascade_loss", "trainability_mask",
+]

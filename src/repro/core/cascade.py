@@ -1,0 +1,110 @@
+"""Cascaded Inference — Algorithm 1 of the paper, plus the vectorized
+evaluation harness that produces the paper's accuracy/speedup tables.
+
+Two execution styles:
+
+* ``cascade_infer_sequential`` — Algorithm 1 verbatim for a single input:
+  run components in order inside a ``lax.while_loop`` and stop as soon as
+  δ_m ≥ δ̂_m.  This is the per-sample dynamic path (the paper's deployment
+  model; on TPU it is the single-request serving path).
+
+* ``cascade_evaluate`` — the measurement harness: given per-component
+  (confidence, prediction) arrays over a dataset and the per-component MAC
+  prefix costs, compute for a threshold vector the exit distribution,
+  accuracy, average MACs and speedup.  The paper evaluates exactly this way
+  (its MAC counts are analytic, §6.2); computing all components once and
+  sweeping thresholds afterwards lets one ε-sweep reuse one forward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.confidence import softmax_outputs
+
+
+@dataclasses.dataclass
+class CascadeEvalResult:
+    accuracy: float
+    avg_macs: float
+    speedup: float              # vs always running the full cascade
+    exit_fractions: np.ndarray  # fraction of samples answered by component m
+    thresholds: Tuple[float, ...]
+
+
+def cascade_infer_sequential(component_fns: Sequence[Callable],
+                             thresholds: Sequence[float], x):
+    """Algorithm 1 CI(M, δ̂, x) for a single input (batch allowed; the stop
+    condition then requires *all* sequences confident — the batch-uniform
+    TPU semantics).
+
+    component_fns[m](x, state) -> (logits, state): state carries reused
+    computation (the feature map so far), making components nested prefixes.
+    """
+    n_m = len(component_fns)
+    outs = []
+    state = None
+    # Python loop over components (n_m is small and static); early termination
+    # realized with lax.cond so the graph stays compilable.
+    done = jnp.zeros((), bool)
+    result = None
+    conf_final = None
+    for m, fn in enumerate(component_fns):
+        logits, state = fn(x, state)
+        out, delta = softmax_outputs(logits)
+        take = jnp.logical_and(jnp.logical_not(done),
+                               jnp.all(delta >= thresholds[m])
+                               if m < n_m - 1 else jnp.array(True))
+        result = out if result is None else jnp.where(take, out, result)
+        conf_final = delta if conf_final is None else jnp.where(
+            take, delta, conf_final)
+        done = jnp.logical_or(done, take)
+    return result, conf_final
+
+
+def cascade_evaluate(confidences: Sequence[np.ndarray],
+                     predictions: Sequence[np.ndarray],
+                     labels: np.ndarray,
+                     mac_prefix: Sequence[float],
+                     thresholds: Sequence[float]) -> CascadeEvalResult:
+    """Evaluate early-termination for one threshold vector.
+
+    confidences[m], predictions[m]: (N,) arrays for component m over the
+    evaluation set; mac_prefix[m]: cumulative MACs of running components
+    0..m (nested cascade ⇒ prefix cost).  Last threshold is treated as 0.
+    """
+    n_m = len(confidences)
+    N = len(labels)
+    exit_idx = np.full(N, n_m - 1, np.int32)
+    for m in range(n_m - 2, -1, -1):   # later components first, earlier win
+        exit_idx = np.where(confidences[m] >= thresholds[m], m, exit_idx)
+    preds = np.stack(predictions, axis=0)[exit_idx, np.arange(N)]
+    acc = float(np.mean(preds == labels))
+    macs = np.asarray(mac_prefix, np.float64)[exit_idx]
+    avg = float(np.mean(macs))
+    fractions = np.bincount(exit_idx, minlength=n_m) / N
+    return CascadeEvalResult(
+        accuracy=acc, avg_macs=avg,
+        speedup=float(mac_prefix[-1] / avg),
+        exit_fractions=fractions,
+        thresholds=tuple(float(t) for t in thresholds))
+
+
+def sweep_epsilons(confidences_cal, corrects_cal, confidences_test,
+                   predictions_test, labels_test, mac_prefix,
+                   epsilons: Sequence[float]):
+    """Full Figure-3 style sweep: calibrate δ̂(ε) on the calibration split,
+    evaluate accuracy/MACs on the test split, one result per ε."""
+    from repro.core.calibration import calibrate_thresholds
+    results = []
+    for eps in epsilons:
+        cal = calibrate_thresholds(confidences_cal, corrects_cal, eps)
+        res = cascade_evaluate(confidences_test, predictions_test,
+                               labels_test, mac_prefix, cal.thresholds)
+        results.append((eps, cal, res))
+    return results

@@ -1,0 +1,46 @@
+"""Softmax confidence — Definitions 3.1–3.3 of the paper.
+
+    out_m(x) = argmax_c softmax(z_m)[c]          (Def. 3.2)
+    δ_m(x)   = max_c   softmax(z_m)[c]           (Def. 3.3)
+
+Both are computed from logits without materializing the softmax vector:
+δ = exp(max z − logsumexp z).  This identity is what the fused Pallas kernel
+(kernels/confidence.py) streams over vocab tiles; this module is the reference
+semantics used everywhere else.
+
+``entropy_confidence`` is the BranchyNet [TMK16] baseline the paper compares
+against (confidence = −entropy, higher = more confident), implemented for the
+ablation benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_outputs(logits: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(out, δ) per Defs. 3.2–3.3.  logits: (..., n_classes)."""
+    x = logits.astype(jnp.float32)
+    out = jnp.argmax(x, axis=-1)
+    m = jnp.max(x, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(x - m[..., None]), axis=-1))
+    delta = jnp.exp(m - lse)
+    return out, delta
+
+
+def softmax_confidence(logits: jnp.ndarray) -> jnp.ndarray:
+    """δ only (Def. 3.3)."""
+    return softmax_outputs(logits)[1]
+
+
+def entropy_confidence(logits: jnp.ndarray) -> jnp.ndarray:
+    """BranchyNet-style confidence: −entropy(softmax(z)), shifted to (…,0].
+
+    Higher is more confident; thresholds live on a different scale than δ,
+    so calibration (§5) is rerun when this measure is selected.
+    """
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    ent = -jnp.sum(p * jnp.log(jnp.clip(p, 1e-30, 1.0)), axis=-1)
+    return -ent

@@ -1,0 +1,196 @@
+"""Analytic MAC / FLOP accounting.
+
+The paper measures computational effort in MACs "obtained analytically by
+summing up the linear operations in the convolutional layers and the fully
+connected layers, excluding activations and batch normalization" (§6.2).
+``resnet_macs`` follows that scope exactly.
+
+For the LLM zoo, ``segment_macs_per_token`` gives decode-time MACs of each
+cascade segment (the quantity the early exit saves), and ``model_flops``
+gives the roofline MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.models.blocks import layer_kinds
+
+
+# ---------------------------------------------------------------------------
+# CI-ResNet (paper scope: conv + fc only)
+# ---------------------------------------------------------------------------
+
+def conv_macs(k: int, c_in: int, c_out: int, h_out: int, w_out: int) -> int:
+    return k * k * c_in * c_out * h_out * w_out
+
+
+def resnet_component_macs(n_blocks: int, n_classes: int,
+                          widths=(16, 32, 64), image_hw: int = 32,
+                          enhance_dim: int = 128) -> List[float]:
+    """Cumulative MACs after components 0,1,2 of CI-RESNET(n) (per image).
+
+    Component m = stem + modules 0..m + its classifier.  Matches resnet.py.
+    """
+    macs_prefix = []
+    total = conv_macs(3, 3, widths[0], image_hw, image_hw)      # stem
+    hw = image_hw
+    for mod in range(3):
+        c_in = widths[mod - 1] if mod else widths[0]
+        c_out = widths[mod]
+        stride = 1 if mod == 0 else 2
+        if stride == 2:
+            hw //= 2
+        # first block (possibly strided, with projection shortcut if needed)
+        total += conv_macs(3, c_in, c_out, hw, hw)
+        total += conv_macs(3, c_out, c_out, hw, hw)
+        if stride == 2 or c_in != c_out:
+            total += conv_macs(1, c_in, c_out, hw, hw)
+        for _ in range(n_blocks - 1):
+            total += 2 * conv_macs(3, c_out, c_out, hw, hw)
+        # classifier branch for this component
+        if mod < 2 and enhance_dim:
+            head = c_out * enhance_dim + enhance_dim * n_classes
+        else:
+            head = c_out * n_classes
+        macs_prefix.append(total + head)
+    return [float(m) for m in macs_prefix]
+
+
+# ---------------------------------------------------------------------------
+# LLM zoo
+# ---------------------------------------------------------------------------
+
+def _layer_macs_per_token(cfg: ModelConfig, kind: str, kv_len: int) -> float:
+    """Decode-time MACs of one layer for one new token, KV length kv_len."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    eff_kv = min(kv_len, cfg.attn_window) if cfg.attn_window else kv_len
+
+    def attn():
+        proj = d * (H * hd) + 2 * d * (KV * hd) + (H * hd) * d
+        scores = H * hd * eff_kv * 2             # qk + pv
+        return proj + scores
+
+    def mlp(ff):
+        mults = 3 if cfg.act == "swiglu" else 2
+        return mults * d * ff
+
+    def moe():
+        router = d * cfg.n_experts
+        return router + cfg.top_k * mlp(cfg.d_ff)
+
+    def mamba():
+        from repro.models.ssm import dims
+        d_inner, n_heads, conv_ch = dims(cfg)
+        in_p = d * (2 * d_inner + 2 * cfg.ssm_state + n_heads)
+        conv = cfg.ssm_conv * conv_ch
+        state = 2 * d_inner * cfg.ssm_state      # state update + C readout
+        out_p = d_inner * d
+        return in_p + conv + state + out_p
+
+    def mlstm():
+        from repro.models.xlstm import mlstm_dims
+        d_inner, h, p = mlstm_dims(cfg)
+        up = d * 2 * d_inner
+        qkv = 3 * d_inner * d_inner
+        cell = 3 * h * p * p                     # C update + readout
+        down = d_inner * d
+        return up + qkv + cell + down
+
+    def slstm():
+        p = d // cfg.n_heads
+        rec = 4 * cfg.n_heads * p * p
+        return d * 4 * d + rec + d * (4 * d) // 3 + ((4 * d) // 3) * d
+
+    def xattn():
+        T = cfg.n_image_tokens or cfg.n_audio_frames
+        proj = d * (H * hd) + (H * hd) * d       # q and o only at decode
+        scores = H * hd * T * 2
+        return proj + scores + mlp(cfg.d_ff)
+
+    table = {
+        "dense": lambda: attn() + mlp(cfg.d_ff),
+        "moe": lambda: attn() + moe(),
+        "mamba": mamba,
+        "attn_shared": lambda: attn() + mlp(cfg.d_ff),
+        "mlstm": mlstm,
+        "slstm": slstm,
+        "xattn": xattn,
+        "encdec": lambda: 2 * attn() + mlp(cfg.d_ff),
+    }
+    return float(table[kind]())
+
+
+def exit_head_macs(cfg: ModelConfig) -> float:
+    e = cfg.cascade.enhance_dim
+    enh = 2 * cfg.d_model * e if e else 0
+    return float(enh + cfg.d_model * cfg.vocab_size)
+
+
+def segment_macs_per_token(cfg: ModelConfig, kv_len: int) -> List[float]:
+    """Cumulative decode MACs after each cascade component (incl. its head)."""
+    kinds = layer_kinds(cfg)
+    prefix = []
+    total = 0.0
+    for si, (start, end) in enumerate(cfg.segments):
+        for i in range(start, end):
+            total += _layer_macs_per_token(cfg, kinds[i], kv_len)
+        prefix.append(total + exit_head_macs(cfg))
+    return prefix
+
+
+def param_count(cfg: ModelConfig) -> float:
+    """Approximate parameter count N (for 6·N·D roofline accounting)."""
+    kinds = layer_kinds(cfg)
+    total = cfg.vocab_size * cfg.d_model        # embed
+    total += cfg.vocab_size * cfg.d_model       # untied lm head
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+
+    def attn_p():
+        return d * H * hd + 2 * d * KV * hd + H * hd * d
+
+    def mlp_p(ff):
+        return (3 if cfg.act == "swiglu" else 2) * d * ff
+
+    from repro.models.ssm import dims as ssm_dims
+    from repro.models.xlstm import mlstm_dims
+    per = {
+        "dense": lambda: attn_p() + mlp_p(cfg.d_ff),
+        "moe": lambda: attn_p() + d * cfg.n_experts
+                       + cfg.n_experts * mlp_p(cfg.d_ff),
+        "mamba": lambda: (lambda di, nh, cc: d * (2 * di + 2 * cfg.ssm_state + nh)
+                          + cfg.ssm_conv * cc + di * d)(*ssm_dims(cfg)),
+        "attn_shared": lambda: 6 * 16 * d,       # LoRA only; shared block once
+        "mlstm": lambda: (lambda di, h, p: d * 2 * di + 3 * di * di + 2 * di * cfg.n_heads
+                          + di * d)(*mlstm_dims(cfg)),
+        "slstm": lambda: d * 4 * d + 4 * d * (d // cfg.n_heads)
+                         + d * (4 * d) // 3 + ((4 * d) // 3) * d,
+        "xattn": lambda: attn_p() + mlp_p(cfg.d_ff),
+        "encdec": lambda: 2 * attn_p() + mlp_p(cfg.d_ff),
+    }
+    for k in kinds:
+        total += per[k]()
+    if cfg.family == "hybrid":
+        total += attn_p() + mlp_p(cfg.d_ff)      # the shared block itself
+    if cfg.family == "audio":
+        total += cfg.encoder_layers * (attn_p() + mlp_p(cfg.d_ff))
+    return float(total)
+
+
+def active_param_count(cfg: ModelConfig) -> float:
+    """Active parameters per token (MoE: top_k of n_experts)."""
+    if not cfg.n_experts:
+        return param_count(cfg)
+    d = cfg.d_model
+    expert_p = (3 if cfg.act == "swiglu" else 2) * d * cfg.d_ff
+    inactive = (cfg.n_experts - cfg.top_k) * expert_p * cfg.n_layers
+    return param_count(cfg) - inactive
+
+
+def model_flops(cfg: ModelConfig, n_tokens: int, training: bool) -> float:
+    """MODEL_FLOPS = (6 if training else 2) · N_active · tokens."""
+    mult = 6.0 if training else 2.0
+    return mult * active_param_count(cfg) * n_tokens

@@ -1,0 +1,154 @@
+"""End-to-end driver for the faithful reproduction: BT-train CI-RESNET(n)
+(Algorithm 2), collect per-component confidences, calibrate thresholds (§5),
+and evaluate the early-termination tradeoff (Algorithm 1 / Table 2 / Fig 3).
+
+The paper's setup: SGD, cross-entropy + L2(1e-4), He init, [HZRS15a] LR
+schedule, data augmentation for CIFAR.  All reproduced; the dataset is the
+synthetic difficulty-structured distribution (see data/synth_images.py and
+DESIGN.md §2 for the data gate).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import calibrate_thresholds
+from repro.core.cascade import CascadeEvalResult, cascade_evaluate
+from repro.core.confidence import softmax_outputs
+from repro.core.macs import resnet_component_macs
+from repro.core.training import (Phase, backtrack_training_plan, cross_entropy,
+                                 l2_loss)
+from repro.data.synth_images import SynthImageDataset
+from repro.models.resnet import CIResNet
+from repro.optim import sgd_momentum, resnet_paper_schedule
+from repro.optim.optimizer import apply_updates
+from repro.utils import get_logger
+
+log = get_logger("resnet_trainer")
+
+
+@dataclasses.dataclass
+class TrainReport:
+    component_acc: List[float]          # test accuracy of each component
+    phase_losses: Dict[str, List[float]]
+    params: Dict
+    state: Dict
+
+
+def _mask_for_phase(params, phase: Phase):
+    """CI-ResNet layout: backbone = stem+modules; heads = head0..head2."""
+    def mask(path, leaf):
+        name = path[0].key if hasattr(path[0], "key") else str(path[0])
+        if name.startswith("head"):
+            idx = int(name[4:])
+            if idx == 2:
+                return jnp.asarray(phase.train_backbone)
+            return jnp.asarray(idx in phase.train_heads)
+        return jnp.asarray(phase.train_backbone)
+    return jax.tree_util.tree_map_with_path(mask, params)
+
+
+def train_backtrack(model: CIResNet, train: SynthImageDataset,
+                    n_epochs: int, batch_size: int = 128,
+                    base_lr: float = 0.1, l2_coef: float = 1e-4,
+                    augment: bool = True, seed: int = 0,
+                    test: Optional[SynthImageDataset] = None) -> TrainReport:
+    """Algorithm 2 BT(M, T, n_e)."""
+    key = jax.random.PRNGKey(seed)
+    params, state = model.init(key)
+    plan = backtrack_training_plan(3)
+    steps_per_epoch = len(train) // batch_size
+    rng = np.random.default_rng(seed)
+    phase_losses: Dict[str, List[float]] = {}
+
+    @functools.partial(jax.jit, static_argnames=("head", "train_flag"))
+    def train_step(params, state, opt_state, x, y, mask, step, head,
+                   train_flag=True):
+        def loss_fn(p):
+            logits, new_state = model.apply(p, state, x, train=train_flag)
+            loss = cross_entropy(logits[head], y) + l2_loss(p, l2_coef)
+            return loss, new_state
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params, step,
+                                        mask=mask)
+        params = apply_updates(params, updates)
+        return params, new_state, opt_state, loss
+
+    for phase in plan:
+        epochs = max(1, int(round(phase.epochs * n_epochs)))
+        total_steps = epochs * steps_per_epoch
+        lr = resnet_paper_schedule(base_lr if phase.train_backbone
+                                   else base_lr * 0.1, total_steps)
+        opt = sgd_momentum(lr, momentum=0.9)
+        opt_state = opt.init(params)
+        mask = _mask_for_phase(params, phase)
+        head = phase.loss_head
+        losses = []
+        step = 0
+        for x, y in train.batches(batch_size, rng, epochs=epochs,
+                                  augment=augment):
+            params, state, opt_state, loss = train_step(
+                params, state, opt_state, jnp.asarray(x), jnp.asarray(y),
+                mask, jnp.asarray(step), head)
+            losses.append(float(loss))
+            step += 1
+        phase_losses[phase.name] = losses
+        log.info("phase %s: %d steps, loss %.4f -> %.4f", phase.name, step,
+                 losses[0], np.mean(losses[-20:]))
+
+    report = TrainReport([], phase_losses, params, state)
+    if test is not None:
+        conf, preds, _ = collect_outputs(model, params, state, test)
+        report.component_acc = [float(np.mean(p == test.labels))
+                                for p in preds]
+        log.info("component accuracies: %s", report.component_acc)
+    return report
+
+
+def collect_outputs(model: CIResNet, params, state,
+                    data: SynthImageDataset, batch_size: int = 256):
+    """Per-component (confidence, prediction, correct) over a dataset."""
+    @jax.jit
+    def fwd(x):
+        logits, _ = model.apply(params, state, x, train=False)
+        outs = [softmax_outputs(lg) for lg in logits]
+        return ([o for o, _ in outs], [d for _, d in outs])
+
+    n = len(data)
+    n_m = 3
+    confs = [[] for _ in range(n_m)]
+    preds = [[] for _ in range(n_m)]
+    for i in range(0, n, batch_size):
+        x = jnp.asarray(data.images[i:i + batch_size])
+        outs, deltas = fwd(x)
+        for m in range(n_m):
+            preds[m].append(np.asarray(outs[m]))
+            confs[m].append(np.asarray(deltas[m]))
+    confs = [np.concatenate(c) for c in confs]
+    preds = [np.concatenate(p) for p in preds]
+    corrects = [(p == data.labels).astype(np.float64) for p in preds]
+    return confs, preds, corrects
+
+
+def evaluate_tradeoff(model: CIResNet, params, state,
+                      cal_data: SynthImageDataset,
+                      test_data: SynthImageDataset,
+                      epsilons, n_classes: int) -> List[Tuple[float, CascadeEvalResult]]:
+    """ε-sweep: calibrate on cal_data, evaluate on test_data (paper §5/§6.2)."""
+    mac_prefix = resnet_component_macs(model.n, n_classes,
+                                       enhance_dim=model.enhance_dim)
+    conf_c, _, corr_c = collect_outputs(model, params, state, cal_data)
+    conf_t, pred_t, _ = collect_outputs(model, params, state, test_data)
+    out = []
+    for eps in epsilons:
+        cal = calibrate_thresholds(conf_c, corr_c, eps)
+        res = cascade_evaluate(conf_t, pred_t, test_data.labels, mac_prefix,
+                               cal.thresholds)
+        out.append((eps, res))
+    return out

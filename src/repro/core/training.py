@@ -1,0 +1,114 @@
+"""Backtrack training — Algorithm 2 of the paper — plus the joint-loss
+baseline (BranchyNet-style) used for comparison and for the dry-run graphs.
+
+BT(M, T, n_e):
+  1. optimize Θ_conv ∪ θ_fc_{n_m−1} with L(out_{n_m−1}) for 1.25·n_e epochs
+  2. for m = 0 … n_m−2: optimize θ_fc_m with L(out_m) for n_e epochs
+
+Phases are realized with *trainability masks* over the parameter pytree fed
+to the optimizer (repro.optim), so one jitted train_step serves every phase:
+the mask zeroes updates (and momentum writes) of frozen leaves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import path_str
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    name: str
+    loss_head: int          # which exit's loss to optimize (-1 = last)
+    epochs: float           # multiplier on n_e
+    train_backbone: bool
+    train_heads: Tuple[int, ...]  # exit-head indices receiving updates
+
+
+def backtrack_training_plan(n_components: int) -> List[Phase]:
+    """The paper's Algorithm 2 as a phase list."""
+    phases = [Phase("backbone+last", loss_head=n_components - 1,
+                    epochs=1.25, train_backbone=True, train_heads=())]
+    for m in range(n_components - 1):
+        phases.append(Phase(f"head{m}", loss_head=m, epochs=1.0,
+                            train_backbone=False, train_heads=(m,)))
+    return phases
+
+
+def _is_exit_leaf(path: str) -> Tuple[bool, int]:
+    parts = path.split("/")
+    if "exits" in parts:
+        i = parts.index("exits")
+        return True, int(parts[i + 1])
+    return False, -1
+
+
+def _is_final_head_leaf(path: str) -> bool:
+    return path.split("/")[0] in ("final_norm", "lm_head", "head_final")
+
+
+def trainability_mask(params, phase: Phase):
+    """Bool pytree: True where the optimizer may update in this phase."""
+    def leaf_mask(path, leaf):
+        p = path_str(path)
+        is_exit, idx = _is_exit_leaf(p)
+        if is_exit:
+            return jnp.asarray(idx in phase.train_heads)
+        if _is_final_head_leaf(p):
+            # the final classifier trains together with the backbone (line 1)
+            return jnp.asarray(phase.train_backbone)
+        return jnp.asarray(phase.train_backbone)
+    return jax.tree_util.tree_map_with_path(leaf_mask, params)
+
+
+def cross_entropy(logits, labels):
+    """Mean CE.  logits (..., C); labels integer (...)."""
+    logz = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logz, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def l2_loss(params, coef: float):
+    """The paper regularizes with an L2 loss, coefficient 1e-4."""
+    if not coef:
+        return jnp.zeros((), jnp.float32)
+    acc = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(params):
+        if jnp.issubdtype(leaf.dtype, jnp.floating) and leaf.ndim >= 2:
+            acc = acc + jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+    return coef * acc
+
+
+def cascade_loss(exit_logits: Sequence[jnp.ndarray], labels, mode: str,
+                 head: int = -1, joint_weights: Sequence[float] = (),
+                 aux: jnp.ndarray | None = None,
+                 aux_coef: float = 0.0):
+    """Loss over cascade exits.
+
+    mode "single": L(out_head) — used by every BT phase (Algorithm 2).
+    mode "joint":  Σ_m w_m · L(out_m) — the BranchyNet baseline the paper
+                   contrasts with, and the dry-run's representative graph.
+    """
+    def _ce(lg, y):
+        # intermediate exits may be position-strided (cascade.exit_loss_stride)
+        if lg.ndim == y.ndim + 1 and lg.shape[-2] != y.shape[-1]:
+            stride = y.shape[-1] // lg.shape[-2]
+            y = y[..., ::stride]
+        return cross_entropy(lg, y)
+
+    if mode == "single":
+        loss = _ce(exit_logits[head], labels)
+    elif mode == "joint":
+        n = len(exit_logits)
+        w = list(joint_weights) or [1.0] * n
+        loss = sum(wi * _ce(lg, labels)
+                   for wi, lg in zip(w, exit_logits)) / sum(w)
+    else:
+        raise ValueError(mode)
+    if aux is not None and aux_coef:
+        loss = loss + aux_coef * aux
+    return loss

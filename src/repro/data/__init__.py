@@ -1,0 +1,5 @@
+from repro.data.synth_images import SynthImageDataset, make_image_splits
+from repro.data.lm_pipeline import SyntheticLMStream, shard_batch
+
+__all__ = ["SynthImageDataset", "make_image_splits", "SyntheticLMStream",
+           "shard_batch"]

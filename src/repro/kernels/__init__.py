@@ -1,0 +1,6 @@
+from repro.kernels import ref
+from repro.kernels.ops import (decode_attention_cache, flash_attention_bshd,
+                               rmsnorm_fused, softmax_confidence_fused)
+
+__all__ = ["ref", "softmax_confidence_fused", "rmsnorm_fused",
+           "flash_attention_bshd", "decode_attention_cache"]

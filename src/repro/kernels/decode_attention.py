@@ -1,0 +1,96 @@
+"""Single-query (decode) attention Pallas kernel with ring-buffer masking.
+
+One new token attends over a KV cache of length W.  Grid: (B, KV_heads,
+W/Tk) with the W axis innermost; the (qpk, hd) query-group tile stays in
+VMEM and KV tiles stream through, carrying the online-softmax (acc, m, l)
+in scratch.  The slot-position vector ``kpos`` (absolute position per cache
+slot, −1 = empty) is streamed alongside each KV tile and implements causal
++ sliding-window + ring-wraparound masking in one comparison.
+
+Layout: q (B, KV, qpk, hd); k, v (B, KV, W, hd); kpos (W,) int32; t scalar.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _decode_kernel(t_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+                   acc_s, m_s, l_s, *, tk, n_ktiles, window, scale):
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+        m_s[...] = jnp.full_like(m_s[...], NEG)
+        l_s[...] = jnp.zeros_like(l_s[...])
+
+    t = t_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)                # (qpk, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                # (Tk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    kpos = kpos_ref[...]                               # (Tk,)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = (kpos >= 0) & (kpos <= t)
+    if window:
+        mask &= kpos > t - window
+    s = jnp.where(mask[None, :], s, NEG)
+    m_old = m_s[...]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_old - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1)
+    acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(jk == n_ktiles - 1)
+    def _out():
+        o_ref[0, 0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "tk", "interpret"))
+def decode_attention(q, k_cache, v_cache, t, kpos, *, window: int = 0,
+                     tk: int = 512, interpret: bool = True):
+    """q: (B, KV, qpk, hd); caches (B, KV, W, hd); t scalar int32;
+    kpos (W,) int32 -> (B, KV, qpk, hd)."""
+    B, KV, qpk, hd = q.shape
+    W = k_cache.shape[2]
+    tk = min(tk, W)
+    pad = (-W) % tk
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+    Wp = W + pad
+    n_ktiles = Wp // tk
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_decode_kernel, tk=tk, n_ktiles=n_ktiles,
+                               window=window, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_ktiles),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ik: (0,)),
+            pl.BlockSpec((1, 1, qpk, hd), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, tk, hd), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, tk, hd), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((tk,), lambda b, h, ik: (ik,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qpk, hd), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, qpk, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((qpk, hd), jnp.float32),
+                        pltpu.VMEM((qpk,), jnp.float32),
+                        pltpu.VMEM((qpk,), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(t, jnp.int32).reshape(1), q, k_cache, v_cache, kpos)
+    return out

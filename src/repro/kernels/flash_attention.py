@@ -1,0 +1,111 @@
+"""Causal flash-attention Pallas kernel (prefill/training forward).
+
+TPU-native tiling: q tile (Tq, hd) stays resident in VMEM while KV tiles
+(Tk, hd) stream; the (Tq, Tk) score tile lives only in VMEM/VREGs.  Online
+softmax carries (acc, m, l) in f32 scratch.  GQA is expressed through the
+BlockSpec index maps: the kv-head grid index is q_head // q_per_kv, so KV
+tiles are fetched once per q-head group without materializing the repeat.
+Causality (and an optional sliding window) skips whole tiles via pl.when —
+the skipped-tile fraction is what cuts the compute term in the roofline.
+
+Layout: q (B, H, S, hd); k, v (B, KV, S, hd).  hd padded to 128 by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_s, m_s, l_s,
+                  *, tq, tk, n_ktiles, causal, window, scale):
+    jq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+        m_s[...] = jnp.full_like(m_s[...], NEG)
+        l_s[...] = jnp.zeros_like(l_s[...])
+
+    q_start = jq * tq
+    k_start = jk * tk
+    # tile-level visibility: skip tiles fully outside the causal/window band
+    run = jnp.asarray(True)
+    if causal:
+        run = k_start <= q_start + tq - 1
+    if window:
+        run = jnp.logical_and(run, k_start + tk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32)            # (Tq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (Tk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        mask = jnp.ones((tq, tk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG)
+        m_old = m_s[...]
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_old - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1)
+        acc_s[...] = acc_s[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(jk == n_ktiles - 1)
+    def _out():
+        o_ref[0, 0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "tq", "tk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    tq: int = 128, tk: int = 128, interpret: bool = True):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) -> (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    qpk = H // KV
+    tq = min(tq, S)
+    tk = min(tk, S)
+    assert S % tq == 0 and S % tk == 0, (S, tq, tk)
+    n_ktiles = S // tk
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_flash_kernel, tq=tq, tk=tk,
+                               n_ktiles=n_ktiles, causal=causal,
+                               window=window, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, S // tq, n_ktiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, tk, hd),
+                         lambda b, h, iq, ik, _qpk=qpk: (b, h // _qpk, ik, 0)),
+            pl.BlockSpec((1, 1, tk, hd),
+                         lambda b, h, iq, ik, _qpk=qpk: (b, h // _qpk, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((tq, hd), jnp.float32),
+                        pltpu.VMEM((tq,), jnp.float32),
+                        pltpu.VMEM((tq,), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)
+    return out

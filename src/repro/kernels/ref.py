@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each ``ref_*`` is the mathematically-plain implementation the kernels are
+tested against with assert_allclose over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_confidence(logits):
+    """Fused softmax-confidence oracle.  logits: (B, V) ->
+    (argmax (B,) int32, delta (B,) f32) per Defs. 3.2-3.3."""
+    x = logits.astype(jnp.float32)
+    idx = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    m = jnp.max(x, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(x - m[..., None]), axis=-1))
+    return idx, jnp.exp(m - lse)
+
+
+def ref_rmsnorm(x, w, eps: float = 1e-5):
+    """x: (R, d); w: (d,)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(
+        x.dtype)
+
+
+def ref_flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd).  GQA by head grouping."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    qpk = H // KV
+    qh = q.reshape(B, KV, qpk, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qh, kf) / math.sqrt(hd)
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, vf)
+    return o.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def ref_decode_attention(q, k_cache, v_cache, t, kpos, window: int = 0):
+    """q: (B, H, hd); caches: (B, W, KV, hd); t scalar; kpos (W,)."""
+    B, H, hd = q.shape
+    W, KV = k_cache.shape[1], k_cache.shape[2]
+    qpk = H // KV
+    qh = q.reshape(B, KV, qpk, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bwkh->bkgw", qh, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    m = (kpos >= 0) & (kpos <= t)
+    if window:
+        m = m & (kpos > t - window)
+    s = jnp.where(m[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

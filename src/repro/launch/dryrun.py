@@ -1,0 +1,243 @@
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh) lowers
+and compiles under the production sharding, and extract roofline inputs.
+
+MUST set the device-count flag before any jax import side effects.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config, list_configs  # noqa: E402
+from repro.core.macs import model_flops  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.shard_rules import (batch_spec, cache_spec, param_spec,  # noqa: E402
+                                      to_shardings)
+from repro.launch.steps import (make_batch_structs, make_optimizer,  # noqa: E402
+                                make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.models.model import build_model, extra_input_shapes  # noqa: E402
+
+DTYPE_BITS = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8": 1,
+              "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
+              "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# long-context window for full-attention archs (the spec's sliding-window
+# carve-out); SSM archs keep their recurrent state instead.
+LONG_WINDOW = 8192
+SKIP = {("whisper-tiny", "long_500k"):
+        "enc-dec target positions are bounded (<=448); 500k decode is "
+        "architecturally meaningless for an ASR decoder (DESIGN.md)"}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BITS.get(dtype, 4)
+
+
+_OP_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^=]*?\b(" + "|".join(COLLECTIVES) + r")\(")
+
+
+def parse_collectives(hlo_text: str):
+    """Approximate per-device wire bytes of every collective in the compiled
+    HLO.  Result-shape based; all-reduce counted 2x (ring = reduce-scatter +
+    all-gather)."""
+    out = {op: 0 for op in COLLECTIVES}
+    counts = {op: 0 for op in COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(dtype, dims)
+        out[op] += 2 * b if op == "all-reduce" else b
+        counts[op] += 1
+    return out, counts
+
+
+def adjust_config(cfg, shape, unroll: bool = False):
+    if shape.name == "long_500k" and cfg.family not in ("ssm",):
+        if cfg.attn_window == 0 or cfg.attn_window > LONG_WINDOW:
+            cfg = cfg.replace(attn_window=min(cfg.attn_window or LONG_WINDOW,
+                                              LONG_WINDOW))
+    if shape.kind == "decode":
+        cfg = cfg.with_cascade(exit_mode="select")
+    if unroll:
+        cfg = cfg.replace(scan_unroll=True)
+    return cfg
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool,
+                unroll: bool = False, cfg_override=None,
+                param_mode: str = "default", kv_dtype=None):
+    """Build, lower, compile one combination; return the roofline record."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = cfg_override or adjust_config(get_config(arch), shape, unroll)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    rec = {"arch": arch, "shape": shape_name, "param_mode": param_mode,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+    t0 = time.time()
+
+    params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_spec = param_spec(params_s, cfg, mesh, mode=param_mode)
+    p_shard = to_shardings(mesh, p_spec)
+    scalar = NamedSharding(mesh, P())
+
+    with mesh:
+        if shape.kind == "train":
+            opt = make_optimizer(cfg)
+            opt_s = jax.eval_shape(opt.init, params_s)
+            o_shard = to_shardings(mesh, param_spec(opt_s, cfg, mesh))
+            batch_structs = make_batch_structs(cfg, shape.global_batch,
+                                               shape.seq_len)
+            b_shard = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, batch_spec(
+                    cfg, mesh, shape.global_batch, len(s.shape))),
+                batch_structs)
+            step_fn = make_train_step(model, cfg, opt)
+            jitted = jax.jit(step_fn, in_shardings=(p_shard, o_shard, scalar,
+                                                    b_shard))
+            lowered = jitted.lower(params_s, opt_s,
+                                   jax.ShapeDtypeStruct((), jnp.int32),
+                                   batch_structs)
+            n_tokens = shape.global_batch * shape.seq_len
+            training = True
+        elif shape.kind == "prefill":
+            cache_s = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            c_shard = to_shardings(mesh, cache_spec(cache_s, cfg, mesh,
+                                                    shape.global_batch))
+            tok_s = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                         jnp.int32)
+            t_shard = NamedSharding(mesh, batch_spec(cfg, mesh,
+                                                     shape.global_batch, 2))
+            extra_s, e_shard = _extra(cfg, shape.global_batch, mesh)
+            step_fn = make_prefill_step(model, cfg)
+            jitted = jax.jit(step_fn, in_shardings=(p_shard, t_shard, c_shard,
+                                                    e_shard))
+            lowered = jitted.lower(params_s, tok_s, cache_s, extra_s)
+            n_tokens = shape.global_batch * shape.seq_len
+            training = False
+        else:  # decode
+            cache_s = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                         dtype=kv_dtype))
+            c_shard = to_shardings(mesh, cache_spec(cache_s, cfg, mesh,
+                                                    shape.global_batch))
+            tok_s = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            t_shard = NamedSharding(mesh, batch_spec(cfg, mesh,
+                                                     shape.global_batch, 2))
+            extra_s, e_shard = _extra(cfg, shape.global_batch, mesh)
+            step_fn = make_serve_step(model, cfg)
+            jitted = jax.jit(step_fn, in_shardings=(p_shard, t_shard, scalar,
+                                                    c_shard, e_shard))
+            lowered = jitted.lower(params_s, tok_s,
+                                   jax.ShapeDtypeStruct((), jnp.int32),
+                                   cache_s, extra_s)
+            n_tokens = shape.global_batch
+            training = False
+
+        rec["t_lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["t_compile_s"] = round(time.time() - t1, 1)
+
+        try:
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+        except Exception as e:  # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+        try:
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            rec["flops"] = float(cost.get("flops", 0.0))
+            rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
+        except Exception as e:  # pragma: no cover
+            rec["flops"] = rec["hlo_bytes"] = -1.0
+            rec["cost_error"] = str(e)
+        coll, counts = parse_collectives(compiled.as_text())
+        rec["collective_bytes"] = coll
+        rec["collective_counts"] = counts
+        rec["model_flops"] = model_flops(cfg, n_tokens, training)
+        rec["n_tokens"] = n_tokens
+        rec["ok"] = True
+    return rec
+
+
+def _extra(cfg, batch, mesh):
+    shapes = extra_input_shapes(cfg, batch)
+    if not shapes:
+        return None, None
+    structs = {k: jax.ShapeDtypeStruct(v, jnp.float32)
+               for k, v in shapes.items()}
+    shards = {k: NamedSharding(mesh, batch_spec(cfg, mesh, batch, len(v)))
+              for k, v in shapes.items()}
+    return structs, shards
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll layer scans for exact cost analysis")
+    ap.add_argument("--param-mode", default="default",
+                    choices=["default", "serve1d", "serve2d"],
+                    help="parameter sharding layout (see shard_rules.py)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    archs = ([a for a in list_configs() if a != "ci-resnet18"]
+             if args.arch == "all" else [args.arch])
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            tag = (f"{arch}__{shape}__{'mp' if args.multi_pod else 'sp'}"
+                   + ("_unroll" if args.unroll else "")
+                   + (f"_{args.param_mode}" if args.param_mode != "default"
+                      else ""))
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print("skip (exists)", tag)
+                continue
+            if (arch, shape) in SKIP:
+                rec = {"arch": arch, "shape": shape, "ok": True,
+                       "skipped": SKIP[(arch, shape)]}
+            else:
+                try:
+                    rec = lower_combo(arch, shape, args.multi_pod,
+                                      unroll=args.unroll,
+                                      param_mode=args.param_mode)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "ok": False,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2)
+            status = "OK" if rec.get("ok") else "FAIL"
+            print(f"{status} {tag} "
+                  f"flops={rec.get('flops', 0):.3g} "
+                  f"compile={rec.get('t_compile_s', 0)}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Roofline analysis over the dry-run records.
+
+Terms (per step, per chip; TPU v5e):
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_wire_bytes_per_chip / ICI_bw
+
+Sources: unrolled dry-run records (scan bodies fully counted; validated
+against hand counts).  ``cost_analysis`` is per-device on the partitioned
+module.  MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference);
+the MODEL/HLO ratio flags remat/redundancy waste (and, for decode, the
+attention+exit-head compute that 6ND-style accounting does not include).
+
+    PYTHONPATH=src python -m repro.launch.roofline --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (~per chip aggregate assumption)
+
+
+def load_records(d: str, suffix: str, ok_only: bool = False) -> Dict:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(d, f"*__{suffix}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if ok_only and not rec.get("ok"):
+            continue  # fall back to the scanned record instead
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def terms(rec: dict) -> Optional[dict]:
+    if not rec.get("ok") or "flops" not in rec:
+        return None
+    compute = rec["flops"] / PEAK_FLOPS
+    memory = rec["hlo_bytes"] / HBM_BW
+    coll_bytes = sum(rec["collective_bytes"].values())
+    collective = coll_bytes / ICI_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])
+    chips = 512 if rec.get("mesh") == "2x16x16" else 256
+    useful = rec["model_flops"] / (rec["flops"] * chips) if rec["flops"] else 0
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "bottleneck": dom[0], "step_s": dom[1],
+        "model_flops": rec["model_flops"],
+        "useful_ratio": useful,
+        "coll_bytes": coll_bytes,
+    }
+
+
+def fmt(x: float) -> str:
+    if x == 0:
+        return "0"
+    for unit, scale in (("s", 1), ("ms", 1e-3), ("us", 1e-6), ("ns", 1e-9)):
+        if x >= scale:
+            return f"{x / scale:.3g}{unit}"
+    return f"{x:.2g}s"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--suffix", default="sp_unroll",
+                    help="record suffix: sp | mp | sp_unroll")
+    ap.add_argument("--fallback", default="sp",
+                    help="suffix to fall back to when the primary is missing")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    recs = load_records(args.dir, args.suffix, ok_only=True)
+    fall = load_records(args.dir, args.fallback) if args.fallback else {}
+    keys = sorted(set(recs) | set(fall))
+    lines = ["| arch | shape | compute | memory | collective | bottleneck "
+             "| MODEL/HLO | note |",
+             "|---|---|---|---|---|---|---|---|"]
+    for key in keys:
+        rec = recs.get(key) or fall.get(key)
+        src = args.suffix if key in recs else f"{args.fallback}(fallback)"
+        arch, shape = key
+        if rec.get("skipped"):
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | "
+                         f"skipped: {rec['skipped'][:60]}… |")
+            continue
+        t = terms(rec)
+        if t is None:
+            lines.append(f"| {arch} | {shape} | — | — | — | — | — | "
+                         f"FAILED: {rec.get('error', '?')[:60]} |")
+            continue
+        lines.append(
+            f"| {arch} | {shape} | {fmt(t['compute_s'])} | "
+            f"{fmt(t['memory_s'])} | {fmt(t['collective_s'])} | "
+            f"**{t['bottleneck']}** | {t['useful_ratio']:.2f} | {src} |")
+    table = "\n".join(lines)
+    print(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(table + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Serving launcher: cascade early-exit decode through the serving engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+        --requests 8 --max-new 8 --threshold 0.5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models.model import build_model
+from repro.serving import CascadeServingEngine, Request
+from repro.utils import get_logger
+
+log = get_logger("serve")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--threshold", type=float, default=0.5)
+    ap.add_argument("--exit-mode", default="select",
+                    choices=["select", "cond_batch"])
+    ap.add_argument("--lanes", type=int, default=2)
+    ap.add_argument("--lane-batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    n = cfg.cascade.n_components
+    ths = tuple([args.threshold] * (n - 1) + [0.0])
+    cfg = cfg.with_cascade(thresholds=ths, exit_mode=args.exit_mode)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = CascadeServingEngine(cfg, model, params,
+                                  lane_batch=args.lane_batch,
+                                  n_lanes=args.lanes,
+                                  cache_len=args.cache_len)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        engine.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                args.prompt_len).astype(np.int32),
+            max_new_tokens=args.max_new))
+    engine.run()
+    stats = engine.stats()
+    log.info("stats: %s", json.dumps(stats, indent=2))
+    assert stats["requests_finished"] == args.requests
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Step builders shared by train.py, serve.py, and dryrun.py.
+
+``make_train_step``: joint-loss cascade training step (fwd + bwd + AdamW).
+``make_prefill_step`` / ``make_serve_step``: inference steps; serve_step is
+ONE new token against a KV/state cache (what the decode shapes lower).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.training import cascade_loss
+from repro.models.model import CascadeModel, extra_input_shapes
+from repro.optim import adamw
+from repro.optim.optimizer import Optimizer, apply_updates
+from repro.serving.engine import select_exit
+
+
+def make_optimizer(cfg: ModelConfig) -> Optimizer:
+    return adamw(lr=3e-4, weight_decay=0.1)
+
+
+def make_train_step(model: CascadeModel, cfg: ModelConfig,
+                    optimizer: Optimizer):
+    def train_step(params, opt_state, step, batch):
+        def loss_fn(p):
+            logits, aux = model.forward_train(p, batch["tokens"],
+                                              batch.get("extra"))
+            return cascade_loss(logits, batch["labels"],
+                                cfg.cascade.loss_mode or "joint",
+                                joint_weights=cfg.cascade.joint_weights,
+                                aux=aux, aux_coef=cfg.router_aux_coef)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+    return train_step
+
+
+def make_prefill_step(model: CascadeModel, cfg: ModelConfig):
+    def prefill_step(params, tokens, cache, extra):
+        logits, cache = model.prefill(params, tokens, cache, extra)
+        tok, exit_idx, conf = select_exit(logits, cfg.cascade.thresholds)
+        return tok, exit_idx, conf, cache
+    return prefill_step
+
+
+def make_serve_step(model: CascadeModel, cfg: ModelConfig):
+    def serve_step(params, token, t, cache, extra):
+        logits, cache = model.decode_step(params, token, t, cache, extra)
+        tok, exit_idx, conf = select_exit(logits, cfg.cascade.thresholds)
+        return tok, exit_idx, conf, cache
+    return serve_step
+
+
+def make_batch_structs(cfg: ModelConfig, batch: int, seq: int,
+                       dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins for a training batch."""
+    extra = {k: jax.ShapeDtypeStruct(v, dtype)
+             for k, v in extra_input_shapes(cfg, batch).items()}
+    d = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if extra:
+        d["extra"] = extra
+    return d

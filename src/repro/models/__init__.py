@@ -1,0 +1,3 @@
+from repro.models.model import CascadeModel, build_model
+
+__all__ = ["CascadeModel", "build_model"]

@@ -1,0 +1,374 @@
+"""Core transformer layers: norms, RoPE, GQA/SWA attention (full / chunked /
+decode / cross), and MLPs.
+
+Attention has three execution paths:
+
+* ``attend_full`` — plain einsum softmax; used for short sequences.
+* ``attend_chunked`` — online-softmax ``lax.scan`` over KV chunks; memory is
+  O(S·chunk) instead of O(S²), which is what lets the 32k-prefill shape
+  *compile within HBM* on the 256-chip mesh.  This is the pure-XLA flash
+  formulation; the Pallas kernel (kernels/flash_attention.py) is the fused
+  VMEM-tiled version selected by ``cfg.use_kernels``.
+* ``attend_decode`` — single-query attention against a (possibly ring-buffer)
+  KV cache.
+
+All paths take a ``kpos`` vector giving the *absolute position* of each key
+slot (-1 ⇒ empty slot) which uniformly encodes causal, sliding-window, and
+ring-buffer masking:  key j visible to query at position t iff
+``0 <= kpos[j] <= t`` and ``kpos[j] > t - window`` (when window > 0).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import nn
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps)).astype(dtype) * weight
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * lax.rsqrt(var + eps)
+    return y.astype(dtype) * weight + bias
+
+
+def norm_init(key, cfg, dim=None):
+    d = dim or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.ones((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_apply(params, cfg, x):
+    if "b" in params:
+        return layernorm(x, params["w"].astype(x.dtype),
+                         params["b"].astype(x.dtype), cfg.norm_eps)
+    if cfg.use_kernels:
+        from repro.kernels.ops import rmsnorm_fused
+        return rmsnorm_fused(x, params["w"], eps=cfg.norm_eps)
+    return rmsnorm(x, params["w"].astype(x.dtype), cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x  # learned absolute positions (whisper) — no RoPE
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                      # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention parameter init
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, *, cross: bool = False, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv_, ko, kn, kn2 = nn.split_keys(key, 6)
+    p = {
+        "wq": nn.dense_init(kq, (d, cfg.n_heads * hd)),
+        "wk": nn.dense_init(kk, (d, cfg.n_kv_heads * hd)),
+        "wv": nn.dense_init(kv_, (d, cfg.n_kv_heads * hd)),
+        "wo": nn.dense_init(ko, (cfg.n_heads * hd, d)),
+        "norm": norm_init(kn, cfg, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+    if cross:
+        # gated cross-attention (llama-3.2-vision style tanh gate)
+        p["gate"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def qkv_project(params, cfg, x, *, rope_positions=None):
+    """Project x -> (q, k, v) with head reshape and optional RoPE."""
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    B, S = x.shape[0], x.shape[1]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if rope_positions is not None:
+        q = apply_rope(q, rope_positions, cfg.rope_theta)
+        k = apply_rope(k, rope_positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k, q_per_kv: int):
+    """(B, S, kv, hd) -> (B, S, kv, qpk, hd) broadcast helper."""
+    return jnp.repeat(k, q_per_kv, axis=2) if q_per_kv > 1 else k
+
+
+def attend_full(q, k, v, qpos, kpos, window: int = 0, causal: bool = True):
+    """Plain softmax attention.  q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd).
+
+    qpos: (Sq,) or (B,Sq); kpos: (Sk,) or (B,Sk) absolute positions, -1=empty.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    qpk = H // KV
+    qh = q.reshape(B, Sq, KV, qpk, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qh, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    mask = _mask(qpos, kpos, window, causal)           # (B?, Sq, Sk)
+    scores = jnp.where(_bcast_mask(mask, scores.shape), scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _mask(qpos, kpos, window, causal):
+    qp = jnp.atleast_2d(qpos)[..., :, None]            # (B?, Sq, 1)
+    kp = jnp.atleast_2d(kpos)[..., None, :]            # (B?, 1, Sk)
+    m = kp >= 0
+    if causal:
+        m = m & (kp <= qp)
+    if window:
+        m = m & (kp > qp - window)
+    return m
+
+
+def _bcast_mask(mask, score_shape):
+    # mask (B?, Sq, Sk) -> (B, KV, qpk, Sq, Sk)
+    B, KV, qpk, Sq, Sk = score_shape
+    m = jnp.broadcast_to(mask, (B,) + mask.shape[-2:])
+    return m[:, None, None, :, :]
+
+
+def attend_chunked(q, k, v, qpos, kpos, window: int = 0, causal: bool = True,
+                   chunk: int = 1024):
+    """Online-softmax attention, scanning KV chunks (pure-XLA flash).
+
+    Memory: O(B·H·Sq·chunk) transient scores instead of O(Sq·Sk).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    if Sk % chunk != 0:
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos2 = jnp.atleast_2d(kpos)
+        kpos = jnp.pad(kpos2, ((0, 0), (0, pad)), constant_values=-1)
+        Sk += pad
+    n_chunks = Sk // chunk
+    qpk = H // KV
+    qh = q.reshape(B, Sq, KV, qpk, hd)
+    kc = k.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    kpos_b = jnp.broadcast_to(jnp.atleast_2d(kpos), (B, Sk))
+    kpc = kpos_b.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    acc0 = jnp.zeros((B, Sq, KV, qpk, hd), jnp.float32)
+    m0 = jnp.full((B, Sq, KV, qpk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, qpk), jnp.float32)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kj, vj, kpj = xs
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qh, kj,
+                       preferred_element_type=jnp.float32) / math.sqrt(hd)
+        msk = _mask(qpos, kpj, window, causal)          # (B, Sq, chunk)
+        s = jnp.where(msk[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqkgs,bskh->bqkgh", p.astype(vj.dtype), vj).astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    (acc, m, l), _ = lax.scan(body, (acc0, m0, l0), (kc, vc, kpc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attend_decode(q, k_cache, v_cache, t, kpos, window: int = 0):
+    """Single-token attention.  q: (B,1,H,hd); caches: (B,W,KV,hd);
+    t: scalar or (B,) current absolute position; kpos: (W,) or (B,W)."""
+    B, _, H, hd = q.shape
+    KV = k_cache.shape[2]
+    qpk = H // KV
+    # low-precision (e.g. f8) caches upcast at read — bandwidth is saved on
+    # the HBM side, compute stays in the matmul dtype
+    k_cache = k_cache.astype(q.dtype)
+    v_cache = v_cache.astype(q.dtype)
+    qh = q.reshape(B, KV, qpk, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    tq = jnp.asarray(t)
+    tq = tq[:, None] if tq.ndim == 1 else tq[None, None]     # (B,1) or (1,1)
+    kp = jnp.atleast_2d(kpos)                                  # (B?, W)
+    m = (kp >= 0) & (kp <= tq)
+    if window:
+        m = m & (kp > tq - window)
+    m = jnp.broadcast_to(m, (B, k_cache.shape[1]))
+    s = jnp.where(m[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def attend_chunked_2d(q, k, v, qpos, kpos, window: int = 0,
+                      causal: bool = True, qchunk: int = 512,
+                      kchunk: int = 1024, causal_skip: bool = True):
+    """Query-and-key chunked attention: ``lax.map`` over query chunks, each
+    running an online-softmax loop over KV chunks.  Peak transient memory is
+    O(B·H·qchunk·kchunk) — independent of S — which is what lets the 32k
+    shapes fit per-device HBM at compile time.
+
+    causal_skip (§Perf H4): the inner loop is a ``fori_loop`` whose bounds
+    are derived from the query chunk's position range, so KV chunks entirely
+    outside the causal/window band are never computed — halving prefill
+    attention FLOPs vs the masked-only variant (and matching the Pallas
+    kernel's pl.when tile skipping on real hardware)."""
+    B, Sq, H, hd = q.shape
+    if Sq % qchunk != 0:
+        return attend_chunked(q, k, v, qpos, kpos, window, causal,
+                              chunk=kchunk)
+    Sk, KV = k.shape[1], k.shape[2]
+    if Sk % kchunk != 0:
+        pad = kchunk - Sk % kchunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(jnp.atleast_2d(kpos), ((0, 0), (0, pad)),
+                       constant_values=-1)
+        Sk += pad
+    nq, nk = Sq // qchunk, Sk // kchunk
+    qpk = H // KV
+    qc = q.reshape(B, nq, qchunk, H, hd).swapaxes(0, 1)
+    qp = jnp.broadcast_to(jnp.atleast_2d(qpos), (B, Sq))
+    qpc = qp.reshape(B, nq, qchunk).swapaxes(0, 1)
+    kc = k.reshape(B, nk, kchunk, KV, hd).swapaxes(0, 1)
+    vc = v.reshape(B, nk, kchunk, KV, hd).swapaxes(0, 1)
+    kpos_b = jnp.broadcast_to(jnp.atleast_2d(kpos), (B, Sk))
+    kpc = kpos_b.reshape(B, nk, kchunk).swapaxes(0, 1)
+
+    def per_q(args):
+        qj, qpj = args                            # (B,qchunk,H,hd), (B,qchunk)
+        qh = qj.reshape(B, qchunk, KV, qpk, hd)
+        acc0 = jnp.zeros((B, qchunk, KV, qpk, hd), jnp.float32)
+        m0 = jnp.full((B, qchunk, KV, qpk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qchunk, KV, qpk), jnp.float32)
+
+        if causal_skip and causal:
+            # chunk index range actually visible from this query chunk
+            hi = (jnp.max(qpj) // kchunk + 1).astype(jnp.int32)
+            lo = ((jnp.maximum(jnp.min(qpj) - window + 1, 0) // kchunk)
+                  .astype(jnp.int32) if window
+                  else jnp.zeros((), jnp.int32))
+        else:
+            # python-int bounds => static trip count => reverse-mode AD works
+            hi, lo = nk, 0
+
+        def body(i, carry):
+            acc, m, l = carry
+            kj = lax.dynamic_index_in_dim(kc, i, 0, keepdims=False)
+            vj = lax.dynamic_index_in_dim(vc, i, 0, keepdims=False)
+            kpj = lax.dynamic_index_in_dim(kpc, i, 0, keepdims=False)
+            s = jnp.einsum("bqkgh,bskh->bqkgs", qh, kj,
+                           preferred_element_type=jnp.float32) \
+                / math.sqrt(hd)
+            msk = _mask(qpj, kpj, window, causal)
+            s = jnp.where(msk[:, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqkgs,bskh->bqkgh", p.astype(vj.dtype), vj
+            ).astype(jnp.float32)
+            return acc, m_new, l
+
+        acc, m, l = lax.fori_loop(lo, hi, body, (acc0, m0, l0))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.reshape(B, qchunk, H, hd).astype(q.dtype)
+
+    out = lax.map(per_q, (qc, qpc))              # (nq, B, qchunk, H, hd)
+    return out.swapaxes(0, 1).reshape(B, Sq, H, hd)
+
+
+def pick_attend(cfg, Sq, Sk, differentiable: bool = False):
+    """Choose the attention path by sequence size (compile-memory driven).
+
+    ``differentiable=True`` (training) avoids the dynamic-bound fori_loop of
+    the causal-skip path — reverse-mode AD requires static trip counts."""
+    if Sq >= 4096 and Sk >= 4096:
+        return partial(attend_chunked_2d, causal_skip=not differentiable,
+                       qchunk=cfg.attn_qchunk, kchunk=cfg.attn_kchunk)
+    if Sk >= 2048:
+        return partial(attend_chunked, chunk=cfg.attn_kchunk)
+    return attend_full
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg, d_ff: int | None = None, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2, k3, kn = nn.split_keys(key, 4)
+    p = {"w_up": nn.dense_init(k1, (d, ff)),
+         "w_down": nn.dense_init(k2, (ff, d)),
+         "norm": norm_init(kn, cfg, d)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = nn.dense_init(k3, (d, ff))
+    return p
+
+
+def mlp_apply(params, cfg, x):
+    up = x @ params["w_up"].astype(x.dtype)
+    if "w_gate" in params:
+        gate = x @ params["w_gate"].astype(x.dtype)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ params["w_down"].astype(x.dtype)

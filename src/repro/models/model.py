@@ -1,0 +1,407 @@
+"""CascadeModel — the unified early-exit model over all architecture families.
+
+The backbone is the per-layer kind sequence from blocks.layer_kinds(cfg),
+split into ``n_components`` segments at the cascade exit boundaries.  Within a
+segment, consecutive layers of the same kind form a *stage* executed with
+``lax.scan`` over stacked parameters (HLO size O(#stages), not O(#layers)).
+
+Exit heads (the paper's intermediate classifiers, adapted to LM heads) branch
+after every segment but the last; the final head is the standard
+norm + unembedding.  Each intermediate head is
+``norm → [enhancement MLP] → unembed`` where the enhancement implements the
+paper's classifier widening and the unembedding is shared with the final head
+by default (cascade.share_unembed).
+
+Public entry points:
+  init(key)                                      -> params
+  forward_train(params, tokens, extra)           -> (exit_logits, aux)
+  init_cache(batch, cache_len, dtype)            -> cache
+  prefill(params, tokens, cache, extra)          -> (exit_logits_last, cache)
+  decode_step(params, token, t, cache, extra)    -> (exit_logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.blocks import BLOCKS, layer_kinds
+from repro.models.layers import attn_init, mlp_init, norm_apply, norm_init
+from repro.utils import dtype_of
+
+
+def _runs(kinds: List[str]) -> List[Tuple[str, int]]:
+    runs = []
+    for k in kinds:
+        if runs and runs[-1][0] == k:
+            runs[-1][1] += 1
+        else:
+            runs.append([k, 1])
+    return [(k, n) for k, n in runs]
+
+
+class CascadeModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        kinds = layer_kinds(cfg)
+        assert len(kinds) == cfg.n_layers
+        self.segment_runs: List[List[Tuple[str, int]]] = []
+        for (start, end) in cfg.segments:
+            self.segment_runs.append(_runs(kinds[start:end]))
+        self.n_exits = cfg.cascade.n_components
+        self.param_dtype = dtype_of(cfg.dtype)
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = self.param_dtype
+        keys = iter(jax.random.split(key, 64))
+        p: Dict[str, Any] = {}
+        p["embed"] = nn.embed_init(next(keys), (cfg.vocab_size, cfg.d_model), dt)
+        if cfg.family == "audio" or cfg.rope_theta <= 0:
+            p["pos_embed"] = nn.embed_init(
+                next(keys), (cfg.max_seq_len, cfg.d_model), dt)
+        segs = []
+        for runs in self.segment_runs:
+            stages = []
+            for kind, n in runs:
+                block = BLOCKS[kind]
+                init_one = lambda k, _kind=kind: jax.tree_util.tree_map(
+                    lambda x: x.astype(
+                        dt if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype),
+                    BLOCKS[_kind].init(k, cfg))
+                stages.append(nn.stack_init(init_one, next(keys), n))
+            segs.append(stages)
+        p["segments"] = segs
+        if cfg.family == "hybrid":
+            ka, km = jax.random.split(next(keys))
+            shared = {"attn": attn_init(ka, cfg), "mlp": mlp_init(km, cfg)}
+            p["shared"] = jax.tree_util.tree_map(
+                lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating)
+                else x, shared)
+        if cfg.family == "audio":
+            p["encoder"] = self._init_encoder(next(keys))
+        # exit heads
+        exits = []
+        for m in range(self.n_exits - 1):
+            e: Dict[str, Any] = {"norm": norm_init(next(keys), cfg)}
+            if cfg.cascade.enhance_dim:
+                k1, k2 = jax.random.split(next(keys))
+                e["enh_w1"] = nn.dense_init(
+                    k1, (cfg.d_model, cfg.cascade.enhance_dim), dt)
+                e["enh_w2"] = nn.zeros_init(
+                    k2, (cfg.cascade.enhance_dim, cfg.d_model), dt)
+            if not cfg.cascade.share_unembed:
+                e["head"] = nn.dense_init(
+                    next(keys), (cfg.d_model, cfg.vocab_size), dt)
+            exits.append(e)
+        p["exits"] = exits
+        p["final_norm"] = norm_init(next(keys), cfg)
+        if not cfg.tie_embeddings:
+            p["lm_head"] = nn.dense_init(
+                next(keys), (cfg.d_model, cfg.vocab_size), dt)
+        return p
+
+    def _init_encoder(self, key):
+        cfg = self.cfg
+        dt = self.param_dtype
+        k1, k2, k3 = jax.random.split(key, 3)
+        enc_block = lambda k: jax.tree_util.tree_map(
+            lambda x: x.astype(dt) if jnp.issubdtype(x.dtype, jnp.floating)
+            else x, BLOCKS["enc"].init(k, cfg))
+        return {
+            "stages": nn.stack_init(enc_block, k1, cfg.encoder_layers),
+            "norm": norm_init(k2, cfg),
+            "pos_embed": nn.embed_init(k3, (cfg.n_audio_frames, cfg.d_model), dt),
+        }
+
+    # ------------------------------------------------------------------
+    # stages
+    # ------------------------------------------------------------------
+    def _unroll(self, stacked):
+        if not self.cfg.scan_unroll:
+            return 1
+        n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        return int(n)
+
+    def _run_stage(self, kind, stacked, h, ctx, stacked_cache, remat=False):
+        block = BLOCKS[kind]
+        has_cache = stacked_cache is not None
+
+        unroll = self._unroll(stacked)
+        if has_cache:
+            def body(h, xs):
+                pa, ca = xs
+                h2, c2, aux = block.apply(self.cfg, pa, h, ctx, ca)
+                return h2, (c2, aux)
+            h, (new_cache, auxs) = lax.scan(body, h, (stacked, stacked_cache),
+                                            unroll=unroll)
+            return h, new_cache, jnp.sum(auxs)
+        else:
+            def body(h, pa):
+                h2, _, aux = block.apply(self.cfg, pa, h, ctx, None)
+                return h2, aux
+            if remat:
+                if self.cfg.remat_policy == "dots":
+                    body_fn = jax.checkpoint(
+                        body, policy=jax.checkpoint_policies
+                        .dots_with_no_batch_dims_saveable)
+                else:
+                    body_fn = jax.checkpoint(body)
+            else:
+                body_fn = body
+            h, auxs = lax.scan(body_fn, h, stacked, unroll=unroll)
+            return h, None, jnp.sum(auxs)
+
+    def _run_segment(self, si, params, h, ctx, seg_cache, remat=False):
+        new_caches = []
+        aux = jnp.zeros((), jnp.float32)
+        for pi, (kind, n) in enumerate(self.segment_runs[si]):
+            cache_i = seg_cache[pi] if seg_cache is not None else None
+            h, nc, a = self._run_stage(kind, params["segments"][si][pi], h,
+                                       ctx, cache_i, remat)
+            new_caches.append(nc)
+            aux = aux + a
+        return h, (new_caches if seg_cache is not None else None), aux
+
+    def _backfill_segment(self, si, params, h, ctx, seg_cache):
+        """Cheap path: update caches of segment si from the exit hidden state
+        without computing the segment output (cascade state backfill)."""
+        new_caches = []
+        for pi, (kind, n) in enumerate(self.segment_runs[si]):
+            block = BLOCKS[kind]
+            stacked = params["segments"][si][pi]
+            cache_i = seg_cache[pi]
+
+            def body(h_const, xs):
+                pa, ca = xs
+                c2 = block.backfill(self.cfg, pa, h_const, ctx, ca)
+                return h_const, c2
+            _, nc = lax.scan(body, h, (stacked, cache_i),
+                             unroll=self._unroll(stacked))
+            new_caches.append(nc)
+        return new_caches
+
+    # ------------------------------------------------------------------
+    # heads
+    # ------------------------------------------------------------------
+    def _unembed(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["lm_head"]
+
+    def exit_logits(self, params, m: int, h):
+        """Exit head m (m < n_exits-1: intermediate; else final)."""
+        cfg = self.cfg
+        if m >= self.n_exits - 1:
+            x = norm_apply(params["final_norm"], cfg, h)
+            return x @ self._unembed(params).astype(x.dtype)
+        e = params["exits"][m]
+        x = norm_apply(e["norm"], cfg, h)
+        if "enh_w1" in e:
+            x = x + jax.nn.gelu(x @ e["enh_w1"].astype(x.dtype)) \
+                @ e["enh_w2"].astype(x.dtype)
+        head = e["head"] if "head" in e else self._unembed(params)
+        return x @ head.astype(x.dtype)
+
+    # ------------------------------------------------------------------
+    # embedding & extras
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens, positions=None):
+        h = params["embed"][tokens]
+        if "pos_embed" in params:
+            if positions is None:
+                positions = jnp.arange(tokens.shape[1])
+            h = h + params["pos_embed"][positions]
+        return h
+
+    def _encode_audio(self, params, audio_embeds):
+        """Whisper encoder over stubbed frame embeddings (B, T, d)."""
+        cfg = self.cfg
+        enc = params["encoder"]
+        h = audio_embeds.astype(self.param_dtype) + enc["pos_embed"][None]
+        ctx = {"mode": "full", "positions": jnp.arange(h.shape[1]),
+               "write_slots": None, "cross": None, "shared": None}
+        def body(h, pa):
+            h2, _, _ = BLOCKS["enc"].apply(cfg, pa, h, ctx, None)
+            return h2, ()
+        h, _ = lax.scan(body, h, enc["stages"])
+        return norm_apply(enc["norm"], cfg, h)
+
+    def _make_cross(self, params, extra, mode):
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            return extra["image_embeds"].astype(self.param_dtype)
+        if cfg.family == "audio":
+            if mode == "decode":
+                return None  # decode uses the cross K/V cache
+            return self._encode_audio(params, extra["audio_embeds"])
+        return None
+
+    # ------------------------------------------------------------------
+    # training / full-sequence forward
+    # ------------------------------------------------------------------
+    def forward_train(self, params, tokens, extra=None):
+        """tokens: (B, S).  Returns ([exit logits (B,S,V)] * n_exits, aux)."""
+        cfg = self.cfg
+        S = tokens.shape[1]
+        positions = jnp.arange(S)
+        h = self._embed(params, tokens, positions)
+        ctx = {"mode": "full", "positions": positions, "write_slots": None,
+               "cross": self._make_cross(params, extra or {}, "full"),
+               "shared": params.get("shared"), "kpos": None}
+        logits, aux = [], jnp.zeros((), jnp.float32)
+        stride = max(1, cfg.cascade.exit_loss_stride)
+        for si in range(self.n_exits):
+            h, _, a = self._run_segment(si, params, h, ctx, None,
+                                        remat=cfg.remat)
+            aux = aux + a
+            if si < self.n_exits - 1:
+                logits.append(self.exit_logits(params, si, h[:, ::stride]))
+        logits.append(self.exit_logits(params, self.n_exits - 1, h))
+        return logits, aux
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def cache_capacity(self, cache_len: int) -> int:
+        w = self.cfg.attn_window
+        return min(w, cache_len) if w else cache_len
+
+    def init_cache(self, batch: int, cache_len: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or self.param_dtype
+        W = self.cache_capacity(cache_len)
+        segs = []
+        for si, runs in enumerate(self.segment_runs):
+            stages = []
+            for kind, n in runs:
+                one = BLOCKS[kind].init_cache(cfg, batch, W, dtype)
+                stacked = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, (n,) + x.shape), one)
+                stages.append(stacked)
+            segs.append(stages)
+        return {"kpos": jnp.full((W,), -1, jnp.int32), "segments": segs}
+
+    # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+    def prefill(self, params, tokens, cache, extra=None):
+        """Full-sequence forward writing KV/state caches.
+
+        Returns ([exit logits at last position (B,V)] * n_exits, new cache).
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        W = cache["kpos"].shape[0]
+        positions = jnp.arange(S)
+        # per-slot gather index == the absolute position held by the slot
+        write_slots = jnp.asarray(_prefill_kpos(S, W))
+        h = self._embed(params, tokens, positions)
+        ctx = {"mode": "full", "positions": positions,
+               "write_slots": write_slots,
+               "cross": self._make_cross(params, extra or {}, "full"),
+               "shared": params.get("shared"), "kpos": cache["kpos"]}
+        logits = []
+        new_segs = []
+        for si in range(self.n_exits):
+            h, nc, _ = self._run_segment(si, params, h, ctx,
+                                         cache["segments"][si])
+            new_segs.append(nc)
+            logits.append(self.exit_logits(params, si, h[:, -1:, :])[:, 0, :])
+        kpos = jnp.asarray(_prefill_kpos(S, W))
+        return logits, {"kpos": kpos, "segments": new_segs}
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def decode_step(self, params, token, t, cache, extra=None):
+        """One decode step.  token: (B,1) int32; t: scalar int32 position.
+
+        Returns (exit_logits: list of (B,V), new cache).  Execution honours
+        cfg.cascade.exit_mode:
+          select     — always run everything (fixed graph; roofline shape)
+          cond_batch — lax.cond skips deeper segments when every sequence
+                       already exited (caches kept coherent via backfill).
+        """
+        cfg = self.cfg
+        W = cache["kpos"].shape[0]
+        slot = jnp.asarray(t, jnp.int32) % W
+        h = self._embed(params, token,
+                        jnp.asarray(t, jnp.int32)[None] if "pos_embed" in params
+                        else None)
+        ctx = {"mode": "decode", "t": jnp.asarray(t, jnp.int32), "slot": slot,
+               "kpos": cache["kpos"], "positions": None, "write_slots": None,
+               "cross": self._make_cross(params, extra or {}, "decode"),
+               "shared": params.get("shared")}
+        thresholds = cfg.cascade.thresholds
+        logits: List[jnp.ndarray] = []
+        new_segs: List[Any] = []
+        # segment 0 always runs
+        h, nc, _ = self._run_segment(0, params, h, ctx, cache["segments"][0])
+        new_segs.append(nc)
+        logits.append(self.exit_logits(params, 0, h)[:, 0, :])
+        done = None
+        for si in range(1, self.n_exits):
+            seg_cache = cache["segments"][si]
+            if cfg.cascade.exit_mode == "cond_batch":
+                conf = _softmax_conf(logits[-1])
+                newly_done = conf >= thresholds[si - 1]
+                done = newly_done if done is None else (done | newly_done)
+                all_done = jnp.all(done)
+
+                def full_path(h, seg_cache):
+                    return self._run_segment(si, params, h, ctx, seg_cache)[:2]
+
+                def skip_path(h, seg_cache):
+                    if cfg.cascade.state_backfill:
+                        return h, self._backfill_segment(
+                            si, params, h, ctx, seg_cache)
+                    return h, seg_cache
+
+                h, nc = lax.cond(all_done, skip_path, full_path, h, seg_cache)
+            else:
+                h, nc, _ = self._run_segment(si, params, h, ctx, seg_cache)
+            new_segs.append(nc)
+            logits.append(self.exit_logits(params, si, h)[:, 0, :])
+        kpos = cache["kpos"].at[slot].set(jnp.asarray(t, jnp.int32))
+        return logits, {"kpos": kpos, "segments": new_segs}
+
+
+def _softmax_conf(logits):
+    """δ = max softmax (Def. 3.3) computed stably without full softmax."""
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1)
+    lse = m + jnp.log(jnp.sum(jnp.exp(x - m[..., None]), axis=-1))
+    return jnp.exp(m - lse)
+
+
+def _prefill_kpos(S: int, W: int) -> np.ndarray:
+    s = np.arange(W)
+    if S >= W:
+        kpos = S - 1 - ((S - 1 - s) % W)
+    else:
+        kpos = np.where(s < S, s, -1)
+    return kpos.astype(np.int32)
+
+
+def build_model(cfg: ModelConfig) -> CascadeModel:
+    return CascadeModel(cfg)
+
+
+def extra_input_shapes(cfg: ModelConfig, batch: int):
+    """Shapes of the stubbed modality-frontend inputs, if any."""
+    if cfg.family == "vlm":
+        return {"image_embeds": (batch, cfg.n_image_tokens, cfg.d_model)}
+    if cfg.family == "audio":
+        return {"audio_embeds": (batch, cfg.n_audio_frames, cfg.d_model)}
+    return {}

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based GShard dispatch.
+
+The einsum dispatch/combine formulation is the TPU-native mapping of the MoE
+all-to-all: with expert weights sharded over the ``model`` mesh axis
+(expert-parallel), XLA lowers the (token, expert, capacity) einsums to the
+dispatch collectives.  When ``n_experts`` does not divide the model axis
+(mixtral: 8 experts on a 16-way axis) the config falls back to tensor-parallel
+expert FFNs (``d_ff`` sharding) — decided in launch/shard_rules.py.
+
+Router load-balance auxiliary loss follows Switch/GShard:
+``aux = E * Σ_e f_e · p_e`` with f = fraction of tokens dispatched to e and
+p = mean router probability of e.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import nn
+from repro.models.layers import norm_init
+
+
+def moe_init(key, cfg):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, kg, ku, kd, kn = nn.split_keys(key, 5)
+    return {
+        "router": nn.dense_init(kr, (d, E)),
+        "w_gate": nn.dense_init(kg, (E, d, ff)),
+        "w_up": nn.dense_init(ku, (E, d, ff)),
+        "w_down": nn.dense_init(kd, (E, ff, d)),
+        "norm": norm_init(kn, cfg, d),
+    }
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int,
+             capacity_factor: float) -> int:
+    c = int(math.ceil(top_k * n_tokens / n_experts * capacity_factor))
+    return max(4, c)
+
+
+def route_topk(router_logits, top_k: int, cap: int):
+    """Compute dispatch/combine tensors.
+
+    router_logits: (T, E).  Returns (dispatch (T,E,C) bool-ish float,
+    combine (T,E,C) float, aux_loss scalar).
+    """
+    T, E = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, top_k)          # (T, k)
+    # renormalize the chosen gates (mixtral-style)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # expert one-hots per slot: (k, T, E)
+    onehots = jax.nn.one_hot(gate_idx.T, E, dtype=jnp.float32)
+    # position of each (slot, token) within its expert queue: earlier slots
+    # get priority, then token order.
+    flat = onehots.reshape(top_k * T, E)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat        # (k*T, E)
+    pos = jnp.sum(flat * pos_in_expert, axis=-1)           # (k*T,)
+    keep = (pos < cap) & (jnp.sum(flat, -1) > 0)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[:, None]
+    # dispatch (k*T, E, C) -> (T, E, C) summing slots
+    disp = (flat[:, :, None] * pos_oh[:, None, :]).reshape(top_k, T, E, cap)
+    dispatch = jnp.sum(disp, axis=0)
+    gates_flat = gate_vals.T.reshape(top_k * T)            # (k*T,)
+    comb = disp * gates_flat.reshape(top_k, T, 1, 1)
+    combine = jnp.sum(comb, axis=0)
+
+    # load-balance aux loss
+    frac_dispatch = jnp.mean(jnp.sum(onehots, axis=0), axis=0)  # (E,)
+    frac_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_dispatch * frac_prob)
+    return dispatch, combine, aux
+
+
+GROUP_TOKENS = 4096  # routing-group size: bounds the (Tg, E, C) dispatch
+
+
+def moe_apply(params, cfg, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Tokens are routed in *groups* of <= GROUP_TOKENS (the GShard/t5x layout):
+    the dispatch one-hot is (G, Tg, E, C) with per-group capacity, so its size
+    is linear — not quadratic — in total tokens.  On the mesh, G is sharded
+    over the data axis and E over the model axis (expert parallelism); the
+    dispatch/combine einsums are where XLA inserts the MoE all-to-alls.
+    """
+    B, S, d = x.shape
+    T = B * S
+    Tg = min(GROUP_TOKENS, T)
+    pad = (-T) % Tg
+    xt = x.reshape(T, d)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    G = xt.shape[0] // Tg
+    xg = xt.reshape(G, Tg, d)
+    logits = jnp.einsum("gtd,de->gte", xg, params["router"].astype(x.dtype))
+    cap = capacity(Tg, cfg.n_experts, cfg.top_k, cfg.capacity_factor)
+    dispatch, combine, aux = jax.vmap(
+        lambda lg: route_topk(lg, cfg.top_k, cap))(logits)  # (G,Tg,E,C)
+
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)
+    up = jnp.einsum("gecd,edf->gecf", expert_in,
+                    params["w_up"].astype(x.dtype))
+    if cfg.act == "swiglu":
+        gate = jnp.einsum("gecd,edf->gecf", expert_in,
+                          params["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    expert_out = jnp.einsum("gecf,efd->gecd", h,
+                            params["w_down"].astype(x.dtype))
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), expert_out)
+    out = out.reshape(-1, d)
+    if pad:
+        out = out[:T]
+    return out.reshape(B, S, d), jnp.mean(aux).astype(jnp.float32)

@@ -1,0 +1,44 @@
+"""Parameter-initialization helpers (flax is unavailable; pure pytrees)."""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, dtype=jnp.float32, scale: float | None = None):
+    """He/Lecun style fan-in init: N(0, sqrt(scale / fan_in)).
+
+    The paper initializes from N(0, sqrt(2/k)) with k = fan-in [HZRS15b];
+    ``scale`` defaults to 1.0 (lecun) for transformer weights and callers pass
+    2.0 for ReLU conv stacks.
+    """
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = math.sqrt((scale if scale is not None else 1.0) / max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def stack_init(init_fn, key, n: int):
+    """Initialize ``n`` identical blocks and stack each leaf on axis 0."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)

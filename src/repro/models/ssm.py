@@ -1,0 +1,213 @@
+"""Mamba2 (SSD — state-space duality) block, in the chunked TPU-friendly form.
+
+Full-sequence forward uses the chunked SSD algorithm: within-chunk quadratic
+attention-like einsums (MXU-aligned) + a ``lax.scan`` over chunks carrying the
+(heads, head_dim, state) recurrent state.  Decode is the single-step
+recurrence.  ngroups = 1 (B/C shared across heads), as in the Mamba2 paper's
+default.
+
+Cache layout (per layer): ``conv`` (B, conv_w-1, conv_ch) rolling input
+window, ``state`` (B, n_heads, head_dim, ssm_state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import nn
+from repro.models.layers import norm_init, rmsnorm
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_ch = d_inner + 2 * cfg.ssm_state  # x, B, C share the conv
+    return d_inner, n_heads, conv_ch
+
+
+def ssm_init(key, cfg):
+    d = cfg.d_model
+    d_inner, n_heads, conv_ch = dims(cfg)
+    kin, kconv, kdt, kA, kout, kn, kng = nn.split_keys(key, 7)
+    in_dim = 2 * d_inner + 2 * cfg.ssm_state + n_heads  # z, x, B, C, dt
+    return {
+        "in_proj": nn.dense_init(kin, (d, in_dim)),
+        "conv_w": (jax.random.normal(kconv, (cfg.ssm_conv, conv_ch))
+                   * (1.0 / math.sqrt(cfg.ssm_conv))).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(kdt, (n_heads,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "out_proj": nn.dense_init(kout, (d_inner, d)),
+        "norm": norm_init(kn, cfg, d),
+        "gate_norm_w": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def _split_in(cfg, zxbcdt):
+    d_inner, n_heads, _ = dims(cfg)
+    n = cfg.ssm_state
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n:]
+    return z, xBC, dt
+
+
+def _causal_conv_full(xBC, conv_w, conv_b, conv_cache=None):
+    """Depthwise causal conv over the sequence dim.  xBC: (B, S, C)."""
+    W = conv_w.shape[0]
+    if conv_cache is None:
+        pad = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = conv_cache.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)           # (B, S+W-1, C)
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(W):
+        out = out + conv_w[i].astype(jnp.float32) * xp[
+            :, i:i + xBC.shape[1]].astype(jnp.float32)
+    out = out + conv_b
+    new_cache = xp[:, -(W - 1):] if W > 1 else xp[:, :0]
+    return jax.nn.silu(out).astype(xBC.dtype), new_cache
+
+
+def ssd_chunked(x, dt, A, Bmat, Cmat, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+
+    x: (B, S, h, p) — already the conv'd input path;
+    dt: (B, S, h) — softplus'd;  A: (h,) negative;
+    Bmat, Cmat: (B, S, n) (ngroups=1).
+    Returns (y (B,S,h,p), final_state (B,h,p,n)).
+    """
+    Bsz, S, h, p = x.shape
+    n = Bmat.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xd = (x * dt[..., None]).astype(jnp.float32)        # dt-scaled input
+    dA = (dt * A).astype(jnp.float32)                   # (B,S,h), negative
+
+    def r(t):  # (B, S, ...) -> (nc, B, chunk, ...)
+        return t.reshape(Bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dAc = r(xd), r(dA)
+    Bc, Cc = r(Bmat.astype(jnp.float32)), r(Cmat.astype(jnp.float32))
+
+    def body(state, xs):
+        xj, dAj, Bj, Cj = xs                            # (B,chunk,...)
+        a = jnp.cumsum(dAj, axis=1)                     # (B,Q,h) within-chunk
+        # intra-chunk: L[t,s] = exp(a_t - a_s) for s<=t.  Mask BEFORE exp:
+        # the upper triangle holds large positive values (a is decreasing),
+        # and where(mask, exp(inf), 0) propagates NaN through the backward.
+        seg = a[:, :, None, :] - a[:, None, :, :]       # (B,Q,Q,h)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        seg = jnp.where(tri[None, :, :, None], seg, -jnp.inf)
+        L = jnp.exp(seg)
+        G = jnp.einsum("btn,bsn->bts", Cj, Bj)          # (B,Q,Q)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp", G, L, xj)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(a)                           # (B,Q,h)
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", Cj, state, decay_in)
+        # state update: state' = exp(sum dA) * state + sum_s exp(a_Q - a_s) B_s x_s
+        tot = a[:, -1:, :]                              # (B,1,h)
+        decay_state = jnp.exp(tot - a)                  # (B,Q,h)
+        chunk_state = jnp.einsum("bsn,bsh,bshp->bhpn", Bj, decay_state, xj)
+        state = jnp.exp(tot[:, 0, :])[:, :, None, None] * state + chunk_state
+        return state, y_intra + y_inter
+
+    state0 = (jnp.zeros((Bsz, h, p, n), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+    final_state, yc = lax.scan(body, state0, (xc, dAc, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(Bsz, S, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssm_forward_full(params, cfg, x, cache=None):
+    """Full-sequence Mamba2 sublayer (residual + norm handled by caller).
+
+    Returns (y (B,S,d), new_cache) — cache carries conv window + SSD state.
+    """
+    d_inner, n_heads, conv_ch = dims(cfg)
+    p = cfg.ssm_head_dim
+    B_, S, _ = x.shape
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z, xBC, dt_pre = _split_in(cfg, zxbcdt)
+    conv_cache = cache["conv"] if cache is not None else None
+    xBC, new_conv = _causal_conv_full(xBC, params["conv_w"], params["conv_b"],
+                                      conv_cache)
+    xin = xBC[..., :d_inner].reshape(B_, S, n_heads, p)
+    Bmat = xBC[..., d_inner:d_inner + cfg.ssm_state]
+    Cmat = xBC[..., d_inner + cfg.ssm_state:]
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                         + params["dt_bias"])           # (B,S,h)
+    A = -jnp.exp(params["A_log"])                       # (h,)
+    init_state = cache["state"] if cache is not None else None
+    chunk = min(cfg.ssm_chunk, S)
+    if S % chunk:  # pad to chunk multiple (masked by dt=0 ⇒ identity updates)
+        pad = chunk - S % chunk
+        xin = jnp.pad(xin, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        y, state = ssd_chunked(xin, dt, A, Bmat, Cmat, chunk, init_state)
+        y = y[:, :S]
+    else:
+        y, state = ssd_chunked(xin, dt, A, Bmat, Cmat, chunk, init_state)
+    y = y + params["D"].astype(y.dtype)[:, None] * xin[:, :S]
+    y = y.reshape(B_, S, d_inner)
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    y = rmsnorm(y * jax.nn.silu(z), params["gate_norm_w"].astype(y.dtype),
+                cfg.norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "state": state.astype(cache["state"].dtype)}
+    return out, new_cache
+
+
+def ssm_decode_step(params, cfg, x, cache):
+    """Single-token recurrence.  x: (B, 1, d)."""
+    d_inner, n_heads, conv_ch = dims(cfg)
+    p = cfg.ssm_head_dim
+    B_ = x.shape[0]
+    zxbcdt = x[:, 0] @ params["in_proj"].astype(x.dtype)
+    z, xBC, dt_pre = _split_in(cfg, zxbcdt)
+    # conv: rolling window
+    window = jnp.concatenate([cache["conv"].astype(x.dtype),
+                              xBC[:, None, :]], axis=1)   # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          params["conv_w"]) + params["conv_b"]
+    xBC = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = window[:, 1:]
+    xin = xBC[..., :d_inner].reshape(B_, n_heads, p)
+    Bmat = xBC[..., d_inner:d_inner + cfg.ssm_state].astype(jnp.float32)
+    Cmat = xBC[..., d_inner + cfg.ssm_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                  # (B,h)
+    state = cache["state"].astype(jnp.float32)
+    dBx = jnp.einsum("bh,bhp,bn->bhpn", dt, xin.astype(jnp.float32), Bmat)
+    state = state * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cmat, state)
+    y = y + params["D"][:, None] * xin.astype(jnp.float32)
+    y = y.reshape(B_, d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["gate_norm_w"].astype(y.dtype),
+                cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(x.dtype))[:, None, :]
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "state": state.astype(cache["state"].dtype)}
+
+
+def ssm_init_cache(cfg, batch: int, dtype):
+    d_inner, n_heads, conv_ch = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32),
+    }

@@ -1,0 +1,308 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallel/chunked)
+and sLSTM (scalar memory, sequential scan).
+
+mLSTM full-sequence forward uses a *chunkwise* formulation (the TPU
+adaptation): within-chunk quadratic einsums + a ``lax.scan`` carrying the
+stabilized (C, n, m) state across chunks.  This is exact (validated against
+the sequential recurrence in tests) and keeps memory O(S·chunk) so the 32k
+shapes compile.
+
+Recurrences (stabilized, per head; q scaled by 1/sqrt(p)):
+    m_t = max(f̃_t + m_{t-1}, ĩ_t)
+    C_t = e^{f̃_t + m_{t-1} - m_t} C_{t-1} + e^{ĩ_t - m_t} k_t v_tᵀ
+    n_t = e^{f̃_t + m_{t-1} - m_t} n_{t-1} + e^{ĩ_t - m_t} k_t
+    h_t = (q_tᵀ C_t) / max(|q_tᵀ n_t|, e^{-m_t})
+
+Cache layout (mLSTM): C (B,h,p,p) f32, n (B,h,p) f32, m (B,h) f32, plus the
+conv rolling window.  sLSTM cache: (c, n, m, h) each (B, d_inner).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import nn
+from repro.models.layers import norm_init, rmsnorm
+
+CONV_W = 4
+
+
+def mlstm_dims(cfg):
+    d_inner = 2 * cfg.d_model          # pre-up-projection factor 2
+    n_heads = cfg.n_heads
+    p = d_inner // n_heads
+    return d_inner, n_heads, p
+
+
+def mlstm_init(key, cfg):
+    d = cfg.d_model
+    d_inner, h, p = mlstm_dims(cfg)
+    ku, kq, kk, kv, ki, kf, ko, kc, kn, ks = nn.split_keys(key, 10)
+    return {
+        "up_proj": nn.dense_init(ku, (d, 2 * d_inner)),   # -> (u, z)
+        "conv_w": (jax.random.normal(kc, (CONV_W, d_inner))
+                   / math.sqrt(CONV_W)).astype(jnp.float32),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "wq": nn.dense_init(kq, (d_inner, d_inner)),
+        "wk": nn.dense_init(kk, (d_inner, d_inner)),
+        "wv": nn.dense_init(kv, (d_inner, d_inner)),
+        "w_i": nn.dense_init(ki, (d_inner, h)),
+        "w_f": nn.dense_init(kf, (d_inner, h)),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # forget-gate bias init
+        "out_norm_w": jnp.ones((d_inner,), jnp.float32),
+        "down_proj": nn.dense_init(ko, (d_inner, d)),
+        "norm": norm_init(kn, cfg, d),
+    }
+
+
+def _mlstm_qkvif(params, cfg, u, conv_cache=None):
+    """u: (B,S,d_inner) -> q,k,v (B,S,h,p), i,f pre-activations (B,S,h)."""
+    d_inner, h, p = mlstm_dims(cfg)
+    B, S, _ = u.shape
+    W = CONV_W
+    if conv_cache is None:
+        padc = jnp.zeros((B, W - 1, d_inner), u.dtype)
+    else:
+        padc = conv_cache.astype(u.dtype)
+    up = jnp.concatenate([padc, u], axis=1)
+    c = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(W):
+        c = c + params["conv_w"][i] * up[:, i:i + S].astype(jnp.float32)
+    c = jax.nn.silu(c + params["conv_b"]).astype(u.dtype)
+    new_conv = up[:, -(W - 1):]
+    q = (c @ params["wq"].astype(u.dtype)).reshape(B, S, h, p)
+    k = (c @ params["wk"].astype(u.dtype)).reshape(B, S, h, p)
+    v = (u @ params["wv"].astype(u.dtype)).reshape(B, S, h, p)
+    i_pre = (c.astype(jnp.float32) @ params["w_i"]) + params["b_i"]
+    f_pre = (c.astype(jnp.float32) @ params["w_f"]) + params["b_f"]
+    return q, k, v, i_pre, f_pre, new_conv
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int, init=None):
+    """Chunkwise stabilized mLSTM.  q,k,v: (B,S,h,p); i,f: (B,S,h) f32.
+
+    Returns (hidden (B,S,h,p), (C,n,m) final)."""
+    B, S, h, p = q.shape
+    assert S % chunk == 0
+    nc = S // chunk
+    scale = 1.0 / math.sqrt(p)
+    logf = jax.nn.log_sigmoid(f_pre)                        # (B,S,h)
+
+    def r(t):
+        return t.reshape(B, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = r(q.astype(jnp.float32) * scale), r(k.astype(jnp.float32)), \
+        r(v.astype(jnp.float32))
+    ic, fc = r(i_pre), r(logf)
+
+    if init is None:
+        C0 = jnp.zeros((B, h, p, p), jnp.float32)
+        n0 = jnp.zeros((B, h, p), jnp.float32)
+        m0 = jnp.full((B, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = init
+
+    def body(carry, xs):
+        C, n, m = carry
+        qj, kj, vj, ij, fj = xs                             # (B,Q,...)
+        b = jnp.cumsum(fj, axis=1)                          # (B,Q,h)
+        # per-step stabilizer: m_t = max(m_prev + b_t, max_{s<=t}(b_t - b_s + i_s))
+        g = b[:, :, None, :] - b[:, None, :, :] + ij[:, None, :, :]  # (B,t,s,h)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        g = jnp.where(tri[None, :, :, None], g, -jnp.inf)
+        m_intra = jnp.max(g, axis=2)                        # (B,Q,h)
+        m_t = jnp.maximum(m[:, None, :] + b, m_intra)       # (B,Q,h)
+        # intra-chunk attention-like term
+        D = jnp.exp(g - m_t[:, :, None, :])                 # (B,t,s,h)
+        A = jnp.einsum("bthp,bshp->btsh", qj, kj) * D
+        intra = jnp.einsum("btsh,bshp->bthp", A, vj)
+        n_intra = jnp.einsum("btsh,bshp->bthp", D, kj * 1.0)  # Σ weights·k
+        # inter-chunk from carried state
+        w_prev = jnp.exp(m[:, None, :] + b - m_t)           # (B,Q,h)
+        inter = jnp.einsum("bthp,bhpd,bth->bthd", qj, C, w_prev)
+        qn_inter = jnp.einsum("bhp,bth->bthp", n, w_prev)
+        hidden_num = intra + inter
+        n_vec = n_intra + qn_inter                          # (B,t,h,p)
+        qn = jnp.einsum("bthp,bthp->bth", qj, n_vec)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        hidden = hidden_num / denom[..., None]
+        # carry update to end of chunk
+        b_last = b[:, -1, :]                                # (B,h)
+        m_new = m_t[:, -1, :]
+        wC = jnp.exp(m + b_last - m_new)                    # (B,h)
+        s_w = jnp.exp(b_last[:, None, :] - b + ij - m_new[:, None, :])  # (B,s,h)
+        C_new = wC[:, :, None, None] * C + jnp.einsum(
+            "bsh,bshp,bshd->bhpd", s_w, kj, vj)
+        n_new = wC[:, :, None] * n + jnp.einsum("bsh,bshp->bhp", s_w, kj)
+        return (C_new, n_new, m_new), hidden
+
+    (C, n, m), hid = lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    hidden = hid.swapaxes(0, 1).reshape(B, S, h, p)
+    return hidden.astype(q.dtype), (C, n, m)
+
+
+def mlstm_forward_full(params, cfg, x, cache=None):
+    d_inner, h, p = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    uz = x @ params["up_proj"].astype(x.dtype)
+    u, z = uz[..., :d_inner], uz[..., d_inner:]
+    conv_cache = cache["conv"] if cache is not None else None
+    q, k, v, i_pre, f_pre, new_conv = _mlstm_qkvif(params, cfg, u, conv_cache)
+    init = ((cache["C"], cache["n"], cache["m"]) if cache is not None else None)
+    chunk = min(256, S)
+    if S % chunk:
+        pad = chunk - S % chunk
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)   # i=-inf ⇒ no state write
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=1e3)     # f=1 ⇒ identity decay
+        hid, (C, n_, m_) = mlstm_chunked(q, k, v, i_pre, f_pre, chunk, init)
+        hid = hid[:, :S]
+    else:
+        hid, (C, n_, m_) = mlstm_chunked(q, k, v, i_pre, f_pre, chunk, init)
+    hid = hid.reshape(B, S, d_inner)
+    hid = rmsnorm(hid, params["out_norm_w"].astype(hid.dtype), cfg.norm_eps)
+    out = (hid * jax.nn.silu(z)) @ params["down_proj"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "C": C, "n": n_, "m": m_}
+    return out, new_cache
+
+
+def mlstm_decode_step(params, cfg, x, cache):
+    """x: (B,1,d) single-token recurrent update."""
+    d_inner, h, p = mlstm_dims(cfg)
+    B = x.shape[0]
+    uz = x[:, 0] @ params["up_proj"].astype(x.dtype)
+    u, z = uz[..., :d_inner], uz[..., d_inner:]
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), u[:, None, :]],
+                             axis=1)
+    c = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), params["conv_w"])
+    c = jax.nn.silu(c + params["conv_b"]).astype(x.dtype)
+    new_conv = window[:, 1:]
+    scale = 1.0 / math.sqrt(p)
+    q = (c @ params["wq"].astype(x.dtype)).reshape(B, h, p).astype(jnp.float32) * scale
+    k = (c @ params["wk"].astype(x.dtype)).reshape(B, h, p).astype(jnp.float32)
+    v = (u @ params["wv"].astype(x.dtype)).reshape(B, h, p).astype(jnp.float32)
+    i_pre = c.astype(jnp.float32) @ params["w_i"] + params["b_i"]   # (B,h)
+    f_pre = c.astype(jnp.float32) @ params["w_f"] + params["b_f"]
+    logf = jax.nn.log_sigmoid(f_pre)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(logf + m, i_pre)
+    wf = jnp.exp(logf + m - m_new)[:, :, None]
+    wi = jnp.exp(i_pre - m_new)[:, :, None]
+    C = wf[..., None] * C + wi[..., None] * jnp.einsum("bhp,bhd->bhpd", k, v)
+    n = wf * n + wi * k
+    hid_num = jnp.einsum("bhp,bhpd->bhd", q, C)
+    qn = jnp.einsum("bhp,bhp->bh", q, n)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    hid = (hid_num / denom[..., None]).reshape(B, d_inner).astype(x.dtype)
+    hid = rmsnorm(hid, params["out_norm_w"].astype(hid.dtype), cfg.norm_eps)
+    out = ((hid * jax.nn.silu(z)) @ params["down_proj"].astype(x.dtype))[:, None]
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "C": C, "n": n, "m": m_new}
+
+
+def mlstm_init_cache(cfg, batch: int, dtype):
+    d_inner, h, p = mlstm_dims(cfg)
+    return {"conv": jnp.zeros((batch, CONV_W - 1, d_inner), dtype),
+            "C": jnp.zeros((batch, h, p, p), jnp.float32),
+            "n": jnp.zeros((batch, h, p), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg):
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    kw, kr, kup, kdn, kn = nn.split_keys(key, 5)
+    return {
+        # fused input projections for (z, i, f, o)
+        "w_in": nn.dense_init(kw, (d, 4 * d)),
+        # head-wise recurrent matrices for (z, i, f, o): (4, h, p, p)
+        "r": (jax.random.normal(kr, (4, h, p, p), jnp.float32)
+              / math.sqrt(p)),
+        "b": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                              jnp.full((d,), 3.0, jnp.float32),
+                              jnp.zeros((d,), jnp.float32)]),
+        # post-up-projection MLP (factor 4/3, GeLU) per the xLSTM paper
+        "w_up": nn.dense_init(kup, (d, (4 * d) // 3)),
+        "w_dn": nn.dense_init(kdn, ((4 * d) // 3, d)),
+        "norm": norm_init(kn, cfg, d),
+    }
+
+
+def _slstm_cell(params, cfg, xt, state):
+    """One timestep.  xt: (B, 4d) preprojected input; state: dict of (B,d)."""
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    B = xt.shape[0]
+    c, n, m, hprev = state["c"], state["n"], state["m"], state["h"]
+    hh = hprev.reshape(B, h, p)
+    rec = jnp.einsum("bhp,khpq->kbhq", hh, params["r"]).reshape(4, B, d)
+    xt4 = xt.reshape(B, 4, d).transpose(1, 0, 2)            # (4,B,d)
+    pre = xt4 + rec + params["b"].reshape(4, d)[:, None, :]
+    z_pre, i_pre, f_pre, o_pre = pre[0], pre[1], pre[2], pre[3]
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_ = jnp.exp(i_pre - m_new)
+    f_ = jnp.exp(logf + m - m_new)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_forward_full(params, cfg, x, cache=None):
+    B, S, d = x.shape
+    xt = (x @ params["w_in"].astype(x.dtype)).astype(jnp.float32)
+    state = cache["state"] if cache is not None else slstm_zero_state(cfg, B)
+
+    def body(st, xt_t):
+        st = _slstm_cell(params, cfg, xt_t, st)
+        return st, st["h"]
+
+    state, hs = lax.scan(body, state, xt.swapaxes(0, 1))
+    hid = hs.swapaxes(0, 1).astype(x.dtype)                 # (B,S,d)
+    up = jax.nn.gelu(hid @ params["w_up"].astype(x.dtype))
+    out = up @ params["w_dn"].astype(x.dtype)
+    new_cache = {"state": state} if cache is not None else None
+    return out, new_cache
+
+
+def slstm_decode_step(params, cfg, x, cache):
+    xt = (x[:, 0] @ params["w_in"].astype(x.dtype)).astype(jnp.float32)
+    state = _slstm_cell(params, cfg, xt, cache["state"])
+    hid = state["h"].astype(x.dtype)[:, None, :]
+    up = jax.nn.gelu(hid @ params["w_up"].astype(x.dtype))
+    out = up @ params["w_dn"].astype(x.dtype)
+    return out, {"state": state}
+
+
+def slstm_zero_state(cfg, batch: int):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -30.0, jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32)}
+
+
+def slstm_init_cache(cfg, batch: int, dtype):
+    del dtype
+    return {"state": slstm_zero_state(cfg, batch)}

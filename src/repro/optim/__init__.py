@@ -1,0 +1,8 @@
+from repro.optim.optimizer import (Optimizer, adamw, clip_by_global_norm,
+                                   sgd_momentum)
+from repro.optim.schedule import (constant_schedule, cosine_schedule,
+                                  resnet_paper_schedule, warmup_cosine)
+
+__all__ = ["Optimizer", "adamw", "sgd_momentum", "clip_by_global_norm",
+           "constant_schedule", "cosine_schedule", "resnet_paper_schedule",
+           "warmup_cosine"]

@@ -1,0 +1,120 @@
+"""Optimizers as pure (init, update) pairs over parameter pytrees.
+
+optax is not available in this environment, so we implement the two
+optimizers the framework needs:
+
+* ``sgd_momentum`` — the paper trains CI-ResNet with SGD (+momentum 0.9,
+  L2 1e-4 folded into the loss per the paper).
+* ``adamw`` — for LLM-zoo training steps (the beyond-paper layer).
+
+An Optimizer carries ``init(params) -> state`` and
+``update(grads, state, params, step) -> (updates, state)``; the caller applies
+``params + updates``.  A trainability mask (pytree of bool, same structure as
+params) supports the paper's backtrack training, where phase m freezes
+everything but head m.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params, step, mask=None)
+
+
+def _tree_zeros_like(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def _apply_mask(updates, mask):
+    if mask is None:
+        return updates
+    return jax.tree_util.tree_map(
+        lambda u, m: jnp.where(m, u, jnp.zeros_like(u)), updates, mask)
+
+
+def sgd_momentum(lr: Schedule | float, momentum: float = 0.9,
+                 nesterov: bool = False, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        return {"mu": _tree_zeros_like(params)}
+
+    def update(grads, state, params, step, mask=None):
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p, grads, params)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, mu, grads)
+        else:
+            upd = mu
+        step_lr = lr_fn(step)
+        updates = jax.tree_util.tree_map(lambda u: -step_lr * u, upd)
+        updates = _apply_mask(updates, mask)
+        # masked params should not accumulate momentum either
+        if mask is not None:
+            mu = jax.tree_util.tree_map(
+                lambda m_, msk, old: jnp.where(msk, m_, old),
+                mu, mask, state["mu"])
+        return updates, {"mu": mu}
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(lr: Schedule | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        return {"m": _tree_zeros_like(params), "v": _tree_zeros_like(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step, mask=None):
+        count = state["count"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+        step_lr = lr_fn(step)
+
+        def upd_leaf(m_, v_, p):
+            mhat = m_ / bc1
+            vhat = v_ / bc2
+            return -step_lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+        updates = jax.tree_util.tree_map(upd_leaf, m, v, params)
+        updates = _apply_mask(updates, mask)
+        if mask is not None:
+            m = jax.tree_util.tree_map(
+                lambda new, msk, old: jnp.where(msk, new, old), m, mask, state["m"])
+            v = jax.tree_util.tree_map(
+                lambda new, msk, old: jnp.where(msk, new, old), v, mask, state["v"])
+        return updates, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init=init, update=update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)

@@ -1,0 +1,50 @@
+"""Learning-rate schedules, including the [HZRS15a] CIFAR schedule the paper cites."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+    return fn
+
+
+def resnet_paper_schedule(base_lr: float = 0.1, total_steps: int = 64000,
+                          warmup_steps: int = 0, warmup_lr: float = 0.01):
+    """[HZRS15a] §4.2 schedule: lr 0.1, /10 at 50% and 75% of training.
+
+    He et al. additionally warm up ResNet-110 with lr 0.01 until the loss
+    drops; we expose a fixed warmup window for the same purpose.
+    """
+    b1 = int(0.5 * total_steps)
+    b2 = int(0.75 * total_steps)
+
+    def fn(step):
+        step = jnp.asarray(step)
+        lr = jnp.where(step < b1, base_lr,
+                       jnp.where(step < b2, base_lr * 0.1, base_lr * 0.01))
+        if warmup_steps:
+            lr = jnp.where(step < warmup_steps, warmup_lr, lr)
+        return lr.astype(jnp.float32)
+
+    return fn
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(jnp.asarray(step, jnp.float32) / max(1, total_steps), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(1, total_steps - warmup_steps), final_frac)
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(1, warmup_steps)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return fn

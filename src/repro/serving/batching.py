@@ -1,0 +1,63 @@
+"""Depth-compacted continuous batching.
+
+The TPU adaptation of the paper's per-sample early termination (DESIGN.md §5):
+``cond_batch`` segment skipping only saves compute when *every* co-resident
+sequence is confident, so the scheduler's job is to co-locate requests with
+similar expected exit depth.  Each *lane* is an independent (cache, batch)
+decode stream; requests are admitted to the lane whose running depth estimate
+matches the request's predicted depth (from its prefill exit, then an EMA of
+observed exits).
+
+This is a pure-host scheduling layer: no device state moves between lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class LaneStats:
+    depth_ema: float
+    steps: int = 0
+    skipped_segments: int = 0
+    total_segments: int = 0
+
+
+class DepthCompactor:
+    """Assigns requests to lanes by predicted exit depth."""
+
+    def __init__(self, n_lanes: int, n_components: int, ema: float = 0.8):
+        self.n_lanes = n_lanes
+        self.n_components = n_components
+        self.ema = ema
+        # lane i targets depth band [i * n_c / n_lanes, (i+1) * n_c / n_lanes)
+        self.lane_stats = [LaneStats(depth_ema=(i + 0.5) * n_components
+                                     / n_lanes)
+                           for i in range(n_lanes)]
+
+    def assign(self, predicted_depth: float, free_slots: List[int]) -> int:
+        """Pick the free lane whose depth estimate is closest."""
+        if not free_slots:
+            raise ValueError("no free lanes")
+        dists = [abs(self.lane_stats[i].depth_ema - predicted_depth)
+                 for i in free_slots]
+        return free_slots[int(np.argmin(dists))]
+
+    def observe(self, lane: int, exit_depths: np.ndarray,
+                segments_skipped: int):
+        st = self.lane_stats[lane]
+        if len(exit_depths):
+            st.depth_ema = (self.ema * st.depth_ema
+                            + (1 - self.ema) * float(np.mean(exit_depths)))
+        st.steps += 1
+        st.skipped_segments += segments_skipped
+        st.total_segments += self.n_components - 1
+
+    def skip_rate(self) -> float:
+        tot = sum(s.total_segments for s in self.lane_stats)
+        if not tot:
+            return 0.0
+        return sum(s.skipped_segments for s in self.lane_stats) / tot

@@ -1,0 +1,100 @@
+"""Small shared helpers: pytree utilities, dtype mapping, logging."""
+from __future__ import annotations
+
+import logging
+import sys
+import time
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def get_logger(name: str) -> logging.Logger:
+    logger = logging.getLogger(name)
+    if not logger.handlers:
+        h = logging.StreamHandler(sys.stderr)
+        h.setFormatter(logging.Formatter(
+            "%(asctime)s %(name)s %(levelname)s: %(message)s", "%H:%M:%S"))
+        logger.addHandler(h)
+        logger.setLevel(logging.INFO)
+    return logger
+
+
+DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+}
+
+
+def dtype_of(name: str):
+    return DTYPES[name]
+
+
+def tree_size(tree) -> int:
+    """Total number of elements in a pytree of arrays."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def assert_finite(tree, name: str = "tree"):
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            if not bool(jnp.all(jnp.isfinite(leaf))):
+                raise AssertionError(
+                    f"non-finite values in {name} at {jax.tree_util.keystr(path)}")
+
+
+def path_str(path) -> str:
+    """Render a tree_map_with_path key path as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+class Timer:
+    """Wall-clock context timer (CPU benches only; TPU numbers are analytic)."""
+
+    def __init__(self):
+        self.elapsed = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self._t0
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024:
+            return f"{n:.2f}{unit}"
+        n /= 1024
+    return f"{n:.2f}PiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "G", "T", "P"):
+        if abs(n) < 1000:
+            return f"{n:.3g}{unit}"
+        n /= 1000
+    return f"{n:.3g}E"

@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: REDUCED variant (2 layers, d_model<=512,
+<=4 experts), one forward + one train step on CPU, asserting shapes + no NaNs.
+Plus prefill/decode consistency per family.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_configs, reduced
+from repro.launch.steps import make_optimizer, make_train_step
+from repro.models.model import build_model, extra_input_shapes
+
+ARCHS = [a for a in list_configs() if a != "ci-resnet18"]
+
+
+def _extra(cfg, batch, rng):
+    return {k: jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for k, s in extra_input_shapes(cfg, batch).items()} or None
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    logits, aux = model.forward_train(params, toks, _extra(cfg, 2, rng))
+    assert len(logits) == cfg.cascade.n_components
+    for lg in logits:
+        assert lg.shape == (2, 16, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(lg.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_decreases_loss_direction(arch):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    opt = make_optimizer(cfg)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, cfg, opt))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 17)), jnp.int32)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    ex = _extra(cfg, 2, rng)
+    if ex:
+        batch["extra"] = ex
+    losses = []
+    for step in range(3):
+        params, opt_state, loss = step_fn(params, opt_state,
+                                          jnp.asarray(step), batch)
+        losses.append(float(loss))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]        # same batch: loss must drop
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_full_forward(arch):
+    cfg = reduced(get_config(arch)).replace(dtype="float32")
+    if cfg.n_experts:          # capacity drops change results; disable them
+        cfg = cfg.replace(capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    S = 13
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, S + 1)), jnp.int32)
+    ex = _extra(cfg, 2, rng)
+    logits_full, _ = model.forward_train(params, toks, ex)
+    cache = model.init_cache(2, S + 4)
+    el, cache = model.prefill(params, toks[:, :S], cache, ex)
+    sl, cache = model.decode_step(params, toks[:, S:S + 1], S, cache, ex)
+    for a, b in zip(logits_full, sl):
+        np.testing.assert_allclose(np.asarray(a[:, S, :]), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+    for a, b in zip(logits_full, el):
+        np.testing.assert_allclose(np.asarray(a[:, S - 1, :]), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_cache_matches_full_window_mask():
+    """Ring-buffer decode == full-forward with the same window mask."""
+    cfg = reduced(get_config("mixtral-8x7b")).replace(
+        dtype="float32", attn_window=8, capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    S = 21
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, S + 1)), jnp.int32)
+    logits_full, _ = model.forward_train(params, toks)
+    cache = model.init_cache(1, S + 4)   # capacity = window (8)
+    assert cache["kpos"].shape[0] == 8
+    el, cache = model.prefill(params, toks[:, :S], cache)
+    sl, _ = model.decode_step(params, toks[:, S:S + 1], S, cache)
+    for a, b in zip(logits_full, sl):
+        np.testing.assert_allclose(np.asarray(a[:, S, :]), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_cond_batch_skips_and_backfills():
+    """cond_batch with threshold 0 ⇒ every sequence exits at component 0;
+    deeper segments are skipped but their caches stay coherent (backfill)."""
+    cfg = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
+    cfg = cfg.with_cascade(thresholds=(0.0, 0.0), exit_mode="cond_batch",
+                           state_backfill=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    rng = np.random.default_rng(4)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    cache = model.init_cache(2, 16)
+    el, cache = model.prefill(params, toks, cache)
+    logits, cache2 = model.decode_step(params, toks[:, :1], 8, cache)
+    # cache of segment 1 must have been written at slot 8 (backfill)
+    k_before = cache["segments"][1][0]["k"][:, :, 8]
+    k_after = cache2["segments"][1][0]["k"][:, :, 8]
+    assert float(jnp.max(jnp.abs(k_after))) > 0
+    assert float(jnp.max(jnp.abs(k_before))) == 0
+
+
+def test_exit_boundaries_cover_all_layers():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        segs = cfg.segments
+        assert segs[0][0] == 0 and segs[-1][1] == cfg.n_layers
+        for (a, b), (c, d) in zip(segs, segs[1:]):
+            assert b == c and a < b

@@ -1,0 +1,119 @@
+"""Defs 3.1-3.3 semantics + calibration (§5) properties, incl. hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.calibration import (accuracy_vs_confidence,
+                                    calibrate_thresholds,
+                                    threshold_for_epsilon)
+from repro.core.confidence import (entropy_confidence, softmax_confidence,
+                                   softmax_outputs)
+
+
+def test_softmax_confidence_matches_naive():
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.standard_normal((32, 100)) * 5, jnp.float32)
+    out, delta = softmax_outputs(z)
+    probs = jax.nn.softmax(z, axis=-1)
+    np.testing.assert_allclose(delta, jnp.max(probs, -1), rtol=1e-5)
+    assert bool(jnp.all(out == jnp.argmax(z, -1)))
+
+
+def test_confidence_bounds():
+    rng = np.random.default_rng(1)
+    z = jnp.asarray(rng.standard_normal((64, 10)) * 10, jnp.float32)
+    _, d = softmax_outputs(z)
+    assert bool(jnp.all(d >= 1.0 / 10 - 1e-6))
+    assert bool(jnp.all(d <= 1.0))
+
+
+def test_entropy_confidence_orders_like_uncertainty():
+    # peaked logits must be more confident than flat ones
+    peaked = jnp.asarray([[10.0, 0, 0, 0]])
+    flat = jnp.asarray([[0.1, 0.0, 0.05, 0.02]])
+    assert float(entropy_confidence(peaked)[0]) > float(
+        entropy_confidence(flat)[0])
+
+
+# ---------------------------------------------------------------------------
+# calibration §5
+# ---------------------------------------------------------------------------
+
+def test_accuracy_vs_confidence_exact_small():
+    conf = np.array([0.9, 0.8, 0.7, 0.6])
+    correct = np.array([1.0, 1.0, 0.0, 1.0])
+    grid, alpha = accuracy_vs_confidence(conf, correct)
+    # at delta=0.6: acc 3/4; 0.7: 2/3; 0.8: 1.0; 0.9: 1.0
+    np.testing.assert_allclose(grid, [0.6, 0.7, 0.8, 0.9])
+    np.testing.assert_allclose(alpha, [0.75, 2 / 3, 1.0, 1.0])
+
+
+def test_threshold_for_epsilon_definition():
+    conf = np.array([0.9, 0.8, 0.7, 0.6])
+    correct = np.array([1.0, 1.0, 0.0, 1.0])
+    t, a_star = threshold_for_epsilon(conf, correct, 0.0)
+    assert a_star == 1.0 and t == 0.8          # min delta with alpha >= 1.0
+    t2, _ = threshold_for_epsilon(conf, correct, 0.30)
+    assert t2 == 0.6                           # 0.75 >= 1.0 - 0.30
+
+
+def test_last_component_threshold_zero():
+    conf = [np.random.default_rng(2).random(100) for _ in range(3)]
+    corr = [(np.random.default_rng(3).random(100) > 0.3).astype(float)
+            for _ in range(3)]
+    cal = calibrate_thresholds(conf, corr, 0.05)
+    assert cal.thresholds[-1] == 0.0
+    assert len(cal.thresholds) == 3
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(10, 200), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 0.3))
+def test_threshold_monotone_in_epsilon(n, seed, eps):
+    """Property: delta_m(eps) is non-increasing in eps, and alpha at the
+    chosen threshold is >= alpha_star - eps (the paper's definition)."""
+    rng = np.random.default_rng(seed)
+    conf = rng.random(n)
+    corr = (rng.random(n) < conf).astype(float)  # calibrated-ish classifier
+    t0, a_star = threshold_for_epsilon(conf, corr, eps)
+    t1, _ = threshold_for_epsilon(conf, corr, eps + 0.1)
+    assert t1 <= t0 + 1e-12
+    grid, alpha = accuracy_vs_confidence(conf, corr)
+    a_at = alpha[np.searchsorted(grid, t0)]
+    assert a_at >= a_star - eps - 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(20, 100), st.integers(0, 2 ** 31 - 1))
+def test_calibration_alpha_star_is_max(n_m, n, seed):
+    rng = np.random.default_rng(seed)
+    confs = [rng.random(n) for _ in range(n_m)]
+    corrs = [(rng.random(n) > 0.4).astype(float) for _ in range(n_m)]
+    cal = calibrate_thresholds(confs, corrs, 0.02)
+    for m in range(n_m):
+        grid, alpha = accuracy_vs_confidence(confs[m], corrs[m])
+        assert abs(cal.alpha_star[m] - alpha.max()) < 1e-12
+
+
+def test_calibration_relative_to_final_dominates_self():
+    """Beyond-paper rule: targeting the final component's accuracy yields
+    thresholds <= the paper's per-component rule (more early exits) whenever
+    the early component's own alpha* exceeds the cascade's."""
+    rng = np.random.default_rng(9)
+    n = 400
+    # component 0: same accuracy as final on most mass, but a tiny
+    # ultra-confident perfect subset inflates its own alpha*
+    conf0 = np.concatenate([np.full(10, 0.99), rng.uniform(0.4, 0.8, n - 10)])
+    corr0 = np.concatenate([np.ones(10), (rng.random(n - 10) < 0.7)])
+    conf_last = np.ones(n)
+    corr_last = (rng.random(n) < 0.7).astype(float)
+    cal_self = calibrate_thresholds([conf0, conf_last],
+                                    [corr0, corr_last], 0.01,
+                                    relative_to="self")
+    cal_final = calibrate_thresholds([conf0, conf_last],
+                                     [corr0, corr_last], 0.01,
+                                     relative_to="final")
+    assert cal_final.thresholds[0] <= cal_self.thresholds[0]
+    assert cal_final.thresholds[0] < 0.9    # exits actually unlocked

@@ -1,0 +1,99 @@
+"""Per-kernel allclose sweeps (interpret=True) against the ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.confidence import confidence
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,V", [(1, 128), (4, 1000), (16, 8192),
+                                 (3, 151), (8, 50304), (2, 131072)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_confidence_kernel(B, V, dtype):
+    x = _arr((B, V), dtype, 3.0)
+    i1, c1 = confidence(x)
+    i2, c2 = ref.ref_confidence(x)
+    assert bool(jnp.all(i1 == i2))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("R,d", [(1, 128), (37, 256), (64, 1024), (8, 8192)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel(R, d, dtype):
+    x = _arr((R, d), dtype)
+    w = _arr((d,), jnp.float32)
+    got = rmsnorm(x, w)
+    want = ref.ref_rmsnorm(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-2)
+
+
+@pytest.mark.parametrize("B,H,KV,S,hd,window", [
+    (2, 4, 2, 256, 64, 0),
+    (1, 8, 8, 128, 32, 0),
+    (2, 4, 1, 256, 64, 64),
+    (1, 2, 2, 512, 128, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(B, H, KV, S, hd, window, dtype):
+    q = _arr((B, H, S, hd), dtype)
+    k = _arr((B, KV, S, hd), dtype)
+    v = _arr((B, KV, S, hd), dtype)
+    got = flash_attention(q, k, v, window=window, tq=64, tk=64)
+    want = ref.ref_flash_attention(q, k, v, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+        atol=5e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("B,KV,qpk,W,hd,window,t", [
+    (2, 2, 4, 128, 64, 0, 100),
+    (1, 4, 1, 96, 32, 0, 50),
+    (2, 1, 8, 128, 64, 32, 100),
+    (1, 8, 2, 640, 128, 0, 639),
+])
+def test_decode_attention_kernel(B, KV, qpk, W, hd, window, t):
+    q = _arr((B, KV, qpk, hd))
+    kc = _arr((B, KV, W, hd))
+    vc = _arr((B, KV, W, hd))
+    kpos = jnp.asarray(np.where(np.arange(W) <= t, np.arange(W), -1),
+                       jnp.int32)
+    got = decode_attention(q, kc, vc, t, kpos, window=window, tk=64)
+    want = ref.ref_decode_attention(
+        q.reshape(B, KV * qpk, hd), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), t, kpos, window=window)
+    np.testing.assert_allclose(np.asarray(got.reshape(B, KV * qpk, hd)),
+                               np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_decode_attention_ring_wraparound():
+    """Ring-buffer semantics: slots hold non-contiguous absolute positions."""
+    B, KV, qpk, W, hd = 1, 1, 1, 64, 32
+    q = _arr((B, KV, qpk, hd))
+    kc = _arr((B, KV, W, hd))
+    vc = _arr((B, KV, W, hd))
+    t = 100
+    # slot j holds position: largest p <= t with p % W == j
+    s = np.arange(W)
+    kpos = jnp.asarray(t - ((t - s) % W), jnp.int32)
+    got = decode_attention(q, kc, vc, t, kpos, window=32, tk=32)
+    want = ref.ref_decode_attention(
+        q.reshape(B, KV * qpk, hd), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3), t, kpos, window=32)
+    np.testing.assert_allclose(np.asarray(got.reshape(B, 1, hd)),
+                               np.asarray(want), rtol=1e-4, atol=1e-5)

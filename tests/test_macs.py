@@ -1,0 +1,67 @@
+"""Analytic MAC / FLOP accounting checks (the paper's §6.2 metric)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.core.macs import (active_param_count, exit_head_macs, model_flops,
+                             param_count, resnet_component_macs,
+                             segment_macs_per_token)
+
+
+def test_resnet110_canonical_macs():
+    """CI-RESNET(18) must land on ResNet-110's canonical ~253M MACs and the
+    paper's observed max-speedup ratio ~2.95."""
+    p = resnet_component_macs(18, 10)
+    assert len(p) == 3 and p[0] < p[1] < p[2]
+    assert 2.4e8 < p[2] < 2.7e8
+    assert 2.9 < p[2] / p[0] < 3.05
+
+
+def test_resnet_macs_scale_with_depth_and_classes():
+    p3 = resnet_component_macs(3, 10)
+    p9 = resnet_component_macs(9, 10)
+    assert p9[2] > 2.5 * p3[2]
+    p100 = resnet_component_macs(3, 100)
+    assert p100[2] > p3[2]                     # bigger classifier head
+
+
+@pytest.mark.parametrize("arch", [a for a in list_configs()
+                                  if a != "ci-resnet18"])
+def test_segment_macs_monotone_prefix(arch):
+    cfg = get_config(arch)
+    prefix = segment_macs_per_token(cfg, kv_len=4096)
+    assert len(prefix) == cfg.cascade.n_components
+    assert all(b > a for a, b in zip(prefix, prefix[1:]))
+    assert prefix[0] > exit_head_macs(cfg) > 0
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("mixtral-8x7b")
+    assert active_param_count(cfg) < param_count(cfg)
+    # mixtral: ~47B total, ~13B active — accept generous analytic bounds
+    assert 35e9 < param_count(cfg) < 60e9
+    assert 9e9 < active_param_count(cfg) < 18e9
+
+
+def test_known_param_counts_roughly():
+    """Analytic N vs the models' public parameter counts (±35% — our zoo
+    adds untied exit/unembed heads and simplified blocks)."""
+    expect = {"yi-9b": 9e9, "deepseek-coder-33b": 33e9,
+              "qwen2.5-3b": 3e9, "minitron-4b": 4e9}
+    for arch, n in expect.items():
+        got = param_count(get_config(arch))
+        assert 0.65 * n < got < 1.6 * n, (arch, got)
+
+
+def test_model_flops_train_vs_infer():
+    cfg = get_config("yi-9b")
+    assert model_flops(cfg, 1000, True) == 3 * model_flops(cfg, 1000, False)
+
+
+def test_window_caps_attention_macs():
+    cfg = get_config("mixtral-8x7b")           # window 4096
+    short = segment_macs_per_token(cfg, kv_len=4096)[-1]
+    long = segment_macs_per_token(cfg, kv_len=1_000_000)[-1]
+    assert long == short                        # SWA: kv term capped
+    nf = cfg.replace(attn_window=0)
+    assert segment_macs_per_token(nf, kv_len=1_000_000)[-1] > long

@@ -1,0 +1,147 @@
+"""Math-level tests: chunked SSD vs sequential recurrence, chunked mLSTM vs
+sequential recurrence, chunked attention vs full, MoE routing invariants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import attend_chunked, attend_chunked_2d, attend_full
+from repro.models.moe import capacity, route_topk
+from repro.models.ssm import ssd_chunked
+from repro.models.xlstm import mlstm_chunked
+
+RNG = np.random.default_rng(7)
+
+
+def _seq_ssd(x, dt, A, B, C):
+    """Sequential oracle for the SSD recurrence."""
+    Bsz, S, h, p = x.shape
+    n = B.shape[-1]
+    state = np.zeros((Bsz, h, p, n))
+    ys = np.zeros((Bsz, S, h, p))
+    x = np.asarray(x, np.float64) * np.asarray(dt)[..., None]
+    dA = np.exp(np.asarray(dt, np.float64) * np.asarray(A))
+    for t in range(S):
+        state = state * dA[:, t][:, :, None, None] + np.einsum(
+            "bhp,bn->bhpn", x[:, t], np.asarray(B)[:, t])
+        ys[:, t] = np.einsum("bn,bhpn->bhp", np.asarray(C)[:, t], state)
+    return ys, state
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 16), (40, 8)])
+def test_ssd_chunked_matches_sequential(S, chunk):
+    Bsz, h, p, n = 2, 3, 4, 5
+    if S % chunk:
+        pytest.skip("chunk must divide S for the direct call")
+    x = jnp.asarray(RNG.standard_normal((Bsz, S, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.5, (Bsz, S, h)), jnp.float32)
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((Bsz, S, n)), jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((Bsz, S, n)), jnp.float32)
+    y, state = ssd_chunked(x, dt, A, B, C, chunk)
+    y_ref, state_ref = _seq_ssd(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), state_ref, rtol=2e-4,
+                               atol=2e-4)
+
+
+def _seq_mlstm(q, k, v, i_pre, f_pre):
+    """Sequential stabilized mLSTM oracle."""
+    B, S, h, p = q.shape
+    scale = 1.0 / np.sqrt(p)
+    q = np.asarray(q, np.float64) * scale
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    logf = -np.log1p(np.exp(-np.asarray(f_pre, np.float64)))
+    i = np.asarray(i_pre, np.float64)
+    C = np.zeros((B, h, p, p))
+    n = np.zeros((B, h, p))
+    m = np.full((B, h), -1e30)
+    out = np.zeros((B, S, h, p))
+    for t in range(S):
+        m_new = np.maximum(logf[:, t] + m, i[:, t])
+        wf = np.exp(logf[:, t] + m - m_new)
+        wi = np.exp(i[:, t] - m_new)
+        C = wf[..., None, None] * C + wi[..., None, None] * np.einsum(
+            "bhp,bhd->bhpd", k[:, t], v[:, t])
+        n = wf[..., None] * n + wi[..., None] * k[:, t]
+        num = np.einsum("bhp,bhpd->bhd", q[:, t], C)
+        qn = np.einsum("bhp,bhp->bh", q[:, t], n)
+        denom = np.maximum(np.abs(qn), np.exp(-m_new))
+        out[:, t] = num / denom[..., None]
+        m = m_new
+    return out, (C, n, m)
+
+
+@pytest.mark.parametrize("S,chunk", [(32, 8), (48, 16)])
+def test_mlstm_chunked_matches_sequential(S, chunk):
+    B, h, p = 2, 2, 8
+    q = jnp.asarray(RNG.standard_normal((B, S, h, p)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, h, p)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, h, p)), jnp.float32)
+    i_pre = jnp.asarray(RNG.standard_normal((B, S, h)), jnp.float32)
+    f_pre = jnp.asarray(RNG.standard_normal((B, S, h)) + 2, jnp.float32)
+    hid, (C, n, m) = mlstm_chunked(q, k, v, i_pre, f_pre, chunk)
+    hid_ref, (C_ref, n_ref, m_ref) = _seq_mlstm(q, k, v, i_pre, f_pre)
+    np.testing.assert_allclose(np.asarray(hid), hid_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(C), C_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(m), m_ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([128, 256]),
+       st.sampled_from([0, 32]), st.integers(0, 2 ** 31 - 1))
+def test_chunked_attention_property(B, S, window, seed):
+    rng = np.random.default_rng(seed)
+    H = KV = 2
+    hd = 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    pos = jnp.arange(S)
+    o_full = attend_full(q, k, v, pos, pos, window=window)
+    o_chunk = attend_chunked(q, k, v, pos, pos, window=window, chunk=64)
+    o_2d = attend_chunked_2d(q, k, v, pos, pos, window=window,
+                             qchunk=64, kchunk=32)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_chunk),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_2d),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE routing invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 64), st.sampled_from([4, 8]), st.integers(1, 2),
+       st.integers(0, 2 ** 31 - 1))
+def test_route_topk_invariants(T, E, k, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.standard_normal((T, E)), jnp.float32)
+    cap = capacity(T, E, k, 1.25)
+    dispatch, combine, aux = route_topk(logits, k, cap)
+    d = np.asarray(dispatch)
+    c = np.asarray(combine)
+    # each (expert, slot) holds at most one token
+    assert (d.sum(axis=0) <= 1 + 1e-6).all()
+    # each token dispatched at most k times, combine weights in [0, 1]
+    assert (d.sum(axis=(1, 2)) <= k + 1e-6).all()
+    assert (c >= -1e-6).all()
+    assert (c.sum(axis=(1, 2)) <= 1 + 1e-6).all()
+    # combine nonzero only where dispatch is
+    assert (np.abs(c[d == 0]) < 1e-6).all()
+    assert np.isfinite(float(aux))
+
+
+def test_route_topk_no_drop_when_capacity_ample():
+    rng = np.random.default_rng(0)
+    T, E, k = 32, 4, 2
+    logits = jnp.asarray(rng.standard_normal((T, E)), jnp.float32)
+    dispatch, combine, _ = route_topk(logits, k, cap=T * k)
+    d = np.asarray(dispatch)
+    c = np.asarray(combine)
+    assert np.allclose(d.sum(axis=(1, 2)), k)        # all k slots dispatched
+    np.testing.assert_allclose(c.sum(axis=(1, 2)), 1.0, rtol=1e-5)

@@ -11,7 +11,8 @@ EPSILONS = [0.20, 0.15, 0.10, 0.08, 0.06, 0.04, 0.02, 0.01, 0.0]
 def run():
     model, report, (train, val, test) = trained_cascade()
     sweep = evaluate_tradeoff(model, report.params, report.state, val, test,
-                              EPSILONS, N_CLASSES)
+                              EPSILONS, N_CLASSES,
+                              measure="softmax_max", calibrator="self")
     rows = []
     accs, macs = [], []
     for eps, res in sweep:

@@ -1,9 +1,11 @@
 """Beyond-paper benchmark: cascade early exit on an LLM decode stream.
 
 Measures (i) the serving engine's analytic MAC speedup at several thresholds,
-(ii) softmax-confidence vs entropy-confidence (the BranchyNet [TMK16]
-baseline the paper argues against) at matched exit rates, and (iii) the
-cond_batch skip rate with depth-compacted lanes.
+(ii) alternative registered confidence measures (entropy — the BranchyNet
+[TMK16] baseline the paper argues against — and PABEE-style patience) on the
+same engine, and (iii) the cond_batch skip rate with depth-compacted lanes.
+All exit decisions route through the one ExitDecider resolved from the
+config's registry strings.
 """
 import time
 
@@ -15,26 +17,36 @@ from repro.models.model import build_model
 from repro.serving import CascadeServingEngine, Request
 
 
+def _drive(cfg, model, params, tag, rows, n_req=6):
+    rng = np.random.default_rng(0)
+    eng = CascadeServingEngine(cfg, model, params, lane_batch=2,
+                               n_lanes=2, cache_len=48)
+    for i in range(n_req):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, 8).astype(np.int32), max_new_tokens=8))
+    t0 = time.time()
+    eng.run(300)
+    dt = (time.time() - t0) * 1e6
+    st = eng.stats()
+    rows.append((f"llm_cascade/{tag}/speedup",
+                 dt / max(1, st["requests_finished"]),
+                 f"{st['analytic_speedup']:.3f}"))
+    rows.append((f"llm_cascade/{tag}/skip_rate", 0.0,
+                 f"{st['cond_batch_skip_rate']:.3f}"))
+    return st
+
+
 def run():
     cfg = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
     rows = []
     for th in (0.0, 0.5, 1.1):
         c = cfg.with_cascade(thresholds=(th, 0.0), exit_mode="select")
-        eng = CascadeServingEngine(c, model, params, lane_batch=2,
-                                   n_lanes=2, cache_len=48)
-        for i in range(6):
-            eng.submit(Request(rid=i, prompt=rng.integers(
-                0, c.vocab_size, 8).astype(np.int32), max_new_tokens=8))
-        t0 = time.time()
-        eng.run(300)
-        dt = (time.time() - t0) * 1e6
-        st = eng.stats()
-        rows.append((f"llm_cascade/th={th:g}/speedup",
-                     dt / max(1, st["requests_finished"]),
-                     f"{st['analytic_speedup']:.3f}"))
-        rows.append((f"llm_cascade/th={th:g}/skip_rate", 0.0,
-                     f"{st['cond_batch_skip_rate']:.3f}"))
+        _drive(c, model, params, f"th={th:g}", rows)
+    # alternative measures through the same registry-resolved engine path
+    for measure in ("entropy", "patience@2"):
+        c = cfg.with_cascade(thresholds=(0.5, 0.0), exit_mode="select",
+                             confidence=measure)
+        _drive(c, model, params, f"measure={measure}", rows)
     return rows

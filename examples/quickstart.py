@@ -12,8 +12,8 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.confidence import softmax_outputs
+from repro.core.policy import ExitDecider
 from repro.models.model import build_model, extra_input_shapes
-from repro.serving.engine import select_exit
 
 
 def main():
@@ -39,19 +39,30 @@ def main():
         print(f"exit {m}: logits {lg.shape}, last-pos confidence "
               f"{np.round(np.asarray(conf), 3)}")
 
-    # 2) prefill + a few decode steps with early exit
+    # 2) prefill + a few decode steps with early exit, all through the one
+    #    ExitDecider resolved from the config's registry strings
+    decider = ExitDecider.from_config(cfg)
     cache = model.init_cache(2, 32)
     exit_logits, cache = model.prefill(params, toks, cache, extra)
     t = toks.shape[1]
     for thresholds in [(0.9, 0.0), (0.0, 0.0)]:   # on-the-fly change
-        tok, exit_idx, conf = select_exit(exit_logits, thresholds)
+        d = decider.decide(exit_logits, thresholds=thresholds)
+        tok = d.prediction
         print(f"thresholds={thresholds}: next tokens "
-              f"{np.asarray(tok)}, exits {np.asarray(exit_idx)}")
+              f"{np.asarray(tok)}, exits {np.asarray(d.exit_index)}")
     step_logits, cache = model.decode_step(params, tok[:, None], t, cache,
                                            extra)
-    tok2, exits2, _ = select_exit(step_logits, (0.5, 0.0))
-    print(f"decode step at t={t}: tokens {np.asarray(tok2)}, "
-          f"exits {np.asarray(exits2)}")
+    d2 = decider.decide(step_logits, thresholds=(0.5, 0.0))
+    print(f"decode step at t={t}: tokens {np.asarray(d2.prediction)}, "
+          f"exits {np.asarray(d2.exit_index)}")
+
+    # 3) swap the confidence measure without touching the model: any
+    #    registered measure (entropy, margin, patience@k, your own) plugs in
+    for measure in ("entropy", "margin"):
+        alt = ExitDecider(measure, thresholds=(0.5, 0.0))
+        d3 = alt.decide(exit_logits)
+        print(f"measure={measure}: exits {np.asarray(d3.exit_index)}, "
+              f"confidence {np.round(np.asarray(d3.confidence), 3)}")
 
 
 if __name__ == "__main__":

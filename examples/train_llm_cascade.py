@@ -17,8 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core.calibration import calibrate_thresholds
 from repro.core.cascade import cascade_evaluate
+from repro.core.policy import get_calibrator
 from repro.core.confidence import softmax_outputs
 from repro.core.macs import segment_macs_per_token
 from repro.data.lm_pipeline import SyntheticLMStream
@@ -79,10 +79,10 @@ def main():
     print(f"{'rule':>6} {'eps':>6} {'acc':>8} {'speedup':>8} "
           f"{'thresholds':>22} exit%")
     for rule in ("self", "final"):          # §5 vs beyond-paper cascade-level
+        calibrator = get_calibrator(rule)
         for eps in (0.0, 0.01, 0.05, 0.1, 0.2):
-            cal = calibrate_thresholds([c[:n_cal] for c in confs],
-                                       [c[:n_cal] for c in corrects], eps,
-                                       relative_to=rule)
+            cal = calibrator.calibrate([c[:n_cal] for c in confs],
+                                       [c[:n_cal] for c in corrects], eps)
             res = cascade_evaluate([c[n_cal:] for c in confs],
                                    [p[n_cal:] for p in preds], y[n_cal:],
                                    mac_prefix, cal.thresholds)

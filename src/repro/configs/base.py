@@ -30,7 +30,16 @@ class CascadeConfig:
     exit_boundaries: Tuple[int, ...] = ()
     enhance_dim: int = 0
     thresholds: Tuple[float, ...] = (0.9, 0.9, 0.0)
-    confidence: str = "softmax_max"  # or "entropy" (BranchyNet baseline)
+    # Strategy strings resolved through repro.core.policy's registries (kept
+    # as strings so the config stays frozen/hashable and can key jit caches).
+    # Measures: "softmax_max" | "entropy" | "margin" | "patience@k[:base]".
+    confidence: str = "softmax_max"
+    # Exit policies: "threshold" (Algorithm 1) | "budget@<avg-mac-target>"
+    # (budget additionally needs a calibration-time policy.fit() with
+    # held-out confidences before it can decide).
+    policy: str = "threshold"
+    # Threshold calibrators (§5): "self" (paper) | "final" (cascade-level).
+    calibrator: str = "self"
     # How exits execute on TPU: "select" = fixed graph (dry-run/roofline),
     # "cond_batch" = lax.cond batch-uniform segment skipping.
     exit_mode: str = "select"

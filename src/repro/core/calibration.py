@@ -18,7 +18,7 @@ each distinct confidence gives α_m(δ) exactly at all breakpoints in O(N log N)
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 
@@ -80,26 +80,12 @@ def calibrate_thresholds(confidences: Sequence[np.ndarray],
     confidences[m], corrects[m]: arrays over the calibration set for component
     m.  The final component's threshold is forced to 0 (paper's remark (i)).
 
-    relative_to:
-      "self"  — the paper's §5 rule: δ_m(ε) targets α*_m − ε.  Conservative
-                when an early component already matches the cascade: its own
-                α* can sit far above the cascade's accuracy, blocking exits
-                that would cost nothing (the paper's CIFAR-100 ε-gap).
-      "final" — beyond-paper variant: every component targets the FINAL
-                component's α* − ε, i.e. the ε budget is cascade-level.
-                Dominates "self" in speedup at equal ε on calibration data.
+    ``relative_to`` is a calibrator registry spec (repro.core.policy):
+      "self"  — the paper's §5 rule (SelfCalibrator).
+      "final" — beyond-paper cascade-level rule (FinalCalibrator).
+    New rules register via ``@register_calibrator`` and become available here
+    without touching this function.
     """
-    n_m = len(confidences)
-    # the cascade's realized accuracy: the final component at threshold 0
-    # (NOT its alpha* — the max over delta would re-introduce the same
-    # conservatism the "final" rule exists to remove)
-    alpha_final = float(np.mean(corrects[-1]))
-    ths: List[float] = []
-    stars: List[float] = []
-    for m in range(n_m):
-        target = alpha_final if relative_to == "final" else None
-        t, a = threshold_for_epsilon(confidences[m], corrects[m], epsilon,
-                                     target=target)
-        ths.append(0.0 if m == n_m - 1 else t)
-        stars.append(a)
-    return CalibrationResult(tuple(ths), tuple(stars), epsilon)
+    from repro.core.policy import get_calibrator  # circular-import guard
+    return get_calibrator(relative_to).calibrate(confidences, corrects,
+                                                 epsilon)

@@ -18,14 +18,11 @@ Two execution styles:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax import lax
 
-from repro.core.confidence import softmax_outputs
+from repro.core.policy import Calibrator, ExitDecider, get_calibrator
 
 
 @dataclasses.dataclass
@@ -38,51 +35,51 @@ class CascadeEvalResult:
 
 
 def cascade_infer_sequential(component_fns: Sequence[Callable],
-                             thresholds: Sequence[float], x):
+                             thresholds: Sequence[float], x,
+                             decider: Optional[ExitDecider] = None):
     """Algorithm 1 CI(M, δ̂, x) for a single input (batch allowed; the stop
     condition then requires *all* sequences confident — the batch-uniform
     TPU semantics).
 
     component_fns[m](x, state) -> (logits, state): state carries reused
     computation (the feature map so far), making components nested prefixes.
+    The exit decision itself is delegated to the shared :class:`ExitDecider`
+    (default: the paper's softmax_max measure under ThresholdPolicy).
     """
-    n_m = len(component_fns)
-    outs = []
+    decider = decider or ExitDecider("softmax_max")
+    logits_list = []
     state = None
     # Python loop over components (n_m is small and static); early termination
-    # realized with lax.cond so the graph stays compilable.
-    done = jnp.zeros((), bool)
-    result = None
-    conf_final = None
-    for m, fn in enumerate(component_fns):
+    # is realized by the decider's masked selection so the graph stays
+    # compilable.
+    for fn in component_fns:
         logits, state = fn(x, state)
-        out, delta = softmax_outputs(logits)
-        take = jnp.logical_and(jnp.logical_not(done),
-                               jnp.all(delta >= thresholds[m])
-                               if m < n_m - 1 else jnp.array(True))
-        result = out if result is None else jnp.where(take, out, result)
-        conf_final = delta if conf_final is None else jnp.where(
-            take, delta, conf_final)
-        done = jnp.logical_or(done, take)
-    return result, conf_final
+        logits_list.append(logits)
+    decision = decider.decide(logits_list, thresholds=thresholds,
+                              batch_uniform=True)
+    return decision.prediction, decision.confidence
 
 
 def cascade_evaluate(confidences: Sequence[np.ndarray],
                      predictions: Sequence[np.ndarray],
                      labels: np.ndarray,
                      mac_prefix: Sequence[float],
-                     thresholds: Sequence[float]) -> CascadeEvalResult:
+                     thresholds: Sequence[float],
+                     decider: Optional[ExitDecider] = None
+                     ) -> CascadeEvalResult:
     """Evaluate early-termination for one threshold vector.
 
     confidences[m], predictions[m]: (N,) arrays for component m over the
     evaluation set; mac_prefix[m]: cumulative MACs of running components
-    0..m (nested cascade ⇒ prefix cost).  Last threshold is treated as 0.
+    0..m (nested cascade ⇒ prefix cost).  The last threshold is forced to 0
+    (the final component always answers), matching Algorithm 1's accounting
+    regardless of what the caller passes.
     """
     n_m = len(confidences)
     N = len(labels)
-    exit_idx = np.full(N, n_m - 1, np.int32)
-    for m in range(n_m - 2, -1, -1):   # later components first, earlier win
-        exit_idx = np.where(confidences[m] >= thresholds[m], m, exit_idx)
+    thresholds = tuple(float(t) for t in thresholds[:-1]) + (0.0,)
+    decider = decider or ExitDecider("softmax_max")
+    exit_idx = decider.exit_indices(confidences, thresholds)
     preds = np.stack(predictions, axis=0)[exit_idx, np.arange(N)]
     acc = float(np.mean(preds == labels))
     macs = np.asarray(mac_prefix, np.float64)[exit_idx]
@@ -97,13 +94,18 @@ def cascade_evaluate(confidences: Sequence[np.ndarray],
 
 def sweep_epsilons(confidences_cal, corrects_cal, confidences_test,
                    predictions_test, labels_test, mac_prefix,
-                   epsilons: Sequence[float]):
+                   epsilons: Sequence[float],
+                   calibrator: "str | Calibrator" = "self"):
     """Full Figure-3 style sweep: calibrate δ̂(ε) on the calibration split,
-    evaluate accuracy/MACs on the test split, one result per ε."""
-    from repro.core.calibration import calibrate_thresholds
+    evaluate accuracy/MACs on the test split, one result per ε.
+
+    ``calibrator`` is a registry spec ("self" = paper §5, "final" =
+    cascade-level budget) or a Calibrator instance."""
+    if isinstance(calibrator, str):
+        calibrator = get_calibrator(calibrator)
     results = []
     for eps in epsilons:
-        cal = calibrate_thresholds(confidences_cal, corrects_cal, eps)
+        cal = calibrator.calibrate(confidences_cal, corrects_cal, eps)
         res = cascade_evaluate(confidences_test, predictions_test,
                                labels_test, mac_prefix, cal.thresholds)
         results.append((eps, cal, res))

@@ -1,0 +1,526 @@
+"""Unified exit-policy layer: pluggable confidence measures, exit policies
+and calibrators behind one registry, plus the single exit-decision engine
+(:class:`ExitDecider`) shared by Algorithm-1 inference, the vectorized
+evaluation harness, the serving engine and the launch steps.
+
+The paper's mechanism — softmax confidence δ_m gates early exit at calibrated
+thresholds δ̂_m(ε) — previously lived in three hand-rolled copies (sequential
+inference, serving ``select_exit``, numpy eval sweep).  Related work swaps
+each piece independently: *Learning to Cascade* replaces max-softmax with a
+calibrated confidence, *IDK Cascades* gates on entropy or margin, PABEE-style
+decoding requires k consecutive confident steps.  Each such variant is now a
+small registered class:
+
+* :class:`ConfidenceMeasure` — logits → (prediction, scalar confidence).
+  Shipped: ``softmax_max`` (Def. 3.3, with a fused Pallas path),
+  ``entropy`` (BranchyNet baseline, mapped onto (0, 1]), ``margin``
+  (top-2 probability gap) and ``patience`` (k consecutive confident decode
+  steps, wrapping any base measure).
+* :class:`ExitPolicy` — per-component confidences → boolean exit gates.
+  Shipped: :class:`ThresholdPolicy` (Algorithm 1 verbatim) and
+  :class:`BudgetPolicy` (fits thresholds to hit a target average-MAC
+  budget on calibration confidences).
+* :class:`Calibrator` — §5 threshold calibration.  Shipped: ``self`` (the
+  paper's per-component rule) and ``final`` (cascade-level ε budget).
+
+Strings in :class:`repro.configs.base.CascadeConfig` (``confidence``,
+``policy``, ``calibrator``) resolve through the registries, so configs stay
+frozen/hashable and a new strategy is one ``@register_*`` class away.
+Parameterized specs use ``name@arg`` (e.g. ``patience@3``,
+``patience@3:entropy``, ``budget@2.5e6``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import (CalibrationResult, threshold_for_epsilon)
+from repro.core.confidence import entropy_confidence, softmax_outputs
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+_MEASURES: Dict[str, Callable[[str], "ConfidenceMeasure"]] = {}
+_POLICIES: Dict[str, Callable[[str], "ExitPolicy"]] = {}
+_CALIBRATORS: Dict[str, Callable[[str], "Calibrator"]] = {}
+
+
+def _register(table, name):
+    def deco(factory):
+        table[name] = factory
+        return factory
+    return deco
+
+
+def register_measure(name: str):
+    """Class decorator: register a ConfidenceMeasure under ``name``.
+
+    The class is constructed as ``cls(argspec)`` where ``argspec`` is the
+    (possibly empty) text after ``@`` in the config string.
+    """
+    return _register(_MEASURES, name)
+
+
+def register_policy(name: str):
+    return _register(_POLICIES, name)
+
+
+def register_calibrator(name: str):
+    return _register(_CALIBRATORS, name)
+
+
+def _resolve(table, spec: str, kind: str):
+    name, _, arg = spec.partition("@")
+    if name not in table:
+        raise KeyError(f"unknown {kind} {name!r}; registered: "
+                       f"{sorted(table)}")
+    return table[name](arg)
+
+
+def get_measure(spec: str) -> "ConfidenceMeasure":
+    """``softmax_max`` | ``entropy`` | ``margin`` | ``patience@k[:base]`` …"""
+    return _resolve(_MEASURES, spec, "confidence measure")
+
+
+def get_policy(spec: str) -> "ExitPolicy":
+    """``threshold`` | ``budget@<avg-mac-target>`` …"""
+    return _resolve(_POLICIES, spec, "exit policy")
+
+
+def get_calibrator(spec: str) -> "Calibrator":
+    """``self`` | ``final`` …"""
+    return _resolve(_CALIBRATORS, spec, "calibrator")
+
+
+def available_measures() -> List[str]:
+    return sorted(_MEASURES)
+
+
+def available_policies() -> List[str]:
+    return sorted(_POLICIES)
+
+
+def available_calibrators() -> List[str]:
+    return sorted(_CALIBRATORS)
+
+
+# ---------------------------------------------------------------------------
+# confidence measures
+# ---------------------------------------------------------------------------
+
+class ConfidenceMeasure:
+    """logits (..., C) → (prediction (...,), confidence (...,) in (0, 1]).
+
+    ``stateful`` measures additionally thread per-sequence decode state
+    through :meth:`ExitDecider.decide` (see :class:`PatienceMeasure`).
+    """
+
+    name = "base"
+    stateful = False
+    patience_k = 1
+
+    def __call__(self, logits: jnp.ndarray):
+        raise NotImplementedError
+
+    def fused_kernel(self, logits: jnp.ndarray):
+        """Optional fused-kernel path for 2D (B, V) logits; None = no kernel.
+
+        Only consulted when the caller opted in (``cfg.use_kernels``); the
+        semantics must match ``__call__`` bit-for-bit up to float tolerance.
+        """
+        return None
+
+    def init_state(self, n_exits: int, batch: int):
+        return None
+
+
+@register_measure("softmax_max")
+class SoftmaxMaxMeasure(ConfidenceMeasure):
+    """δ = max softmax (Defs. 3.2–3.3) — the paper's measure."""
+
+    name = "softmax_max"
+
+    def __init__(self, arg: str = ""):
+        del arg
+
+    def __call__(self, logits):
+        return softmax_outputs(logits)
+
+    def fused_kernel(self, logits):
+        if logits.ndim != 2:
+            return None
+        from repro.kernels.confidence import confidence as fused_confidence
+        return fused_confidence(logits)
+
+
+@register_measure("entropy")
+class EntropyMeasure(ConfidenceMeasure):
+    """BranchyNet [TMK16] baseline: −entropy, mapped onto (0, 1] via
+    1/(1 + H) so §5 calibration grids behave like δ's."""
+
+    name = "entropy"
+
+    def __init__(self, arg: str = ""):
+        del arg
+
+    def __call__(self, logits):
+        out = jnp.argmax(logits, axis=-1)
+        neg_ent = entropy_confidence(logits)          # (−inf, 0]
+        return out, 1.0 / (1.0 - neg_ent)
+
+
+@register_measure("margin")
+class MarginMeasure(ConfidenceMeasure):
+    """Top-2 softmax probability gap (IDK-cascade style), in [0, 1)."""
+
+    name = "margin"
+
+    def __init__(self, arg: str = ""):
+        del arg
+
+    def __call__(self, logits):
+        x = logits.astype(jnp.float32)
+        out = jnp.argmax(x, axis=-1)
+        top2 = jax.lax.top_k(x, 2)[0]                  # (..., 2) descending
+        m = top2[..., 0]
+        lse = m + jnp.log(jnp.sum(jnp.exp(x - m[..., None]), axis=-1))
+        p = jnp.exp(top2 - lse[..., None])
+        return out, p[..., 0] - p[..., 1]
+
+
+@register_measure("patience")
+class PatienceMeasure(ConfidenceMeasure):
+    """PABEE-style patience: a sequence may exit at component m only after
+    its base confidence has cleared the gate on k *consecutive* decode steps
+    (the current one included).  Spec: ``patience@k`` or ``patience@k:base``
+    (default base ``softmax_max``, k=2).
+
+    The per-(exit, sequence) streak counters live in decider state; the gate
+    rewrite happens inside :meth:`ExitDecider.decide` so the scan stays the
+    single implementation.
+    """
+
+    name = "patience"
+    stateful = True
+
+    def __init__(self, arg: str = ""):
+        k, _, base = arg.partition(":")
+        self.patience_k = int(k) if k else 2
+        if self.patience_k < 1:
+            raise ValueError("patience k must be >= 1")
+        self.base = get_measure(base or "softmax_max")
+
+    def __call__(self, logits):
+        return self.base(logits)
+
+    def fused_kernel(self, logits):
+        return self.base.fused_kernel(logits)
+
+    def init_state(self, n_exits: int, batch: int):
+        return jnp.zeros((n_exits, batch), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# exit policies
+# ---------------------------------------------------------------------------
+
+class ExitPolicy:
+    """Per-component confidences (n_m, B) → boolean exit gates (n_m, B).
+
+    The final component's gate must be all-True (it always answers); the
+    decision scan itself (first open gate wins) lives in ExitDecider.
+
+    ``mirrors_config_thresholds`` declares that the gates are exactly
+    "confidence >= the caller-supplied thresholds" — the contract the
+    cond_batch segment-skip condition relies on to mirror the decider.
+    """
+
+    name = "base"
+    mirrors_config_thresholds = False
+
+    def resolve_thresholds(self, thresholds):
+        """Thresholds the decider should use; policies may own a fitted
+        vector (BudgetPolicy) and ignore the config's."""
+        return thresholds
+
+    def gates(self, confs: jnp.ndarray, thresholds) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+@register_policy("threshold")
+class ThresholdPolicy(ExitPolicy):
+    """Algorithm 1 verbatim: exit at the first component with δ_m ≥ δ̂_m;
+    the final component always answers."""
+
+    name = "threshold"
+    mirrors_config_thresholds = True
+
+    def __init__(self, arg: str = ""):
+        del arg
+
+    def gates(self, confs, thresholds):
+        ths = jnp.asarray(thresholds, confs.dtype).reshape(
+            (-1,) + (1,) * (confs.ndim - 1))
+        if ths.shape[0] != confs.shape[0]:
+            raise ValueError(
+                f"{ths.shape[0]} thresholds for {confs.shape[0]} cascade "
+                f"components")
+        open_ = confs >= ths
+        return open_.at[-1].set(True)
+
+
+@register_policy("budget")
+class BudgetPolicy(ThresholdPolicy):
+    """Pick thresholds hitting a target *average* MAC budget per sample.
+
+    Thresholds are parameterized by one exit quantile q shared across
+    components: δ̂_m = quantile(conf_cal[m], q).  Average MACs under the
+    decision scan are monotone non-decreasing in q (q=0 exits everyone at
+    component 0), so a bisection on q lands within tolerance of the budget
+    (clamped to the feasible [mac_prefix[0], mac_prefix[-1]] range).
+    Spec: ``budget@<avg_macs>``.
+
+    Unlike ThresholdPolicy this policy needs a calibration step: resolve it
+    (``get_policy("budget@...")`` or via ``ExitDecider.from_config``), call
+    :meth:`fit` with held-out confidences + the MAC prefix, and only then
+    decide/serve with it.
+    """
+
+    name = "budget"
+    # fitted thresholds override the config's, so cond_batch cannot mirror
+    mirrors_config_thresholds = False
+
+    def __init__(self, arg: str = ""):
+        self.mac_budget = float(arg) if arg else None
+        self.thresholds: Optional[Tuple[float, ...]] = None
+
+    def resolve_thresholds(self, thresholds):
+        if self.thresholds is None:
+            raise RuntimeError(
+                "BudgetPolicy has no fitted thresholds: call "
+                "decider.policy.fit(calibration_confidences, mac_prefix) "
+                "after construction (a budget@ config string alone cannot "
+                "fit — fitting needs held-out confidences)")
+        return self.thresholds
+
+    def fit(self, confidences: Sequence[np.ndarray],
+            mac_prefix: Sequence[float],
+            mac_budget: Optional[float] = None,
+            iters: int = 40) -> Tuple[float, ...]:
+        """Calibrate thresholds so mean MACs ≈ mac_budget on ``confidences``."""
+        budget = self.mac_budget if mac_budget is None else mac_budget
+        if budget is None:
+            raise ValueError("no MAC budget given (budget@<float> or fit())")
+        conf = np.stack([np.asarray(c, np.float64) for c in confidences])
+        macs = np.asarray(mac_prefix, np.float64)
+        budget = float(np.clip(budget, macs[0], macs[-1]))
+
+        def avg_macs(q):
+            ths = np.quantile(conf, q, axis=1)
+            ths[-1] = 0.0
+            idx = np.asarray(_first_open_gate(
+                jnp.asarray(conf), ThresholdPolicy().gates(
+                    jnp.asarray(conf), ths)))
+            return float(macs[idx].mean()), tuple(float(t) for t in ths)
+
+        lo, hi = 0.0, 1.0                      # q=0: all exit first; macs min
+        best = avg_macs(0.0)
+        for _ in range(iters):
+            mid = 0.5 * (lo + hi)
+            got, ths = avg_macs(mid)
+            if abs(got - budget) < abs(best[0] - budget):
+                best = (got, ths)
+            if got > budget:                   # too much compute: exit more
+                hi = mid
+            else:
+                lo = mid
+        self.thresholds = best[1]
+        self.fitted_avg_macs = best[0]
+        return self.thresholds
+
+
+# ---------------------------------------------------------------------------
+# calibrators (§5)
+# ---------------------------------------------------------------------------
+
+class Calibrator:
+    """Per-component confidences + correctness → δ̂(ε) thresholds."""
+
+    name = "base"
+
+    def calibrate(self, confidences: Sequence[np.ndarray],
+                  corrects: Sequence[np.ndarray],
+                  epsilon: float) -> CalibrationResult:
+        raise NotImplementedError
+
+    def _run(self, confidences, corrects, epsilon, target):
+        n_m = len(confidences)
+        ths, stars = [], []
+        for m in range(n_m):
+            t, a = threshold_for_epsilon(confidences[m], corrects[m],
+                                         epsilon, target=target)
+            ths.append(0.0 if m == n_m - 1 else t)
+            stars.append(a)
+        return CalibrationResult(tuple(ths), tuple(stars), epsilon)
+
+
+@register_calibrator("self")
+class SelfCalibrator(Calibrator):
+    """The paper's §5 rule: δ_m(ε) targets the component's OWN α*_m − ε.
+
+    Conservative when an early component already matches the cascade: its own
+    α* can sit far above the cascade's accuracy, blocking exits that would
+    cost nothing (the paper's CIFAR-100 ε-gap).
+    """
+
+    name = "self"
+
+    def __init__(self, arg: str = ""):
+        del arg
+
+    def calibrate(self, confidences, corrects, epsilon):
+        return self._run(confidences, corrects, epsilon, target=None)
+
+
+@register_calibrator("final")
+class FinalCalibrator(Calibrator):
+    """Beyond-paper cascade-level rule: every component targets the FINAL
+    component's realized accuracy − ε (the final component at threshold 0,
+    NOT its α* — the max over δ would re-introduce the conservatism this
+    rule removes).  Dominates ``self`` in speedup at equal ε on calibration
+    data."""
+
+    name = "final"
+
+    def __init__(self, arg: str = ""):
+        del arg
+
+    def calibrate(self, confidences, corrects, epsilon):
+        alpha_final = float(np.mean(corrects[-1]))
+        return self._run(confidences, corrects, epsilon, target=alpha_final)
+
+
+# ---------------------------------------------------------------------------
+# the one decision engine
+# ---------------------------------------------------------------------------
+
+def _first_open_gate(confs: jnp.ndarray, gates: jnp.ndarray) -> jnp.ndarray:
+    """THE exit-selection scan: index of the first open gate per sample.
+
+    gates (n_m, ...) bool with gates[-1] all-True; argmax over the component
+    axis returns the first True.  Every exit decision in the repo funnels
+    through this one line.
+    """
+    del confs  # shape companion; kept for symmetry/debuggability
+    return jnp.argmax(gates, axis=0).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class ExitDecision:
+    prediction: jnp.ndarray    # (...,) argmax of the answering component
+    exit_index: jnp.ndarray    # (...,) int32 component that answered
+    confidence: jnp.ndarray    # (...,) its confidence
+    state: Optional[jnp.ndarray] = None   # stateful-measure carry
+
+
+class ExitDecider:
+    """The single, jit-compatible exit-decision implementation.
+
+    Composes a :class:`ConfidenceMeasure` with an :class:`ExitPolicy`;
+    :meth:`decide` consumes per-exit logits (serving / Algorithm 1) and
+    :meth:`exit_indices` consumes precomputed confidences (the vectorized
+    evaluation sweep).  Both funnel through ``_first_open_gate``.
+    """
+
+    def __init__(self, measure, policy="threshold",
+                 thresholds: Optional[Sequence[float]] = None,
+                 use_kernels: bool = False):
+        self.measure = (get_measure(measure) if isinstance(measure, str)
+                        else measure)
+        self.policy = (get_policy(policy) if isinstance(policy, str)
+                       else policy)
+        self.thresholds = tuple(thresholds) if thresholds is not None else None
+        self.use_kernels = use_kernels
+
+    @classmethod
+    def from_config(cls, cfg) -> "ExitDecider":
+        """Resolve a ModelConfig's cascade strings through the registries."""
+        cas = cfg.cascade
+        return cls(measure=cas.confidence, policy=cas.policy,
+                   thresholds=cas.thresholds, use_kernels=cfg.use_kernels)
+
+    def init_state(self, batch: int, n_exits: Optional[int] = None):
+        if n_exits is None:
+            if self.thresholds is None:
+                raise ValueError("n_exits needed when no thresholds are set")
+            n_exits = len(self.thresholds)
+        return self.measure.init_state(n_exits, batch)
+
+    # -- logits path (serving, Algorithm 1) -----------------------------
+    def measure_all(self, logits_list: Sequence[jnp.ndarray]):
+        """(outs, confs) stacked (n_m, ...) via the measure (fused if asked)."""
+        outs, confs = [], []
+        for lg in logits_list:
+            pair = self.measure.fused_kernel(lg) if self.use_kernels else None
+            if pair is None:
+                pair = self.measure(lg)
+            outs.append(pair[0])
+            confs.append(pair[1])
+        return jnp.stack(outs), jnp.stack(confs)
+
+    def decide(self, logits_list: Sequence[jnp.ndarray],
+               thresholds: Optional[Sequence[float]] = None,
+               state=None, batch_uniform: bool = False) -> ExitDecision:
+        """Pick the answering component for each sample.
+
+        ``batch_uniform`` gives Algorithm 1's TPU whole-batch semantics: a
+        component answers only when *every* sample in the batch is confident
+        (the ``cond_batch`` skip condition).  ``state`` carries stateful
+        measures (patience streaks) across decode steps.
+        """
+        outs, confs = self.measure_all(logits_list)
+        ths = self.policy.resolve_thresholds(
+            self.thresholds if thresholds is None else tuple(thresholds))
+        gates = self.policy.gates(confs, ths)
+        if self.measure.stateful:
+            streak = (state if state is not None
+                      else self.measure.init_state(gates.shape[0],
+                                                   int(np.prod(
+                                                       gates.shape[1:]))))
+            streak = jnp.where(gates, streak.reshape(gates.shape) + 1, 0)
+            gates = (streak >= self.measure.patience_k).at[-1].set(True)
+            state = streak
+        if batch_uniform:
+            reduce_axes = tuple(range(1, gates.ndim))
+            uniform = jnp.all(gates, axis=reduce_axes, keepdims=True)
+            gates = jnp.broadcast_to(uniform, gates.shape).at[-1].set(True)
+        idx = _first_open_gate(confs, gates)
+        pred = jnp.take_along_axis(outs, idx[None], axis=0)[0]
+        conf = jnp.take_along_axis(confs, idx[None], axis=0)[0]
+        return ExitDecision(pred, idx, conf, state)
+
+    # -- precomputed-confidence path (evaluation sweep) ------------------
+    def exit_indices(self, confidences: Sequence[np.ndarray],
+                     thresholds: Optional[Sequence[float]] = None
+                     ) -> np.ndarray:
+        """Exit component per sample from precomputed confidences (n_m, N).
+
+        Stateful measures (patience) depend on decode order and have no
+        precomputed-confidence equivalent — use :meth:`decide` step by step.
+        """
+        if self.measure.stateful:
+            raise NotImplementedError(
+                f"measure {self.measure.name!r} is stateful; exit_indices "
+                "cannot reproduce its decode-time gating — drive decide() "
+                "instead")
+        confs = jnp.asarray(np.stack([np.asarray(c) for c in confidences]))
+        ths = self.policy.resolve_thresholds(
+            self.thresholds if thresholds is None else tuple(thresholds))
+        gates = self.policy.gates(confs, ths)
+        return np.asarray(_first_open_gate(confs, gates))

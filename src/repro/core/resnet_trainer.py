@@ -17,10 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.calibration import calibrate_thresholds
-from repro.core.cascade import CascadeEvalResult, cascade_evaluate
-from repro.core.confidence import softmax_outputs
+from repro.core.cascade import CascadeEvalResult, sweep_epsilons
 from repro.core.macs import resnet_component_macs
+from repro.core.policy import get_measure
 from repro.core.training import (Phase, backtrack_training_plan, cross_entropy,
                                  l2_loss)
 from repro.data.synth_images import SynthImageDataset
@@ -112,12 +111,18 @@ def train_backtrack(model: CIResNet, train: SynthImageDataset,
 
 
 def collect_outputs(model: CIResNet, params, state,
-                    data: SynthImageDataset, batch_size: int = 256):
-    """Per-component (confidence, prediction, correct) over a dataset."""
+                    data: SynthImageDataset, batch_size: int = 256,
+                    measure="softmax_max"):
+    """Per-component (confidence, prediction, correct) over a dataset.
+
+    ``measure`` is a confidence-measure registry spec (or instance); the
+    default is the paper's softmax-max δ."""
+    m_fn = get_measure(measure) if isinstance(measure, str) else measure
+
     @jax.jit
     def fwd(x):
         logits, _ = model.apply(params, state, x, train=False)
-        outs = [softmax_outputs(lg) for lg in logits]
+        outs = [m_fn(lg) for lg in logits]
         return ([o for o, _ in outs], [d for _, d in outs])
 
     n = len(data)
@@ -139,16 +144,19 @@ def collect_outputs(model: CIResNet, params, state,
 def evaluate_tradeoff(model: CIResNet, params, state,
                       cal_data: SynthImageDataset,
                       test_data: SynthImageDataset,
-                      epsilons, n_classes: int) -> List[Tuple[float, CascadeEvalResult]]:
-    """ε-sweep: calibrate on cal_data, evaluate on test_data (paper §5/§6.2)."""
+                      epsilons, n_classes: int,
+                      measure="softmax_max",
+                      calibrator="self") -> List[Tuple[float, CascadeEvalResult]]:
+    """ε-sweep: calibrate on cal_data, evaluate on test_data (paper §5/§6.2).
+
+    ``measure`` / ``calibrator`` are registry specs, so any registered
+    confidence measure or calibration rule runs through the same sweep."""
     mac_prefix = resnet_component_macs(model.n, n_classes,
                                        enhance_dim=model.enhance_dim)
-    conf_c, _, corr_c = collect_outputs(model, params, state, cal_data)
-    conf_t, pred_t, _ = collect_outputs(model, params, state, test_data)
-    out = []
-    for eps in epsilons:
-        cal = calibrate_thresholds(conf_c, corr_c, eps)
-        res = cascade_evaluate(conf_t, pred_t, test_data.labels, mac_prefix,
-                               cal.thresholds)
-        out.append((eps, res))
-    return out
+    conf_c, _, corr_c = collect_outputs(model, params, state, cal_data,
+                                        measure=measure)
+    conf_t, pred_t, _ = collect_outputs(model, params, state, test_data,
+                                        measure=measure)
+    sweep = sweep_epsilons(conf_c, corr_c, conf_t, pred_t, test_data.labels,
+                           mac_prefix, epsilons, calibrator=calibrator)
+    return [(eps, res) for eps, _cal, res in sweep]

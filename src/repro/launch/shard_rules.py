@@ -38,6 +38,10 @@ def _spec(ndim: int, **placed) -> P:
     entries = [None] * ndim
     for pos, ax in placed.items():
         if ax is not None:
+            # canonicalize 1-tuples to the bare axis name (newer jax does
+            # this inside PartitionSpec; 0.4.37 keeps the tuple as-is)
+            if isinstance(ax, tuple) and len(ax) == 1:
+                ax = ax[0]
             entries[int(pos)] = ax
     return P(*entries)
 

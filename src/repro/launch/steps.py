@@ -13,11 +13,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.policy import ExitDecider
 from repro.core.training import cascade_loss
 from repro.models.model import CascadeModel, extra_input_shapes
 from repro.optim import adamw
 from repro.optim.optimizer import Optimizer, apply_updates
-from repro.serving.engine import select_exit
 
 
 def make_optimizer(cfg: ModelConfig) -> Optimizer:
@@ -42,18 +42,30 @@ def make_train_step(model: CascadeModel, cfg: ModelConfig,
 
 
 def make_prefill_step(model: CascadeModel, cfg: ModelConfig):
+    decider = ExitDecider.from_config(cfg)
+
     def prefill_step(params, tokens, cache, extra):
         logits, cache = model.prefill(params, tokens, cache, extra)
-        tok, exit_idx, conf = select_exit(logits, cfg.cascade.thresholds)
-        return tok, exit_idx, conf, cache
+        d = decider.decide(logits)
+        return d.prediction, d.exit_index, d.confidence, cache
     return prefill_step
 
 
 def make_serve_step(model: CascadeModel, cfg: ModelConfig):
+    decider = ExitDecider.from_config(cfg)
+    if decider.measure.stateful:
+        # the fixed (params, token, t, cache, extra) signature the dry-run
+        # lowers has no slot for streak state; silently re-initializing it
+        # every step would disable early exit for patience@k
+        raise NotImplementedError(
+            f"measure {decider.measure.name!r} is stateful; the launch serve "
+            "step cannot thread its decode state — serve stateful measures "
+            "through CascadeServingEngine instead")
+
     def serve_step(params, token, t, cache, extra):
         logits, cache = model.decode_step(params, token, t, cache, extra)
-        tok, exit_idx, conf = select_exit(logits, cfg.cascade.thresholds)
-        return tok, exit_idx, conf, cache
+        d = decider.decide(logits)
+        return d.prediction, d.exit_index, d.confidence, cache
     return serve_step
 
 

@@ -351,10 +351,20 @@ class CascadeModel:
         new_segs.append(nc)
         logits.append(self.exit_logits(params, 0, h)[:, 0, :])
         done = None
+        # The skip condition must mirror the ExitDecider's gates exactly —
+        # otherwise a skipped segment's (shallow-feature) logits could be
+        # selected as the answer.  Instantaneous confidence vs the config
+        # thresholds only mirrors policies that gate on exactly those
+        # thresholds (policy.mirrors_config_thresholds) with a stateless
+        # measure; patience streaks and BudgetPolicy-fitted thresholds live
+        # in the decider, so those configs run every segment.
+        can_skip = (cfg.cascade.exit_mode == "cond_batch"
+                    and _exit_policy(cfg).mirrors_config_thresholds
+                    and not _exit_measure(cfg).stateful)
         for si in range(1, self.n_exits):
             seg_cache = cache["segments"][si]
-            if cfg.cascade.exit_mode == "cond_batch":
-                conf = _softmax_conf(logits[-1])
+            if can_skip:
+                conf = _exit_confidence(cfg, logits[-1])
                 newly_done = conf >= thresholds[si - 1]
                 done = newly_done if done is None else (done | newly_done)
                 all_done = jnp.all(done)
@@ -377,12 +387,27 @@ class CascadeModel:
         return logits, {"kpos": kpos, "segments": new_segs}
 
 
-def _softmax_conf(logits):
-    """δ = max softmax (Def. 3.3) computed stably without full softmax."""
-    x = logits.astype(jnp.float32)
-    m = jnp.max(x, axis=-1)
-    lse = m + jnp.log(jnp.sum(jnp.exp(x - m[..., None]), axis=-1))
-    return jnp.exp(m - lse)
+def _exit_measure(cfg):
+    from repro.core.policy import get_measure
+    return get_measure(cfg.cascade.confidence)
+
+
+def _exit_policy(cfg):
+    from repro.core.policy import get_policy
+    return get_policy(cfg.cascade.policy)
+
+
+def _exit_confidence(cfg, logits):
+    """Confidence for the cond_batch skip condition via the SAME registered
+    measure — and the same fused/reference path — the decider gates on, so
+    calibrated thresholds and the skip criterion share one scale and one
+    numerical implementation."""
+    measure = _exit_measure(cfg)
+    if cfg.use_kernels:
+        pair = measure.fused_kernel(logits)
+        if pair is not None:
+            return pair[1]
+    return measure(logits)[1]
 
 
 def _prefill_kpos(S: int, W: int) -> np.ndarray:

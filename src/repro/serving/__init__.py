@@ -1,4 +1,4 @@
-from repro.serving.engine import CascadeServingEngine, Request, select_exit
+from repro.serving.engine import CascadeServingEngine, Request
 from repro.serving.batching import DepthCompactor
 
-__all__ = ["CascadeServingEngine", "Request", "select_exit", "DepthCompactor"]
+__all__ = ["CascadeServingEngine", "Request", "DepthCompactor"]

@@ -7,20 +7,25 @@ The engine accounts compute analytically in MACs (the paper's own metric,
 whether deeper segments were actually skipped (cond_batch) or merely
 unselected (select mode), yielding the measured-speedup numbers for the
 beyond-paper benchmarks.
+
+Exit decisions route through the shared :class:`repro.core.policy.ExitDecider`
+resolved from the config's ``cascade.confidence`` / ``cascade.policy``
+registry strings — swapping the measure (entropy, margin, patience@k, a
+custom registered one) requires no engine change.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.confidence import softmax_outputs
 from repro.core.macs import segment_macs_per_token
+from repro.core.policy import ExitDecider
 from repro.models.model import CascadeModel, extra_input_shapes
 from repro.serving.batching import DepthCompactor
 from repro.utils import get_logger
@@ -45,36 +50,6 @@ class _Slot:
     done: bool = True
 
 
-def select_exit(logits_list: Sequence[jnp.ndarray],
-                thresholds: Sequence[float]):
-    """Per-sequence Algorithm-1 selection over precomputed exit logits.
-
-    logits_list: n_exits × (B, V).  Returns (token (B,), exit_idx (B,),
-    conf (B,)) — the first exit whose δ ≥ δ̂ answers; the last always does.
-    """
-    n = len(logits_list)
-    token = None
-    exit_idx = None
-    conf_sel = None
-    taken = None
-    for m, lg in enumerate(logits_list):
-        out, delta = softmax_outputs(lg)
-        ok = (delta >= thresholds[m]) if m < n - 1 else jnp.ones_like(
-            delta, bool)
-        if token is None:
-            token = out
-            exit_idx = jnp.zeros_like(out, dtype=jnp.int32)
-            conf_sel = delta
-            taken = ok
-        else:
-            fresh = jnp.logical_and(ok, jnp.logical_not(taken))
-            token = jnp.where(fresh, out, token)
-            exit_idx = jnp.where(fresh, m, exit_idx)
-            conf_sel = jnp.where(fresh, delta, conf_sel)
-            taken = jnp.logical_or(taken, ok)
-    return token, exit_idx, conf_sel
-
-
 class CascadeServingEngine:
     """Multi-lane batched decode with cascade early exit.
 
@@ -93,18 +68,23 @@ class CascadeServingEngine:
         self.n_lanes = n_lanes
         self.cache_len = cache_len
         self.compactor = DepthCompactor(n_lanes, cfg.cascade.n_components)
+        self.decider = ExitDecider.from_config(cfg)
         self.lanes = []
         for _ in range(n_lanes):
             self.lanes.append({
                 "cache": model.init_cache(lane_batch, cache_len),
                 "slots": [_Slot() for _ in range(lane_batch)],
                 "pos": 0,
+                "policy_state": self.decider.init_state(lane_batch),
             })
         self.queue: List[Request] = []
         self.finished: Dict[int, dict] = {}
         self.mac_prefix = segment_macs_per_token(cfg, cache_len)
         self._macs_spent = 0.0
         self._macs_dense = 0.0
+        # population prior for a new request's exit depth, warmed by the
+        # prefill exits actually observed (the compactor's depth prediction).
+        self._depth_prior = (cfg.cascade.n_components - 1) / 2
         self._prefill = jax.jit(self._prefill_impl)
         self._decode = jax.jit(self._decode_impl)
 
@@ -112,38 +92,64 @@ class CascadeServingEngine:
     def _prefill_impl(self, params, tokens, cache, extra):
         return self.model.prefill(params, tokens, cache, extra)
 
-    def _decode_impl(self, params, token, t, cache, extra):
+    def _decode_impl(self, params, token, t, cache, extra, policy_state):
         logits, cache = self.model.decode_step(params, token, t, cache, extra)
-        tok, exit_idx, conf = select_exit(logits,
-                                          self.cfg.cascade.thresholds)
-        return tok, exit_idx, conf, cache
+        d = self.decider.decide(logits, state=policy_state)
+        return d.prediction, d.exit_index, d.confidence, cache, d.state
 
     # -- public API -----------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _admit(self):
-        for lane_id, lane in enumerate(self.lanes):
-            for si, slot in enumerate(lane["slots"]):
-                if slot.done and self.queue:
-                    free = [lane_id]
-                    # depth prediction: mid-depth until observed
-                    req = self.queue.pop(0)
-                    slot.request = req
-                    slot.generated = []
-                    slot.exit_depths = []
-                    slot.done = False
-                    # prefill this slot: run a batch-1 prefill into the lane
-                    # cache is shared per-lane, so we prefill the whole lane
-                    # when admission changes (simple + correct).
-                    lane["dirty"] = True
+    def _predict_depth(self, req: Request) -> float:
+        """Expected exit depth for an incoming request: an explicit hint in
+        ``req.extra["predicted_depth"]`` (e.g. from an earlier turn's prefill
+        exit) wins; otherwise the engine's running prior over observed
+        prefill exits."""
+        if req.extra and "predicted_depth" in req.extra:
+            return float(req.extra["predicted_depth"])
+        return self._depth_prior
 
-    def _lane_prefill(self, lane):
-        """(Re)prefill a lane: pad prompts to a common length."""
-        cfg = self.cfg
+    def _admit(self):
+        while self.queue:
+            free = [i for i, lane in enumerate(self.lanes)
+                    if any(s.done for s in lane["slots"])]
+            if not free:
+                break
+            req = self.queue.pop(0)
+            lane_id = self.compactor.assign(self._predict_depth(req), free)
+            lane = self.lanes[lane_id]
+            slot = next(s for s in lane["slots"] if s.done)
+            slot.request = req
+            slot.generated = []
+            slot.exit_depths = []
+            slot.done = False
+            # cache is shared per-lane, so we prefill the whole lane
+            # when admission changes (simple + correct).
+            lane["dirty"] = True
+
+    def _finish_if_done(self, s: _Slot, lane, lane_id: int):
+        if (len(s.generated) >= s.request.max_new_tokens
+                or lane["pos"] >= self.cache_len - 1):
+            s.done = True
+            self.finished[s.request.rid] = {
+                "tokens": list(s.generated),
+                "exit_depths": list(s.exit_depths),
+                "lane": lane_id,
+            }
+
+    def _lane_prefill(self, lane, lane_id: int):
+        """(Re)prefill a lane: pad contexts to a common length.
+
+        In-flight slots re-prefill with their full context (prompt + tokens
+        generated so far) so admission into a sibling slot never truncates a
+        live sequence; the token predicted off that context is their normal
+        next-step continuation."""
         slots = lane["slots"]
-        prompts = [s.request.prompt if not s.done else
-                   np.zeros((1,), np.int32) for s in slots]
+        prompts = [np.concatenate([s.request.prompt,
+                                   np.asarray(s.generated, np.int32)])
+                   if not s.done else np.zeros((1,), np.int32)
+                   for s in slots]
         S = max(len(p) for p in prompts)
         S = max(S, 2)
         toks = np.zeros((self.lane_batch, S), np.int32)
@@ -155,13 +161,26 @@ class CascadeServingEngine:
                                       lane["cache"], extra)
         lane["cache"] = cache
         lane["pos"] = S
-        tok, exit_idx, conf = select_exit(logits, cfg.cascade.thresholds)
-        tok = np.asarray(tok)
-        exit_idx = np.asarray(exit_idx)
+        decision = self.decider.decide(logits)
+        # re-prefill restarts stateful-measure streaks for the lane, but the
+        # prefill decision itself counts as the streak's first step
+        lane["policy_state"] = (decision.state if decision.state is not None
+                                else self.decider.init_state(self.lane_batch))
+        tok = np.asarray(decision.prediction)
+        exit_idx = np.asarray(decision.exit_index)
         for i, s in enumerate(slots):
             if not s.done:
+                if not s.generated:
+                    # warm the admission depth prior with the FIRST prefill
+                    # exit only (re-prefills of in-flight slots don't
+                    # re-count toward the prior)
+                    self._depth_prior = (0.8 * self._depth_prior
+                                         + 0.2 * float(exit_idx[i]))
                 s.generated.append(int(tok[i]))
                 s.exit_depths.append(int(exit_idx[i]))
+                # the prefill token counts toward max_new_tokens like any
+                # decode tick — an in-flight slot near its limit may finish
+                self._finish_if_done(s, lane, lane_id)
         lane["dirty"] = False
 
     def _extra(self, batch):
@@ -177,15 +196,15 @@ class CascadeServingEngine:
             if all(s.done for s in lane["slots"]):
                 continue
             if lane.get("dirty"):
-                self._lane_prefill(lane)
+                self._lane_prefill(lane, lane_id)
                 continue
             last = [s.generated[-1] if not s.done else 0
                     for s in lane["slots"]]
             token = jnp.asarray(np.array(last, np.int32)[:, None])
             t = lane["pos"]
-            tok, exit_idx, conf, cache = self._decode(
+            tok, exit_idx, conf, cache, lane["policy_state"] = self._decode(
                 self.params, token, jnp.asarray(t, jnp.int32), lane["cache"],
-                self._extra(self.lane_batch))
+                self._extra(self.lane_batch), lane["policy_state"])
             lane["cache"] = cache
             lane["pos"] = t + 1
             tok = np.asarray(tok)
@@ -205,13 +224,7 @@ class CascadeServingEngine:
                     continue
                 s.generated.append(int(tok[i]))
                 s.exit_depths.append(int(exit_idx[i]))
-                if (len(s.generated) >= s.request.max_new_tokens
-                        or lane["pos"] >= self.cache_len - 1):
-                    s.done = True
-                    self.finished[s.request.rid] = {
-                        "tokens": list(s.generated),
-                        "exit_depths": list(s.exit_depths),
-                    }
+                self._finish_if_done(s, lane, lane_id)
 
     def run(self, max_ticks: int = 1000):
         for _ in range(max_ticks):

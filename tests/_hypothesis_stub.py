@@ -1,0 +1,59 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this test suite.
+
+The container image does not ship hypothesis and the repo cannot add
+dependencies; conftest.py installs this module as ``hypothesis`` (and
+``hypothesis.strategies``) into ``sys.modules`` only when the real package is
+missing.  It supports exactly what the tests use: ``@settings(max_examples=,
+deadline=)``, ``@given(...)`` with positional strategies, and the
+``integers`` / ``floats`` / ``sampled_from`` strategies.  Examples are drawn
+from a fixed-seed RNG so runs are deterministic.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def sampled_from(options):
+    opts = list(options)
+    return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))])
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        def runner():
+            n = getattr(runner, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                fn(*[s.draw(rng) for s in strategies])
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return deco

@@ -1,4 +1,5 @@
 import os
+import sys
 
 # Keep smoke tests on 1 device (the dry-run, and ONLY the dry-run, forces 512).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -6,3 +7,13 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+try:  # the image may lack hypothesis; fall back to the deterministic stub
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub
+    _hypothesis_stub.strategies = _hypothesis_stub

@@ -1,0 +1,359 @@
+"""The unified exit-policy layer: registries, measures, policies,
+calibrators, and equivalence of the single ExitDecider against the legacy
+per-site implementations it replaced."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.cascade import cascade_evaluate, cascade_infer_sequential
+from repro.core.confidence import softmax_outputs
+from repro.core.policy import (BudgetPolicy, ExitDecider, ThresholdPolicy,
+                               available_calibrators, available_measures,
+                               available_policies, get_calibrator,
+                               get_measure, get_policy, register_measure,
+                               ConfidenceMeasure)
+
+
+def _random_logits(n_exits=3, batch=8, classes=32, seed=0, scale=(1, 3, 8)):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal((batch, classes)) * s,
+                        jnp.float32) for s in scale[:n_exits]]
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert {"softmax_max", "entropy", "margin",
+            "patience"} <= set(available_measures())
+    assert {"threshold", "budget"} <= set(available_policies())
+    assert {"self", "final"} <= set(available_calibrators())
+
+
+def test_registry_roundtrip_from_config_strings():
+    cfg = reduced(get_config("qwen2.5-3b")).with_cascade(
+        confidence="margin", policy="threshold", calibrator="final")
+    dec = ExitDecider.from_config(cfg)
+    assert dec.measure.name == "margin"
+    assert dec.policy.name == "threshold"
+    assert dec.thresholds == cfg.cascade.thresholds
+    assert get_calibrator(cfg.cascade.calibrator).name == "final"
+    # configs stay frozen/hashable with the new fields
+    hash(cfg)
+
+
+def test_unknown_names_raise():
+    with pytest.raises(KeyError):
+        get_measure("no_such_measure")
+    with pytest.raises(KeyError):
+        get_policy("no_such_policy")
+    with pytest.raises(KeyError):
+        get_calibrator("no_such_rule")
+
+
+def test_custom_measure_registration():
+    @register_measure("always_sure")
+    class AlwaysSure(ConfidenceMeasure):
+        name = "always_sure"
+
+        def __init__(self, arg=""):
+            pass
+
+        def __call__(self, logits):
+            out = jnp.argmax(logits, axis=-1)
+            return out, jnp.ones(logits.shape[:-1], jnp.float32)
+
+    dec = ExitDecider("always_sure", thresholds=(0.99, 0.99, 0.0))
+    d = dec.decide(_random_logits())
+    assert int(np.max(np.asarray(d.exit_index))) == 0
+
+
+# ---------------------------------------------------------------------------
+# measure semantics
+# ---------------------------------------------------------------------------
+
+def test_margin_semantics():
+    m = get_measure("margin")
+    peaked = jnp.asarray([[8.0, 0.0, 0.0]])
+    close = jnp.asarray([[1.0, 0.98, -5.0]])
+    out_p, c_p = m(peaked)
+    out_c, c_c = m(close)
+    assert int(out_p[0]) == 0 and int(out_c[0]) == 0
+    assert float(c_p[0]) > float(c_c[0])
+    # margin = p1 - p2 exactly
+    p = np.asarray(jax.nn.softmax(close, -1))[0]
+    top = np.sort(p)[-2:]
+    assert float(c_c[0]) == pytest.approx(top[1] - top[0], rel=1e-5)
+
+
+def test_entropy_measure_in_unit_interval_and_ordering():
+    m = get_measure("entropy")
+    peaked = jnp.asarray([[10.0, 0.0, 0.0, 0.0]])
+    flat = jnp.asarray([[0.1, 0.0, 0.05, 0.02]])
+    _, c_p = m(peaked)
+    _, c_f = m(flat)
+    assert 0.0 < float(c_f[0]) < float(c_p[0]) <= 1.0
+
+
+def test_patience_requires_k_consecutive_confident_steps():
+    dec = ExitDecider("patience@3", thresholds=(0.0, 0.0, 0.0))
+    logits = _random_logits()
+    state = dec.init_state(8)
+    exits = []
+    for _ in range(4):
+        d = dec.decide(logits, state=state)
+        state = d.state
+        exits.append(int(np.max(np.asarray(d.exit_index))))
+    # steps 1-2: streak < 3 -> last component answers; step 3 on: exit 0
+    assert exits == [2, 2, 0, 0]
+
+
+def test_patience_streak_resets_when_gate_closes():
+    dec = ExitDecider("patience@2", thresholds=(0.9, 0.0, 0.0))
+    confident = [jnp.asarray([[12.0, 0.0]]), jnp.asarray([[12.0, 0.0]]),
+                 jnp.asarray([[12.0, 0.0]])]
+    unsure = [jnp.asarray([[0.1, 0.0]]), jnp.asarray([[12.0, 0.0]]),
+              jnp.asarray([[12.0, 0.0]])]
+    state = dec.init_state(1)
+    d = dec.decide(confident, state=state)          # streak 1 -> no early
+    assert int(d.exit_index[0]) != 0
+    d = dec.decide(unsure, state=d.state)           # gate closed -> reset
+    d = dec.decide(confident, state=d.state)        # streak 1 again
+    assert int(d.exit_index[0]) != 0
+    d = dec.decide(confident, state=d.state)        # streak 2 -> exit 0
+    assert int(d.exit_index[0]) == 0
+
+
+def test_fused_kernel_path_matches_reference():
+    logits = _random_logits(batch=5, classes=300)
+    ref = ExitDecider("softmax_max", thresholds=(0.5, 0.5, 0.0))
+    fused = ExitDecider("softmax_max", thresholds=(0.5, 0.5, 0.0),
+                        use_kernels=True)
+    a = ref.decide(logits)
+    b = fused.decide(logits)
+    np.testing.assert_array_equal(np.asarray(a.prediction),
+                                  np.asarray(b.prediction))
+    np.testing.assert_array_equal(np.asarray(a.exit_index),
+                                  np.asarray(b.exit_index))
+    np.testing.assert_allclose(np.asarray(a.confidence),
+                               np.asarray(b.confidence), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+def test_threshold_policy_last_gate_always_open():
+    pol = ThresholdPolicy()
+    confs = jnp.zeros((3, 4))
+    gates = pol.gates(confs, (0.9, 0.9, 0.9))
+    assert bool(jnp.all(gates[-1]))
+    assert not bool(jnp.any(gates[:-1]))
+
+
+def test_budget_policy_hits_mac_budget():
+    rng = np.random.default_rng(3)
+    confs = [rng.random(4000) for _ in range(3)]
+    mac_prefix = [1.0, 2.0, 4.0]
+    for budget in (1.3, 2.0, 3.1):
+        pol = BudgetPolicy("")
+        pol.fit(confs, mac_prefix, mac_budget=budget)
+        dec = ExitDecider("softmax_max", policy=pol)
+        idx = dec.exit_indices(confs)
+        realized = float(np.asarray(mac_prefix)[idx].mean())
+        assert realized == pytest.approx(budget, rel=0.05)
+    # infeasible budgets clamp to the cascade's range
+    pol = BudgetPolicy("")
+    pol.fit(confs, mac_prefix, mac_budget=100.0)
+    idx = dec_idx = ExitDecider("softmax_max", policy=pol).exit_indices(confs)
+    assert float(np.asarray(mac_prefix)[idx].mean()) <= mac_prefix[-1]
+
+
+def test_budget_policy_spec_string():
+    pol = get_policy("budget@2.5")
+    assert pol.mac_budget == 2.5
+    with pytest.raises(RuntimeError):
+        pol.resolve_thresholds((0.5, 0.0))   # must fit() first
+
+
+# ---------------------------------------------------------------------------
+# equivalence against the legacy implementations
+# ---------------------------------------------------------------------------
+
+def _legacy_select_exit(logits_list, thresholds):
+    """The serving engine's deleted select_exit, verbatim (reference pin)."""
+    n = len(logits_list)
+    token = exit_idx = conf_sel = taken = None
+    for m, lg in enumerate(logits_list):
+        out, delta = softmax_outputs(lg)
+        ok = (delta >= thresholds[m]) if m < n - 1 else jnp.ones_like(
+            delta, bool)
+        if token is None:
+            token, conf_sel, taken = out, delta, ok
+            exit_idx = jnp.zeros_like(out, dtype=jnp.int32)
+        else:
+            fresh = jnp.logical_and(ok, jnp.logical_not(taken))
+            token = jnp.where(fresh, out, token)
+            exit_idx = jnp.where(fresh, m, exit_idx)
+            conf_sel = jnp.where(fresh, delta, conf_sel)
+            taken = jnp.logical_or(taken, ok)
+    return token, exit_idx, conf_sel
+
+
+def test_exit_decider_matches_legacy_select_exit():
+    for seed in range(5):
+        logits = _random_logits(seed=seed, scale=(1, 2, 6))
+        ths = (0.3, 0.5, 0.0)
+        tok, idx, conf = _legacy_select_exit(logits, ths)
+        d = ExitDecider("softmax_max", thresholds=ths).decide(logits)
+        np.testing.assert_array_equal(np.asarray(tok),
+                                      np.asarray(d.prediction))
+        np.testing.assert_array_equal(np.asarray(idx),
+                                      np.asarray(d.exit_index))
+        np.testing.assert_allclose(np.asarray(conf),
+                                   np.asarray(d.confidence), rtol=1e-6)
+
+
+def test_sequential_inference_matches_legacy_batch_uniform_semantics():
+    """cascade_infer_sequential keeps the old batch-uniform behaviour: a
+    component answers only when ALL samples clear its threshold."""
+    c0 = jnp.asarray([[10.0, 0.0], [0.1, 0.0]])       # sample 1 unsure
+    c1 = jnp.asarray([[0.0, 10.0], [0.0, 10.0]])      # all confident
+    c2 = jnp.asarray([[5.0, 0.0], [5.0, 0.0]])
+    fns = [lambda x, s, lg=lg: (lg, s) for lg in (c0, c1, c2)]
+    out, conf = cascade_infer_sequential(fns, (0.9, 0.9, 0.0),
+                                         jnp.zeros((2, 4)))
+    # component 0 is blocked by sample 1 -> everyone answers at component 1
+    np.testing.assert_array_equal(np.asarray(out), [1, 1])
+    _, d1 = softmax_outputs(c1)
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(d1), rtol=1e-6)
+
+
+def test_cascade_evaluate_forces_last_threshold_zero():
+    """A nonzero final threshold must not change the exit accounting (the
+    final component always answers), matching cascade_infer_sequential."""
+    N = 4
+    labels = np.zeros(N, np.int64)
+    conf = [np.array([.95, .1, .1, .1]), np.array([.1, .95, .1, .1]),
+            np.full(N, 0.5)]                      # final conf BELOW 0.9
+    preds = [labels.copy()] * 3
+    res = cascade_evaluate(conf, preds, labels, [1.0, 2.0, 3.0],
+                           (0.9, 0.9, 0.9))
+    np.testing.assert_allclose(res.exit_fractions, [1 / 4, 1 / 4, 2 / 4])
+    assert res.thresholds[-1] == 0.0
+
+
+def test_eval_and_decide_paths_agree():
+    """The two ExitDecider entry points (logits vs precomputed confidences)
+    pick identical exits."""
+    logits = _random_logits(seed=7)
+    ths = (0.4, 0.6, 0.0)
+    dec = ExitDecider("softmax_max", thresholds=ths)
+    d = dec.decide(logits)
+    confs = [np.asarray(softmax_outputs(lg)[1]) for lg in logits]
+    idx = dec.exit_indices(confs, ths)
+    np.testing.assert_array_equal(np.asarray(d.exit_index), idx)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: depth-compacted admission
+# ---------------------------------------------------------------------------
+
+def test_depth_compactor_routes_admission_by_predicted_depth():
+    from repro.models.model import build_model
+    from repro.serving import CascadeServingEngine, Request
+
+    cfg = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = CascadeServingEngine(cfg, model, params, lane_batch=2, n_lanes=2,
+                               cache_len=32)
+    rng = np.random.default_rng(0)
+    # lane 0 targets shallow traffic (band center 0.5), lane 1 deep (1.5)
+    for rid, depth in ((0, 0.2), (1, 1.8), (2, 0.2), (3, 1.8)):
+        eng.submit(Request(rid=rid, prompt=rng.integers(
+            0, cfg.vocab_size, 6).astype(np.int32), max_new_tokens=3,
+            extra={"predicted_depth": depth}))
+    eng.run(100)
+    assert len(eng.finished) == 4
+    lanes = {rid: r["lane"] for rid, r in eng.finished.items()}
+    assert lanes[0] == lanes[2] and lanes[1] == lanes[3]
+    assert lanes[0] != lanes[1]
+
+
+def test_mid_flight_admission_preserves_live_sequence():
+    """Admitting into a lane re-prefills it; in-flight slots must continue
+    from their FULL context (prompt + generated), so their greedy decode is
+    identical to an undisturbed run."""
+    from repro.models.model import build_model
+    from repro.serving import CascadeServingEngine, Request
+
+    cfg = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    prompt0 = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    prompt1 = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+
+    def run(disturb):
+        eng = CascadeServingEngine(cfg, model, params, lane_batch=2,
+                                   n_lanes=1, cache_len=48)
+        eng.submit(Request(rid=0, prompt=prompt0.copy(), max_new_tokens=8))
+        for _ in range(4):
+            eng.step()
+        if disturb:
+            eng.submit(Request(rid=1, prompt=prompt1.copy(),
+                               max_new_tokens=2))
+        eng.run(100)
+        return eng.finished[0]["tokens"]
+
+    solo = run(disturb=False)
+    disturbed = run(disturb=True)
+    assert len(solo) == 8
+    assert solo == disturbed
+
+
+def test_admission_at_token_limit_respects_max_new_tokens():
+    """A lane re-prefill appends one token to in-flight slots; a slot that
+    reaches max_new_tokens on that tick must finish there, not overshoot."""
+    from repro.models.model import build_model
+    from repro.serving import CascadeServingEngine, Request
+
+    cfg = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    eng = CascadeServingEngine(cfg, model, params, lane_batch=2, n_lanes=1,
+                               cache_len=48)
+    eng.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, 6).astype(np.int32), max_new_tokens=3))
+    eng.step()   # prefill -> token 1
+    eng.step()   # decode  -> token 2
+    eng.submit(Request(rid=1, prompt=rng.integers(
+        0, cfg.vocab_size, 4).astype(np.int32), max_new_tokens=2))
+    eng.run(50)  # admission re-prefill appends rid 0's 3rd (= last) token
+    assert len(eng.finished[0]["tokens"]) == 3
+    assert len(eng.finished[1]["tokens"]) == 2
+
+
+def test_engine_patience_measure_decodes():
+    from repro.models.model import build_model
+    from repro.serving import CascadeServingEngine, Request
+
+    cfg = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
+    cfg = cfg.with_cascade(confidence="patience@2", thresholds=(0.0, 0.0))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = CascadeServingEngine(cfg, model, params, lane_batch=2, n_lanes=1,
+                               cache_len=32)
+    rng = np.random.default_rng(0)
+    eng.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, 6).astype(np.int32), max_new_tokens=4))
+    out = eng.run(100)
+    assert 0 in out and len(out[0]["tokens"]) == 4
+    # threshold 0 gates are always open, so after the first decode step the
+    # streak is satisfied and every later step exits at component 0
+    assert out[0]["exit_depths"][-1] == 0

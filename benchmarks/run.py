@@ -3,23 +3,48 @@ beyond-paper LLM-cascade and kernel benches.
 
 Prints ``name,us_per_call,derived`` CSV (and tees a copy to
 results/bench.csv when results/ exists).
+
+    python benchmarks/run.py [--quick] [--only llm_cascade,fig3]
+
+``--quick`` shrinks workloads (CI smoke lanes); ``--only`` selects benches.
 """
+import argparse
+import inspect
 import os
 import sys
 import traceback
 
+# runnable as `python benchmarks/run.py` from the repo root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI smoke lanes)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench names to run")
+    args = ap.parse_args()
+
     from benchmarks import (bench_table2, bench_fig3, bench_fig4,
                             bench_llm_cascade, bench_kernels, bench_ablation)
     mods = [("table2", bench_table2), ("fig3", bench_fig3),
             ("fig4", bench_fig4), ("ablation", bench_ablation),
             ("llm_cascade", bench_llm_cascade), ("kernels", bench_kernels)]
+    if args.only:
+        wanted = {w.strip() for w in args.only.split(",") if w.strip()}
+        unknown = wanted - {n for n, _ in mods}
+        if unknown:
+            sys.exit(f"unknown bench(es): {sorted(unknown)}")
+        mods = [(n, m) for n, m in mods if n in wanted]
     lines = ["name,us_per_call,derived"]
     failed = False
     for name, mod in mods:
         try:
-            for row_name, us, derived in mod.run():
+            kwargs = {}
+            if "quick" in inspect.signature(mod.run).parameters:
+                kwargs["quick"] = args.quick
+            for row_name, us, derived in mod.run(**kwargs):
                 lines.append(f"{row_name},{us:.1f},{derived}")
         except Exception as e:
             failed = True

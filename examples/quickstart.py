@@ -56,7 +56,24 @@ def main():
     print(f"decode step at t={t}: tokens {np.asarray(d2.prediction)}, "
           f"exits {np.asarray(d2.exit_index)}")
 
-    # 3) swap the confidence measure without touching the model: any
+    # 3) STAGED decode with a carried DecodeState: under
+    #    exit_mode="cond_batch" segments nobody needs are actually skipped
+    #    (watch segments_run), with identical outputs to "select"
+    from repro.core.exec import StagedExecutor
+
+    staged_cfg = cfg.with_cascade(exit_mode="cond_batch",
+                                  thresholds=(0.0, 0.0))
+    ex = StagedExecutor(model, staged_cfg)
+    cache2 = model.init_cache(2, 32)
+    d, cache2, state = ex.prefill(params, toks, cache2, extra)
+    for _ in range(3):
+        d, cache2, state = ex.decode_step(params, d.prediction[:, None],
+                                          cache2, state, extra)
+    print(f"staged decode: exits {np.asarray(d.exit_index)}, "
+          f"segments actually run {np.asarray(state.segments_run)} "
+          f"(deep segment skipped {3 - int(state.segments_run[1])}/3 steps)")
+
+    # 4) swap the confidence measure without touching the model: any
     #    registered measure (entropy, margin, patience@k, your own) plugs in
     for measure in ("entropy", "margin"):
         alt = ExitDecider(measure, thresholds=(0.5, 0.0))

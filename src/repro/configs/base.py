@@ -40,8 +40,14 @@ class CascadeConfig:
     policy: str = "threshold"
     # Threshold calibrators (§5): "self" (paper) | "final" (cascade-level).
     calibrator: str = "self"
-    # How exits execute on TPU: "select" = fixed graph (dry-run/roofline),
-    # "cond_batch" = lax.cond batch-uniform segment skipping.
+    # How the staged executor (repro.core.exec) realizes the exit decision:
+    #   "select"     — fixed graph: every segment computes, the skip
+    #                  predicate selects results (dry-run/roofline shape);
+    #   "cond_batch" — lax.cond per segment: once every live sequence has
+    #                  exited, deeper segments' compute is skipped (only the
+    #                  cheap cache backfill runs).
+    # The two modes produce bit-identical tokens, exit indices and carried
+    # DecodeState — exit_mode picks an execution strategy, never a semantics.
     exit_mode: str = "select"
     # Whether deeper-layer KV / recurrent state is backfilled from the exit
     # hidden state so later tokens can attend at full depth.
@@ -59,6 +65,12 @@ class CascadeConfig:
     # the (B,S,vocab) intermediate logits dominate training HBM traffic for
     # large-vocab archs; the heads see plenty of signal at stride 4.
     exit_loss_stride: int = 1
+
+    def __post_init__(self):
+        if self.exit_mode not in ("select", "cond_batch"):
+            raise ValueError(
+                f"exit_mode must be 'select' or 'cond_batch', got "
+                f"{self.exit_mode!r}")
 
 
 @dataclasses.dataclass(frozen=True)

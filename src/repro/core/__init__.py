@@ -11,6 +11,7 @@ from repro.core.policy import (BudgetPolicy, Calibrator, ConfidenceMeasure,
                                register_policy)
 from repro.core.cascade import (cascade_evaluate, cascade_infer_sequential,
                                 CascadeEvalResult, sweep_epsilons)
+from repro.core.exec import (DecodeState, StagedExecutor, init_decode_state)
 from repro.core.training import (backtrack_training_plan, cascade_loss,
                                  trainability_mask)
 
@@ -25,5 +26,6 @@ __all__ = [
     "available_measures", "available_policies", "available_calibrators",
     "cascade_evaluate", "cascade_infer_sequential", "CascadeEvalResult",
     "sweep_epsilons",
+    "DecodeState", "StagedExecutor", "init_decode_state",
     "backtrack_training_plan", "cascade_loss", "trainability_mask",
 ]

@@ -1,0 +1,211 @@
+"""Staged cascade execution: the :class:`DecodeState` pytree and the
+segment-skipping executor that makes early exit mean early *termination*.
+
+The paper's claim is that inference stops as soon as the softmax confidence
+clears the calibrated threshold — yet a batched TPU decode graph has a fixed
+shape, so the seed implementation computed every segment and merely *selected*
+the exit, leaving the measured speedup analytic (MACs), not wall-clock.  This
+module closes that gap the way IDK Cascades (Wang et al., 2017) and Learning
+to Cascade (Enomoto & Eda, 2021) frame it: the exit decision is part of the
+execution program, not a post-hoc filter.
+
+Two pieces:
+
+* :class:`DecodeState` — the explicit, jit/shard-friendly pytree carried
+  across decode steps: the cache-write cursor ``t``, the per-sequence
+  ``active`` mask, the stateful-measure carry (patience streaks), an EMA of
+  the answering confidence (per-slot difficulty telemetry, surfaced through
+  the serving engine's stats), and per-segment execution counters.
+
+* :class:`StagedExecutor` — runs the cascade one segment at a time, feeding
+  each segment's logits to the shared :class:`~repro.core.policy.ExitDecider`
+  component scan.  Under ``cascade.exit_mode == "cond_batch"`` every segment
+  after the first sits under ``lax.cond``: once all live sequences have
+  exited, deeper segments take only the cheap ``backfill`` path (cache
+  coherence writes), skipping their matmuls entirely.  Under ``"select"``
+  the graph stays fixed (the dry-run / roofline shape) but applies the SAME
+  masked state updates, so the two modes produce bit-identical tokens, exit
+  indices, and carried state — ``exit_mode`` chooses an execution strategy,
+  never a semantics.
+
+This replaces the old fixed ``(params, token, t, cache, extra)`` serve-step
+signature: launch steps and the serving engine now thread
+``(params, token, cache, state, extra)`` with ``state: DecodeState`` (see
+``launch/steps.py`` for the migration shim-free builders and
+``launch/shard_rules.decode_state_spec`` for its sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.policy import ExitDecider, ExitDecision
+
+# EMA decay for the per-slot answering-confidence telemetry carried in
+# DecodeState (same decay as DepthCompactor's host-side depth prior).
+CONF_EMA_DECAY = 0.8
+
+
+@dataclasses.dataclass
+class DecodeState:
+    """Per-lane decode carry (a registered pytree).
+
+    t             () int32   — decode position == cache-write cursor.
+    active        (B,) bool  — sequences still generating; finished slots
+                               neither block segment skipping nor update EMAs.
+    policy        stateful-measure carry (e.g. patience streaks,
+                               (n_components, B) int32) or None.
+    ema_conf      (B,) f32   — EMA of the answering confidence per lane
+                               slot (difficulty telemetry; the engine
+                               reports it per lane in ``stats()``).
+    segments_run  (n_components,) int32 — how many decode steps actually
+                               computed each segment (physical compute: in
+                               ``select`` mode every segment counts every
+                               step; in ``cond_batch`` skipped segments
+                               don't).  The real-skip evidence.
+    """
+
+    t: jnp.ndarray
+    active: jnp.ndarray
+    policy: Optional[jnp.ndarray]
+    ema_conf: jnp.ndarray
+    segments_run: jnp.ndarray
+
+    def replace(self, **kw) -> "DecodeState":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_dataclass(
+    DecodeState,
+    data_fields=("t", "active", "policy", "ema_conf", "segments_run"),
+    meta_fields=())
+
+
+def init_decode_state(decider: ExitDecider, batch: int, n_components: int,
+                      t: int = 0, active=None) -> DecodeState:
+    """Fresh decode carry for a lane of ``batch`` sequences."""
+    return DecodeState(
+        t=jnp.asarray(t, jnp.int32),
+        active=(jnp.ones((batch,), bool) if active is None
+                else jnp.asarray(active, bool)),
+        policy=decider.measure.init_state(n_components, batch),
+        ema_conf=jnp.zeros((batch,), jnp.float32),
+        segments_run=jnp.zeros((n_components,), jnp.int32))
+
+
+class StagedExecutor:
+    """Segment-at-a-time cascade decode under one :class:`ExitDecider`.
+
+    ``decode_step`` is THE decode program; ``cfg.cascade.exit_mode`` only
+    picks how it is realized:
+
+    * ``"select"`` — fixed graph: every segment computes, the skip
+      predicate selects between the full result and the backfill result.
+      Lowered by the dry-run (roofline shape).
+    * ``"cond_batch"`` — ``lax.cond`` per segment: when every live sequence
+      has exited, the deep segment's matmuls do not execute; only the cheap
+      cache backfill runs.  Wall-clock savings, identical outputs.
+
+    Works for every registered measure/policy whose decision reduces to
+    per-component gates over static thresholds — including stateful
+    patience@k (streaks ride in ``DecodeState.policy``) and a *fitted*
+    BudgetPolicy (its thresholds resolve to static floats at trace time).
+    """
+
+    def __init__(self, model, cfg=None, decider: Optional[ExitDecider] = None):
+        self.model = model
+        self.cfg = cfg or model.cfg
+        self.decider = decider or ExitDecider.from_config(self.cfg)
+        self.mode = self.cfg.cascade.exit_mode
+        self.n_components = self.cfg.cascade.n_components
+
+    # ------------------------------------------------------------------
+    def init_state(self, batch: int, t: int = 0, active=None) -> DecodeState:
+        return init_decode_state(self.decider, batch, self.n_components,
+                                 t=t, active=active)
+
+    def _carry_forward(self, state: DecodeState,
+                       decision: ExitDecision) -> DecodeState:
+        conf = decision.confidence.astype(jnp.float32)
+        ema = jnp.where(state.active,
+                        CONF_EMA_DECAY * state.ema_conf
+                        + (1.0 - CONF_EMA_DECAY) * conf,
+                        state.ema_conf)
+        return state.replace(policy=decision.state, ema_conf=ema)
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, tokens, cache, extra=None,
+                state: Optional[DecodeState] = None):
+        """Full-sequence prefill; returns (decision, cache, state) with the
+        prefill decision seeding the stateful-measure carry (it counts as
+        the streak's first step) and ``t`` set past the prompt."""
+        if state is None:
+            state = self.init_state(tokens.shape[0])
+        logits, cache = self.model.prefill(params, tokens, cache, extra)
+        decision = self.decider.decide(logits, state=state.policy,
+                                       active=state.active)
+        state = self._carry_forward(state, decision).replace(
+            t=jnp.asarray(tokens.shape[1], jnp.int32))
+        return decision, cache, state
+
+    # ------------------------------------------------------------------
+    def decode_step(self, params, token, cache, state: DecodeState,
+                    extra=None):
+        """One staged decode step.  token: (B, 1) int32.
+
+        Returns (decision, new_cache, new_state).  Segment 0 always runs;
+        each deeper segment runs only while some live sequence has not
+        exited (cond_batch) or computes-but-masks (select).
+        """
+        model, decider, n_m = self.model, self.decider, self.n_components
+        ths = decider.resolved_thresholds(n_m)
+        t = state.t
+        h, ctx = model.begin_decode(params, token, t, cache, extra)
+        segs = cache["segments"]
+        new_segs = []
+        ran = [jnp.ones((), jnp.int32)]
+
+        h, nc, _ = model.run_segment(0, params, h, ctx, segs[0])
+        new_segs.append(nc)
+        out, conf = decider.measure_one(
+            model.exit_logits(params, 0, h)[:, 0, :])
+        sc = decider.scan_component(0, n_m, out, conf, ths,
+                                    state=state.policy)
+
+        for si in range(1, n_m):
+            skip = decider.should_skip(sc, state.active)
+
+            def run_path(h, seg_cache, sc, _si=si):
+                h2, nc2, _ = model.run_segment(_si, params, h, ctx, seg_cache)
+                o, c = decider.measure_one(
+                    model.exit_logits(params, _si, h2)[:, 0, :])
+                return h2, nc2, decider.scan_component(_si, n_m, o, c, ths,
+                                                       sc)
+
+            def skip_path(h, seg_cache, sc, _si=si):
+                if self.cfg.cascade.state_backfill:
+                    seg_cache = model.backfill_segment(_si, params, h, ctx,
+                                                       seg_cache)
+                return h, seg_cache, sc
+
+            if self.mode == "cond_batch":
+                h, nc, sc = lax.cond(skip, skip_path, run_path,
+                                     h, segs[si], sc)
+                ran.append(jnp.logical_not(skip).astype(jnp.int32))
+            else:  # select: both paths compute; skip only masks the result
+                full = run_path(h, segs[si], sc)
+                lite = skip_path(h, segs[si], sc)
+                h, nc, sc = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(skip, a, b), lite, full)
+                ran.append(jnp.ones((), jnp.int32))
+            new_segs.append(nc)
+
+        decision = decider.finish_scan(sc)
+        cache = model.commit_decode(cache, new_segs, t)
+        state = self._carry_forward(state, decision).replace(
+            t=t + 1, segments_run=state.segments_run + jnp.stack(ran))
+        return decision, cache, state

@@ -32,6 +32,7 @@ Parameterized specs use ``name@arg`` (e.g. ``patience@3``,
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -236,21 +237,34 @@ class ExitPolicy:
     The final component's gate must be all-True (it always answers); the
     decision scan itself (first open gate wins) lives in ExitDecider.
 
-    ``mirrors_config_thresholds`` declares that the gates are exactly
-    "confidence >= the caller-supplied thresholds" — the contract the
-    cond_batch segment-skip condition relies on to mirror the decider.
+    ``component_gate`` is the staged-execution entry point: the gate for ONE
+    component, called segment by segment as the executor computes (or skips)
+    them.  It must equal row ``m`` of :meth:`gates` — that identity is what
+    makes ``cond_batch`` segment skipping bit-identical to the fixed-graph
+    ``select`` mode.
     """
 
     name = "base"
-    mirrors_config_thresholds = False
 
-    def resolve_thresholds(self, thresholds):
-        """Thresholds the decider should use; policies may own a fitted
-        vector (BudgetPolicy) and ignore the config's."""
+    def resolve_thresholds(self, thresholds, explicit: bool = False):
+        """Thresholds the decider should use.
+
+        ``explicit`` marks thresholds passed per-call to
+        :meth:`ExitDecider.decide` (as opposed to the decider's configured
+        vector); policies that own a fitted vector (BudgetPolicy) honor the
+        per-call override and warn about the ambiguity.
+        """
+        del explicit
         return thresholds
 
     def gates(self, confs: jnp.ndarray, thresholds) -> jnp.ndarray:
         raise NotImplementedError
+
+    def component_gate(self, conf: jnp.ndarray, thresholds, m: int,
+                       n_components: int) -> jnp.ndarray:
+        raise NotImplementedError(
+            f"policy {self.name!r} defines no per-component gate; staged "
+            "(cond_batch) execution needs component_gate == gates()[m]")
 
 
 @register_policy("threshold")
@@ -259,7 +273,6 @@ class ThresholdPolicy(ExitPolicy):
     the final component always answers."""
 
     name = "threshold"
-    mirrors_config_thresholds = True
 
     def __init__(self, arg: str = ""):
         del arg
@@ -273,6 +286,11 @@ class ThresholdPolicy(ExitPolicy):
                 f"components")
         open_ = confs >= ths
         return open_.at[-1].set(True)
+
+    def component_gate(self, conf, thresholds, m, n_components):
+        if m >= n_components - 1:
+            return jnp.ones(conf.shape, bool)
+        return conf >= jnp.asarray(thresholds[m], conf.dtype)
 
 
 @register_policy("budget")
@@ -293,14 +311,20 @@ class BudgetPolicy(ThresholdPolicy):
     """
 
     name = "budget"
-    # fitted thresholds override the config's, so cond_batch cannot mirror
-    mirrors_config_thresholds = False
 
     def __init__(self, arg: str = ""):
         self.mac_budget = float(arg) if arg else None
         self.thresholds: Optional[Tuple[float, ...]] = None
 
-    def resolve_thresholds(self, thresholds):
+    def resolve_thresholds(self, thresholds, explicit: bool = False):
+        if explicit and thresholds is not None:
+            if self.thresholds is not None:
+                warnings.warn(
+                    "BudgetPolicy has fitted thresholds AND explicit "
+                    "thresholds were passed per call; honoring the per-call "
+                    "override (drop one of the two to silence this)",
+                    stacklevel=3)
+            return thresholds
         if self.thresholds is None:
             raise RuntimeError(
                 "BudgetPolicy has no fitted thresholds: call "
@@ -429,13 +453,33 @@ class ExitDecision:
     state: Optional[jnp.ndarray] = None   # stateful-measure carry
 
 
+# a pytree, so decisions flow through jit/cond boundaries (staged executor)
+jax.tree_util.register_dataclass(
+    ExitDecision,
+    data_fields=("prediction", "exit_index", "confidence", "state"),
+    meta_fields=())
+
+
 class ExitDecider:
     """The single, jit-compatible exit-decision implementation.
 
-    Composes a :class:`ConfidenceMeasure` with an :class:`ExitPolicy`;
-    :meth:`decide` consumes per-exit logits (serving / Algorithm 1) and
-    :meth:`exit_indices` consumes precomputed confidences (the vectorized
-    evaluation sweep).  Both funnel through ``_first_open_gate``.
+    Composes a :class:`ConfidenceMeasure` with an :class:`ExitPolicy`.
+    Three entry points, one semantics:
+
+    * :meth:`decide` — per-exit logits (serving / Algorithm 1), all at once.
+    * the **component scan** (:meth:`scan_component` / :meth:`should_skip` /
+      :meth:`finish_scan`) — the same decision fed one component at a time,
+      which is what lets :class:`repro.core.exec.StagedExecutor` run each
+      cascade segment under ``lax.cond`` and *skip the compute* of segments
+      nobody needs.
+    * :meth:`exit_indices` — precomputed confidences (the vectorized
+      evaluation sweep).
+
+    ``decide`` is implemented ON the component scan, including its
+    skip-masked state updates (a skipped segment's patience streak does not
+    advance), so fixed-graph ``select`` execution and segment-skipping
+    ``cond_batch`` execution produce bit-identical decisions and carried
+    state.
     """
 
     def __init__(self, measure, policy="threshold",
@@ -462,48 +506,134 @@ class ExitDecider:
             n_exits = len(self.thresholds)
         return self.measure.init_state(n_exits, batch)
 
+    def resolved_thresholds(self, n_components: int,
+                            thresholds: Optional[Sequence[float]] = None
+                            ) -> Tuple[float, ...]:
+        """The static threshold vector the decision scan gates on: per-call
+        ``thresholds`` (explicit override) > policy-owned fitted vector
+        (BudgetPolicy) > the decider's configured vector."""
+        ths = self.policy.resolve_thresholds(
+            self.thresholds if thresholds is None else tuple(thresholds),
+            explicit=thresholds is not None)
+        if ths is None:
+            raise ValueError(
+                "no thresholds: configure them on the decider/config or "
+                "pass them per call")
+        ths = tuple(float(t) for t in ths)
+        if len(ths) != n_components:
+            raise ValueError(f"{len(ths)} thresholds for {n_components} "
+                             f"cascade components")
+        return ths
+
     # -- logits path (serving, Algorithm 1) -----------------------------
+    def measure_one(self, logits: jnp.ndarray):
+        """(prediction, confidence) of ONE component (fused path if asked)."""
+        if self.use_kernels:
+            pair = self.measure.fused_kernel(logits)
+            if pair is not None:
+                return pair
+        return self.measure(logits)
+
     def measure_all(self, logits_list: Sequence[jnp.ndarray]):
         """(outs, confs) stacked (n_m, ...) via the measure (fused if asked)."""
-        outs, confs = [], []
-        for lg in logits_list:
-            pair = self.measure.fused_kernel(lg) if self.use_kernels else None
-            if pair is None:
-                pair = self.measure(lg)
-            outs.append(pair[0])
-            confs.append(pair[1])
-        return jnp.stack(outs), jnp.stack(confs)
+        pairs = [self.measure_one(lg) for lg in logits_list]
+        return (jnp.stack([p[0] for p in pairs]),
+                jnp.stack([p[1] for p in pairs]))
+
+    # -- the component scan (staged execution's decision core) -----------
+    def scan_component(self, m: int, n_components: int,
+                       prediction: jnp.ndarray, confidence: jnp.ndarray,
+                       thresholds: Tuple[float, ...], carry=None,
+                       state=None, batch_uniform: bool = False):
+        """Feed component ``m``'s measured (prediction, confidence) into the
+        running decision scan; returns the updated carry (a pytree of
+        arrays, safe to thread through ``lax.cond``).
+
+        ``carry=None`` starts the scan (m must be 0); ``state`` then seeds
+        the stateful-measure carry (patience streaks).  The first open gate
+        answers each sample, exactly as :func:`_first_open_gate` does on the
+        stacked path.
+        """
+        gate = self.policy.component_gate(confidence, thresholds, m,
+                                          n_components)
+        if carry is None:
+            if m != 0:
+                raise ValueError("a decision scan must start at component 0")
+            streak = None
+            if self.measure.stateful:
+                streak = (state if state is not None else jnp.zeros(
+                    (n_components,) + confidence.shape, jnp.int32))
+            carry = {
+                "answered": jnp.zeros(confidence.shape, bool),
+                "pred": jnp.zeros_like(prediction),
+                "exit": jnp.zeros(confidence.shape, jnp.int32),
+                "conf": jnp.zeros_like(confidence),
+                "streak": streak,
+            }
+        streak = carry["streak"]
+        if self.measure.stateful:
+            row = jnp.where(gate, streak[m] + 1, 0)
+            streak = streak.at[m].set(row)
+            gate = row >= self.measure.patience_k
+            if m == n_components - 1:
+                gate = jnp.ones_like(gate)
+        if batch_uniform:
+            gate = jnp.broadcast_to(jnp.all(gate), gate.shape)
+            if m == n_components - 1:
+                gate = jnp.ones_like(gate)
+        fresh = jnp.logical_and(gate, jnp.logical_not(carry["answered"]))
+        return {
+            "answered": jnp.logical_or(carry["answered"], gate),
+            "pred": jnp.where(fresh, prediction, carry["pred"]),
+            "exit": jnp.where(fresh, jnp.int32(m), carry["exit"]),
+            "conf": jnp.where(fresh, confidence, carry["conf"]),
+            "streak": streak,
+        }
+
+    def should_skip(self, carry, active=None) -> jnp.ndarray:
+        """Scalar bool: every live sample has already exited — the staged
+        executor's segment-skip predicate, and decide()'s masked-update
+        predicate (the identity that keeps both execution styles exact)."""
+        answered = carry["answered"]
+        if active is not None:
+            answered = jnp.logical_or(answered, jnp.logical_not(active))
+        return jnp.all(answered)
+
+    def finish_scan(self, carry) -> ExitDecision:
+        return ExitDecision(carry["pred"], carry["exit"], carry["conf"],
+                            carry["streak"])
 
     def decide(self, logits_list: Sequence[jnp.ndarray],
                thresholds: Optional[Sequence[float]] = None,
-               state=None, batch_uniform: bool = False) -> ExitDecision:
+               state=None, batch_uniform: bool = False,
+               active=None) -> ExitDecision:
         """Pick the answering component for each sample.
 
         ``batch_uniform`` gives Algorithm 1's TPU whole-batch semantics: a
         component answers only when *every* sample in the batch is confident
         (the ``cond_batch`` skip condition).  ``state`` carries stateful
-        measures (patience streaks) across decode steps.
+        measures (patience streaks) across decode steps; ``active`` masks
+        finished lanes out of the skip predicate.
+
+        Components a staged run would have skipped (everyone already exited)
+        contribute no state updates here either — their streak rows stay
+        put — so this fixed-graph path matches ``cond_batch`` exactly.
         """
-        outs, confs = self.measure_all(logits_list)
-        ths = self.policy.resolve_thresholds(
-            self.thresholds if thresholds is None else tuple(thresholds))
-        gates = self.policy.gates(confs, ths)
-        if self.measure.stateful:
-            streak = (state if state is not None
-                      else self.measure.init_state(gates.shape[0],
-                                                   int(np.prod(
-                                                       gates.shape[1:]))))
-            streak = jnp.where(gates, streak.reshape(gates.shape) + 1, 0)
-            gates = (streak >= self.measure.patience_k).at[-1].set(True)
-            state = streak
-        if batch_uniform:
-            reduce_axes = tuple(range(1, gates.ndim))
-            uniform = jnp.all(gates, axis=reduce_axes, keepdims=True)
-            gates = jnp.broadcast_to(uniform, gates.shape).at[-1].set(True)
-        idx = _first_open_gate(confs, gates)
-        pred = jnp.take_along_axis(outs, idx[None], axis=0)[0]
-        conf = jnp.take_along_axis(confs, idx[None], axis=0)[0]
-        return ExitDecision(pred, idx, conf, state)
+        n_m = len(logits_list)
+        ths = self.resolved_thresholds(n_m, thresholds)
+        carry = None
+        for m, lg in enumerate(logits_list):
+            out, conf = self.measure_one(lg)
+            new = self.scan_component(m, n_m, out, conf, ths, carry,
+                                      state=state,
+                                      batch_uniform=batch_uniform)
+            if carry is None:
+                carry = new
+            else:
+                skip = self.should_skip(carry, active)
+                carry = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(skip, a, b), carry, new)
+        return self.finish_scan(carry)
 
     # -- precomputed-confidence path (evaluation sweep) ------------------
     def exit_indices(self, confidences: Sequence[np.ndarray],
@@ -521,6 +651,7 @@ class ExitDecider:
                 "instead")
         confs = jnp.asarray(np.stack([np.asarray(c) for c in confidences]))
         ths = self.policy.resolve_thresholds(
-            self.thresholds if thresholds is None else tuple(thresholds))
+            self.thresholds if thresholds is None else tuple(thresholds),
+            explicit=thresholds is not None)
         gates = self.policy.gates(confs, ths)
         return np.asarray(_first_open_gate(confs, gates))

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -110,35 +111,131 @@ def train_backtrack(model: CIResNet, train: SynthImageDataset,
     return report
 
 
-def collect_outputs(model: CIResNet, params, state,
-                    data: SynthImageDataset, batch_size: int = 256,
-                    measure="softmax_max"):
-    """Per-component (confidence, prediction, correct) over a dataset.
+def collect_logits(model: CIResNet, params, state,
+                   data: SynthImageDataset,
+                   batch_size: int = 256) -> List[np.ndarray]:
+    """One forward pass over the dataset: per-component logits (N, C).
 
-    ``measure`` is a confidence-measure registry spec (or instance); the
-    default is the paper's softmax-max δ."""
-    m_fn = get_measure(measure) if isinstance(measure, str) else measure
-
+    Logits are measure-independent — collect them once, then score any
+    number of confidence measures on the cached tensors with
+    :func:`score_logits` (what the measure-ablation bench does)."""
     @jax.jit
     def fwd(x):
         logits, _ = model.apply(params, state, x, train=False)
-        outs = [m_fn(lg) for lg in logits]
-        return ([o for o, _ in outs], [d for _, d in outs])
+        return logits
 
-    n = len(data)
     n_m = 3
-    confs = [[] for _ in range(n_m)]
-    preds = [[] for _ in range(n_m)]
-    for i in range(0, n, batch_size):
+    logits = [[] for _ in range(n_m)]
+    for i in range(0, len(data), batch_size):
         x = jnp.asarray(data.images[i:i + batch_size])
-        outs, deltas = fwd(x)
+        out = fwd(x)
         for m in range(n_m):
-            preds[m].append(np.asarray(outs[m]))
-            confs[m].append(np.asarray(deltas[m]))
-    confs = [np.concatenate(c) for c in confs]
-    preds = [np.concatenate(p) for p in preds]
-    corrects = [(p == data.labels).astype(np.float64) for p in preds]
+            logits[m].append(np.asarray(out[m]))
+    return [np.concatenate(lg) for lg in logits]
+
+
+def score_logits(logits: List[np.ndarray], labels: np.ndarray,
+                 measure="softmax_max"):
+    """(confidence, prediction, correct) per component from cached logits.
+
+    ``measure`` is a confidence-measure registry spec (or instance)."""
+    m_fn = get_measure(measure) if isinstance(measure, str) else measure
+    score = jax.jit(lambda lg: m_fn(lg))
+    confs, preds = [], []
+    for lg in logits:
+        out, delta = score(jnp.asarray(lg))
+        preds.append(np.asarray(out))
+        confs.append(np.asarray(delta))
+    corrects = [(p == labels).astype(np.float64) for p in preds]
     return confs, preds, corrects
+
+
+def collect_outputs(model: CIResNet, params, state,
+                    data: SynthImageDataset, batch_size: int = 256,
+                    measure="softmax_max"):
+    """Per-component (confidence, prediction, correct) over a dataset —
+    one forward pass (:func:`collect_logits`) + one measure scoring
+    (:func:`score_logits`)."""
+    logits = collect_logits(model, params, state, data, batch_size)
+    return score_logits(logits, data.labels, measure)
+
+
+def evaluate_wallclock(model: CIResNet, params, state,
+                       data: SynthImageDataset, thresholds,
+                       measure="softmax_max", batch_size: int = 256,
+                       repeats: int = 3):
+    """MEASURED wall-clock of staged cascade evaluation vs the dense cascade.
+
+    Component m+1 runs only on samples still undecided after component m
+    (host-side dynamic batching in fixed-shape padded chunks — the CPU/GPU
+    analogue of the TPU engine's ``cond_batch`` skipping), so the compute
+    the thresholds save is real elapsed time, not analytic MACs.  Both
+    passes are jit-warmed before timing.
+
+    Returns ``{"wallclock_speedup", "t_staged_s", "t_dense_s",
+    "exit_fractions"}``.
+    """
+    m_fn = get_measure(measure) if isinstance(measure, str) else measure
+    fns = model.component_fns(params, state)
+    comp = [jax.jit(lambda x: fns[0](x, None)),
+            jax.jit(lambda c: fns[1](None, c)),
+            jax.jit(lambda c: fns[2](None, c))]
+    score = jax.jit(lambda lg: m_fn(lg)[1])
+    ths = tuple(float(t) for t in thresholds)
+    images = np.asarray(data.images)
+
+    def run_component(m, arr):
+        """Apply component m chunkwise (padded to batch_size); returns
+        (confidence (n,), features (n, ...))."""
+        confs, feats = [], []
+        for i in range(0, arr.shape[0], batch_size):
+            chunk = arr[i:i + batch_size]
+            real = chunk.shape[0]
+            if real < batch_size:                 # pad to the fixed shape
+                chunk = np.concatenate(
+                    [chunk, np.repeat(chunk[:1], batch_size - real, 0)])
+            lg, feat = comp[m](jnp.asarray(chunk))
+            confs.append(np.asarray(score(lg))[:real])
+            feats.append(np.asarray(feat)[:real])
+        return np.concatenate(confs), np.concatenate(feats)
+
+    def staged_pass():
+        alive = images
+        exited = []
+        for m in range(3):
+            if alive.shape[0] == 0:
+                exited.append(0)
+                continue
+            conf, feat = run_component(m, alive)
+            if m < 2:
+                stay = conf < ths[m]
+                exited.append(int(alive.shape[0] - stay.sum()))
+                alive = feat[stay]
+            else:
+                exited.append(alive.shape[0])
+        return exited
+
+    def dense_pass():
+        arr = images
+        for m in range(3):
+            _, arr = run_component(m, arr)
+
+    staged_pass(), dense_pass()                  # jit warm-up
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        exited = staged_pass()
+    t_staged = (time.perf_counter() - t0) / repeats
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        dense_pass()
+    t_dense = (time.perf_counter() - t0) / repeats
+    return {
+        "wallclock_speedup": t_dense / t_staged if t_staged else 1.0,
+        "t_staged_s": t_staged,
+        "t_dense_s": t_dense,
+        "exit_fractions": (np.asarray(exited, np.float64)
+                           / max(1, len(data))).tolist(),
+    }
 
 
 def evaluate_tradeoff(model: CIResNet, params, state,

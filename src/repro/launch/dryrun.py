@@ -19,9 +19,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.configs import INPUT_SHAPES, get_config, list_configs  # noqa: E402
 from repro.core.macs import model_flops  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
-from repro.launch.shard_rules import (batch_spec, cache_spec, param_spec,  # noqa: E402
+from repro.launch.shard_rules import (batch_spec, cache_spec,  # noqa: E402
+                                      decode_state_spec, param_spec,
                                       to_shardings)
-from repro.launch.steps import (make_batch_structs, make_optimizer,  # noqa: E402
+from repro.launch.steps import (make_batch_structs,  # noqa: E402
+                                make_decode_state_struct, make_optimizer,
                                 make_prefill_step, make_serve_step,
                                 make_train_step)
 from repro.models.model import build_model, extra_input_shapes  # noqa: E402
@@ -67,13 +69,15 @@ def parse_collectives(hlo_text: str):
     return out, counts
 
 
-def adjust_config(cfg, shape, unroll: bool = False):
+def adjust_config(cfg, shape, unroll: bool = False, exit_mode: str = "select"):
     if shape.name == "long_500k" and cfg.family not in ("ssm",):
         if cfg.attn_window == 0 or cfg.attn_window > LONG_WINDOW:
             cfg = cfg.replace(attn_window=min(cfg.attn_window or LONG_WINDOW,
                                               LONG_WINDOW))
     if shape.kind == "decode":
-        cfg = cfg.with_cascade(exit_mode="select")
+        # "select" is the fixed-graph roofline shape; "cond_batch" costs the
+        # lax.cond segment-skipping program (both lower the same DecodeState)
+        cfg = cfg.with_cascade(exit_mode=exit_mode)
     if unroll:
         cfg = cfg.replace(scan_unroll=True)
     return cfg
@@ -81,10 +85,12 @@ def adjust_config(cfg, shape, unroll: bool = False):
 
 def lower_combo(arch: str, shape_name: str, multi_pod: bool,
                 unroll: bool = False, cfg_override=None,
-                param_mode: str = "default", kv_dtype=None):
+                param_mode: str = "default", kv_dtype=None,
+                exit_mode: str = "select"):
     """Build, lower, compile one combination; return the roofline record."""
     shape = INPUT_SHAPES[shape_name]
-    cfg = cfg_override or adjust_config(get_config(arch), shape, unroll)
+    cfg = cfg_override or adjust_config(get_config(arch), shape, unroll,
+                                        exit_mode)
     mesh = make_production_mesh(multi_pod=multi_pod)
     model = build_model(cfg)
     rec = {"arch": arch, "shape": shape_name, "param_mode": param_mode,
@@ -140,13 +146,18 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool,
             tok_s = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
             t_shard = NamedSharding(mesh, batch_spec(cfg, mesh,
                                                      shape.global_batch, 2))
+            # the carried DecodeState lowers alongside the cache, so
+            # stateful measures (patience streaks) cost correctly
+            state_s = make_decode_state_struct(cfg, shape.global_batch)
+            s_shard = to_shardings(mesh, decode_state_spec(
+                state_s, cfg, mesh, shape.global_batch))
             extra_s, e_shard = _extra(cfg, shape.global_batch, mesh)
             step_fn = make_serve_step(model, cfg)
-            jitted = jax.jit(step_fn, in_shardings=(p_shard, t_shard, scalar,
-                                                    c_shard, e_shard))
-            lowered = jitted.lower(params_s, tok_s,
-                                   jax.ShapeDtypeStruct((), jnp.int32),
-                                   cache_s, extra_s)
+            jitted = jax.jit(step_fn, in_shardings=(p_shard, t_shard,
+                                                    c_shard, s_shard,
+                                                    e_shard))
+            lowered = jitted.lower(params_s, tok_s, cache_s, state_s,
+                                   extra_s)
             n_tokens = shape.global_batch
             training = False
 
@@ -203,6 +214,10 @@ def main():
     ap.add_argument("--param-mode", default="default",
                     choices=["default", "serve1d", "serve2d"],
                     help="parameter sharding layout (see shard_rules.py)")
+    ap.add_argument("--exit-mode", default="select",
+                    choices=["select", "cond_batch"],
+                    help="decode execution mode: fixed roofline graph vs "
+                         "lax.cond segment skipping")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
     archs = ([a for a in list_configs() if a != "ci-resnet18"]
@@ -214,6 +229,8 @@ def main():
             tag = (f"{arch}__{shape}__{'mp' if args.multi_pod else 'sp'}"
                    + ("_unroll" if args.unroll else "")
                    + (f"_{args.param_mode}" if args.param_mode != "default"
+                      else "")
+                   + (f"_{args.exit_mode}" if args.exit_mode != "select"
                       else ""))
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path):
@@ -226,7 +243,8 @@ def main():
                 try:
                     rec = lower_combo(arch, shape, args.multi_pod,
                                       unroll=args.unroll,
-                                      param_mode=args.param_mode)
+                                      param_mode=args.param_mode,
+                                      exit_mode=args.exit_mode)
                 except Exception as e:
                     rec = {"arch": arch, "shape": shape, "ok": False,
                            "error": f"{type(e).__name__}: {e}",

@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--threshold", type=float, default=0.5)
+    ap.add_argument("--confidence", default=None,
+                    help="confidence-measure registry spec (softmax_max, "
+                         "entropy, margin, patience@k[:base], ...)")
     ap.add_argument("--exit-mode", default="select",
                     choices=["select", "cond_batch"])
     ap.add_argument("--lanes", type=int, default=2)
@@ -40,6 +43,8 @@ def main():
     n = cfg.cascade.n_components
     ths = tuple([args.threshold] * (n - 1) + [0.0])
     cfg = cfg.with_cascade(thresholds=ths, exit_mode=args.exit_mode)
+    if args.confidence:
+        cfg = cfg.with_cascade(confidence=args.confidence)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     engine = CascadeServingEngine(cfg, model, params,
@@ -56,6 +61,11 @@ def main():
     engine.run()
     stats = engine.stats()
     log.info("stats: %s", json.dumps(stats, indent=2))
+    if args.exit_mode == "cond_batch":
+        log.info("real skip rate %.3f (opportunity %.3f), %.1f us/token",
+                 stats["cond_batch_skip_rate"],
+                 stats["skip_opportunity_rate"],
+                 stats["wallclock_us_per_token"] or 0.0)
     assert stats["requests_finished"] == args.requests
 
 

@@ -1,5 +1,5 @@
-"""Name-based sharding rules: parameter / optimizer / cache / batch pytrees
--> PartitionSpec trees for the production mesh.
+"""Name-based sharding rules: parameter / optimizer / cache / batch /
+decode-state pytrees -> PartitionSpec trees for the production mesh.
 
 Tensor-parallel layout (megatron-style): column-parallel projections shard
 their output dim over ``model``; row-parallel shard their input dim (XLA
@@ -177,6 +177,36 @@ def cache_spec(cache, cfg, mesh, batch: int):
             return _spec(ndim, **{"1": dp_ax})
         return P()
     return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+def decode_state_spec(state, cfg, mesh, batch: int):
+    """Sharding for the serve step's carried DecodeState pytree.
+
+    Per-sequence leaves (``active``, ``ema_conf``: (B,), and the stateful
+    measure carry ``policy``: (n_components, B)) shard their batch dim over
+    (pod, data) exactly like the token batch; the scalar cursor ``t`` and
+    the per-segment counters ``segments_run`` replicate.  Divisibility
+    degrades to replication, mirroring every other rule here.
+    """
+    dp = batch_axes(mesh)
+    dp_ax = dp if divisible(batch, axis_size(mesh, dp)) else None
+
+    def rule(path, leaf):
+        ndim = np.ndim(leaf)
+        name = None
+        for part in reversed(path):
+            key = getattr(part, "name", None) or getattr(part, "key", None)
+            if isinstance(key, str):
+                name = key
+                break
+        if ndim == 0 or name in ("t", "segments_run"):
+            return P()
+        if name in ("active", "ema_conf"):
+            return _spec(ndim, **{"0": dp_ax})
+        if name == "policy":          # (n_components, B, ...)
+            return _spec(ndim, **{"1": dp_ax})
+        return P()
+    return jax.tree_util.tree_map_with_path(rule, state)
 
 
 def batch_spec(cfg, mesh, batch: int, ndim: int) -> P:

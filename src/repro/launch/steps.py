@@ -1,8 +1,21 @@
 """Step builders shared by train.py, serve.py, and dryrun.py.
 
 ``make_train_step``: joint-loss cascade training step (fwd + bwd + AdamW).
-``make_prefill_step`` / ``make_serve_step``: inference steps; serve_step is
-ONE new token against a KV/state cache (what the decode shapes lower).
+``make_prefill_step`` / ``make_serve_step``: inference steps built on the
+staged executor; serve_step is ONE new token against a KV/state cache (what
+the decode shapes lower).
+
+Serve-step signature (the DecodeState redesign)::
+
+    serve_step(params, token, cache, state, extra)
+        -> (prediction, exit_index, confidence, cache, state)
+
+``state`` is a :class:`repro.core.exec.DecodeState` pytree carrying the
+position cursor, active mask, stateful-measure carry (patience streaks) and
+segment execution counters — so stateful measures now lower through the
+dry-run and serve end-to-end instead of raising.  The old
+``(params, token, t, cache, extra)`` signature is gone: the scalar ``t``
+rides in ``state.t`` (see README "Migration" for the one-line port).
 """
 from __future__ import annotations
 
@@ -13,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.exec import DecodeState, StagedExecutor, init_decode_state
 from repro.core.policy import ExitDecider
 from repro.core.training import cascade_loss
 from repro.models.model import CascadeModel, extra_input_shapes
@@ -42,31 +56,45 @@ def make_train_step(model: CascadeModel, cfg: ModelConfig,
 
 
 def make_prefill_step(model: CascadeModel, cfg: ModelConfig):
-    decider = ExitDecider.from_config(cfg)
+    """Prefill step: consumes the prompt, emits the first decision AND the
+    initial :class:`DecodeState` (t past the prompt, streaks seeded by the
+    prefill decision) that the serve step then carries."""
+    executor = StagedExecutor(model, cfg)
 
     def prefill_step(params, tokens, cache, extra):
-        logits, cache = model.prefill(params, tokens, cache, extra)
-        d = decider.decide(logits)
-        return d.prediction, d.exit_index, d.confidence, cache
+        d, cache, state = executor.prefill(params, tokens, cache, extra)
+        return d.prediction, d.exit_index, d.confidence, cache, state
     return prefill_step
 
 
 def make_serve_step(model: CascadeModel, cfg: ModelConfig):
-    decider = ExitDecider.from_config(cfg)
-    if decider.measure.stateful:
-        # the fixed (params, token, t, cache, extra) signature the dry-run
-        # lowers has no slot for streak state; silently re-initializing it
-        # every step would disable early exit for patience@k
-        raise NotImplementedError(
-            f"measure {decider.measure.name!r} is stateful; the launch serve "
-            "step cannot thread its decode state — serve stateful measures "
-            "through CascadeServingEngine instead")
+    """Staged decode step.  Works for EVERY registered measure — stateful
+    patience@k included: its streaks ride in ``state.policy`` instead of
+    being re-initialized (which would silently disable early exit).
 
-    def serve_step(params, token, t, cache, extra):
-        logits, cache = model.decode_step(params, token, t, cache, extra)
-        d = decider.decide(logits)
-        return d.prediction, d.exit_index, d.confidence, cache
+    ``cfg.cascade.exit_mode`` picks the execution strategy: ``select``
+    (fixed graph, the dry-run/roofline shape) or ``cond_batch`` (lax.cond
+    skips exited segments' compute).  Outputs are identical either way.
+    """
+    executor = StagedExecutor(model, cfg)
+
+    def serve_step(params, token, cache, state, extra):
+        d, cache, state = executor.decode_step(params, token, cache, state,
+                                               extra)
+        return d.prediction, d.exit_index, d.confidence, cache, state
     return serve_step
+
+
+def make_decode_state(cfg: ModelConfig, batch: int, t: int = 0) -> DecodeState:
+    """A fresh DecodeState for ``batch`` lanes of this config."""
+    return init_decode_state(ExitDecider.from_config(cfg), batch,
+                             cfg.cascade.n_components, t=t)
+
+
+def make_decode_state_struct(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStruct pytree of the DecodeState the serve step carries
+    (what the dry-run lowers and shards)."""
+    return jax.eval_shape(lambda: make_decode_state(cfg, batch))
 
 
 def make_batch_structs(cfg: ModelConfig, batch: int, seq: int,

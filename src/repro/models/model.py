@@ -18,6 +18,15 @@ Public entry points:
   init_cache(batch, cache_len, dtype)            -> cache
   prefill(params, tokens, cache, extra)          -> (exit_logits_last, cache)
   decode_step(params, token, t, cache, extra)    -> (exit_logits, cache)
+  decode(params, token, cache, state, extra)     -> (decision, cache, state)
+
+``decode_step`` is the dense reference: it computes every segment and returns
+every exit's logits (what the prefill/decode consistency tests pin).  The
+*staged* decode — ``cfg.cascade.exit_mode`` "select" | "cond_batch", carrying
+a :class:`repro.core.exec.DecodeState` and skipping exited segments' compute —
+is ``decode`` / :class:`repro.core.exec.StagedExecutor`, built from the
+segment primitives exposed here (``begin_decode`` / ``run_segment`` /
+``backfill_segment`` / ``exit_logits`` / ``commit_decode``).
 """
 from __future__ import annotations
 
@@ -191,6 +200,16 @@ class CascadeModel:
             new_caches.append(nc)
         return new_caches
 
+    # public segment primitives for the staged executor (core/exec.py)
+    def run_segment(self, si, params, h, ctx, seg_cache):
+        """Compute segment ``si``: (h', new_seg_cache, aux)."""
+        return self._run_segment(si, params, h, ctx, seg_cache)
+
+    def backfill_segment(self, si, params, h, ctx, seg_cache):
+        """Write segment ``si``'s caches from the exit hidden state without
+        computing the segment (the skip path's cache-coherence write)."""
+        return self._backfill_segment(si, params, h, ctx, seg_cache)
+
     # ------------------------------------------------------------------
     # heads
     # ------------------------------------------------------------------
@@ -324,16 +343,12 @@ class CascadeModel:
     # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
-    def decode_step(self, params, token, t, cache, extra=None):
-        """One decode step.  token: (B,1) int32; t: scalar int32 position.
+    def begin_decode(self, params, token, t, cache, extra=None):
+        """Embed one decode token and build the step context.
 
-        Returns (exit_logits: list of (B,V), new cache).  Execution honours
-        cfg.cascade.exit_mode:
-          select     — always run everything (fixed graph; roofline shape)
-          cond_batch — lax.cond skips deeper segments when every sequence
-                       already exited (caches kept coherent via backfill).
+        token: (B,1) int32; t: scalar int32 position.  Returns (h, ctx) for
+        the segment primitives (``run_segment`` / ``backfill_segment``).
         """
-        cfg = self.cfg
         W = cache["kpos"].shape[0]
         slot = jnp.asarray(t, jnp.int32) % W
         h = self._embed(params, token,
@@ -343,71 +358,52 @@ class CascadeModel:
                "kpos": cache["kpos"], "positions": None, "write_slots": None,
                "cross": self._make_cross(params, extra or {}, "decode"),
                "shared": params.get("shared")}
-        thresholds = cfg.cascade.thresholds
+        return h, ctx
+
+    def commit_decode(self, cache, new_segs, t):
+        """Finish a decode step: record position t in the kpos ring."""
+        W = cache["kpos"].shape[0]
+        slot = jnp.asarray(t, jnp.int32) % W
+        kpos = cache["kpos"].at[slot].set(jnp.asarray(t, jnp.int32))
+        return {"kpos": kpos, "segments": new_segs}
+
+    def decode_step(self, params, token, t, cache, extra=None):
+        """One DENSE decode step: every segment computes, every exit's
+        logits are returned (list of (B,V)), caches get the true deep
+        features.  This is the reference path the consistency tests pin.
+
+        Early-exit execution — segment skipping under ``lax.cond``, carried
+        :class:`~repro.core.exec.DecodeState`, identical ``select`` /
+        ``cond_batch`` semantics — lives in :meth:`decode` /
+        :class:`repro.core.exec.StagedExecutor`.
+        """
+        h, ctx = self.begin_decode(params, token, t, cache, extra)
         logits: List[jnp.ndarray] = []
         new_segs: List[Any] = []
-        # segment 0 always runs
-        h, nc, _ = self._run_segment(0, params, h, ctx, cache["segments"][0])
-        new_segs.append(nc)
-        logits.append(self.exit_logits(params, 0, h)[:, 0, :])
-        done = None
-        # The skip condition must mirror the ExitDecider's gates exactly —
-        # otherwise a skipped segment's (shallow-feature) logits could be
-        # selected as the answer.  Instantaneous confidence vs the config
-        # thresholds only mirrors policies that gate on exactly those
-        # thresholds (policy.mirrors_config_thresholds) with a stateless
-        # measure; patience streaks and BudgetPolicy-fitted thresholds live
-        # in the decider, so those configs run every segment.
-        can_skip = (cfg.cascade.exit_mode == "cond_batch"
-                    and _exit_policy(cfg).mirrors_config_thresholds
-                    and not _exit_measure(cfg).stateful)
-        for si in range(1, self.n_exits):
-            seg_cache = cache["segments"][si]
-            if can_skip:
-                conf = _exit_confidence(cfg, logits[-1])
-                newly_done = conf >= thresholds[si - 1]
-                done = newly_done if done is None else (done | newly_done)
-                all_done = jnp.all(done)
-
-                def full_path(h, seg_cache):
-                    return self._run_segment(si, params, h, ctx, seg_cache)[:2]
-
-                def skip_path(h, seg_cache):
-                    if cfg.cascade.state_backfill:
-                        return h, self._backfill_segment(
-                            si, params, h, ctx, seg_cache)
-                    return h, seg_cache
-
-                h, nc = lax.cond(all_done, skip_path, full_path, h, seg_cache)
-            else:
-                h, nc, _ = self._run_segment(si, params, h, ctx, seg_cache)
+        for si in range(self.n_exits):
+            h, nc, _ = self._run_segment(si, params, h, ctx,
+                                         cache["segments"][si])
             new_segs.append(nc)
             logits.append(self.exit_logits(params, si, h)[:, 0, :])
-        kpos = cache["kpos"].at[slot].set(jnp.asarray(t, jnp.int32))
-        return logits, {"kpos": kpos, "segments": new_segs}
+        return logits, self.commit_decode(cache, new_segs, t)
 
+    def decode(self, params, token, cache, state, extra=None, decider=None):
+        """Staged decode step honoring ``cfg.cascade.exit_mode``.
 
-def _exit_measure(cfg):
-    from repro.core.policy import get_measure
-    return get_measure(cfg.cascade.confidence)
-
-
-def _exit_policy(cfg):
-    from repro.core.policy import get_policy
-    return get_policy(cfg.cascade.policy)
-
-
-def _exit_confidence(cfg, logits):
-    """Confidence for the cond_batch skip condition via the SAME registered
-    measure — and the same fused/reference path — the decider gates on, so
-    calibrated thresholds and the skip criterion share one scale and one
-    numerical implementation."""
-    measure = _exit_measure(cfg)
-    if cfg.use_kernels:
-        pair = measure.fused_kernel(logits)
-        if pair is not None:
-            return pair[1]
-    return measure(logits)[1]
+        token: (B,1) int32; state: :class:`repro.core.exec.DecodeState`
+        (carries the position cursor, active mask and measure state).
+        Returns (ExitDecision, new_cache, new_state).  In ``cond_batch``
+        mode segments nobody needs are skipped (backfill-only).
+        """
+        from repro.core.exec import StagedExecutor
+        if decider is not None:
+            executor = StagedExecutor(self, self.cfg, decider)
+        else:
+            executor = getattr(self, "_staged_executor", None)
+            if executor is None:
+                executor = self._staged_executor = StagedExecutor(self,
+                                                                  self.cfg)
+        return executor.decode_step(params, token, cache, state, extra)
 
 
 def _prefill_kpos(S: int, W: int) -> np.ndarray:

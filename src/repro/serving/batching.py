@@ -27,7 +27,13 @@ class LaneStats:
 
 
 class DepthCompactor:
-    """Assigns requests to lanes by predicted exit depth."""
+    """Assigns requests to lanes by predicted exit depth.
+
+    Also owns THE population depth prior: one EMA (decay ``ema``) over the
+    prefill exits actually observed, used to predict the depth of requests
+    that arrive without a hint.  (The serving engine used to keep its own
+    copy of this EMA with hard-coded constants; there is exactly one now.)
+    """
 
     def __init__(self, n_lanes: int, n_components: int, ema: float = 0.8):
         self.n_lanes = n_lanes
@@ -37,6 +43,18 @@ class DepthCompactor:
         self.lane_stats = [LaneStats(depth_ema=(i + 0.5) * n_components
                                      / n_lanes)
                            for i in range(n_lanes)]
+        self.population_prior = (n_components - 1) / 2
+
+    def predict_depth(self, hint: Optional[float] = None) -> float:
+        """Expected exit depth of an incoming request: an explicit hint
+        (e.g. an earlier turn's prefill exit) wins; otherwise the running
+        population prior over observed prefill exits."""
+        return self.population_prior if hint is None else float(hint)
+
+    def observe_prefill_exit(self, depth: float):
+        """Warm the population prior with a FIRST prefill exit."""
+        self.population_prior = (self.ema * self.population_prior
+                                 + (1 - self.ema) * float(depth))
 
     def assign(self, predicted_depth: float, free_slots: List[int]) -> int:
         """Pick the free lane whose depth estimate is closest."""
@@ -61,3 +79,12 @@ class DepthCompactor:
         if not tot:
             return 0.0
         return sum(s.skipped_segments for s in self.lane_stats) / tot
+
+    def reset_skip_counters(self):
+        """Zero the skip accounting without losing the learned depth EMAs
+        (scheduler state) — used when the engine resets its metrics after
+        jit warm-up so every reported rate covers the same step window."""
+        for s in self.lane_stats:
+            s.steps = 0
+            s.skipped_segments = 0
+            s.total_segments = 0

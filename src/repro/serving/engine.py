@@ -2,11 +2,13 @@
 early exit (Algorithm 1 applied per generated token), KV/state backfill, and
 depth-compacted lane batching.
 
-The engine accounts compute analytically in MACs (the paper's own metric,
-§6.2): every decode step records which exit answered each sequence and
-whether deeper segments were actually skipped (cond_batch) or merely
-unselected (select mode), yielding the measured-speedup numbers for the
-beyond-paper benchmarks.
+Each lane carries one :class:`repro.core.exec.DecodeState` — position cursor,
+active mask, stateful-measure streaks, confidence EMA, and per-segment
+execution counters — through the :class:`~repro.core.exec.StagedExecutor`.
+Under ``cascade.exit_mode == "cond_batch"`` exited segments genuinely skip
+their compute (lax.cond), and the engine reports BOTH the paper's analytic
+MAC speedup (§6.2) and the measured wall-clock per-token cost, plus the real
+(executed) skip rate next to the scheduling *opportunity* rate.
 
 Exit decisions route through the shared :class:`repro.core.policy.ExitDecider`
 resolved from the config's ``cascade.confidence`` / ``cascade.policy``
@@ -17,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -24,8 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.exec import StagedExecutor
 from repro.core.macs import segment_macs_per_token
-from repro.core.policy import ExitDecider
 from repro.models.model import CascadeModel, extra_input_shapes
 from repro.serving.batching import DepthCompactor
 from repro.utils import get_logger
@@ -68,34 +71,52 @@ class CascadeServingEngine:
         self.n_lanes = n_lanes
         self.cache_len = cache_len
         self.compactor = DepthCompactor(n_lanes, cfg.cascade.n_components)
-        self.decider = ExitDecider.from_config(cfg)
+        self.executor = StagedExecutor(model, cfg)
+        self.decider = self.executor.decider
         self.lanes = []
         for _ in range(n_lanes):
             self.lanes.append({
                 "cache": model.init_cache(lane_batch, cache_len),
                 "slots": [_Slot() for _ in range(lane_batch)],
-                "pos": 0,
-                "policy_state": self.decider.init_state(lane_batch),
+                "state": self.executor.init_state(lane_batch),
             })
         self.queue: List[Request] = []
         self.finished: Dict[int, dict] = {}
         self.mac_prefix = segment_macs_per_token(cfg, cache_len)
+        self.reset_metrics()
+        # cache + DecodeState are donated: the engine never reuses the old
+        # buffers, and in-place updates keep decode wall-clock honest
+        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(2, 3))
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(2, 3))
+
+    def reset_metrics(self):
+        """Zero the MAC / wall-clock / skip-rate accounting (e.g. after jit
+        warm-up, so timing excludes compilation).  The compactor's learned
+        depth EMAs survive (scheduler state); only its skip counters reset,
+        so the MAC / wall-clock / skip rates in :meth:`stats` all cover the
+        same step window.  Per-request outputs (``finished``, and the
+        ``requests_finished`` / exit-depth stats derived from them) are NOT
+        cleared — they describe completed work, not a measurement window."""
+        self.compactor.reset_skip_counters()
         self._macs_spent = 0.0
         self._macs_dense = 0.0
-        # population prior for a new request's exit depth, warmed by the
-        # prefill exits actually observed (the compactor's depth prediction).
-        self._depth_prior = (cfg.cascade.n_components - 1) / 2
-        self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl)
+        self._decode_seconds = 0.0
+        self._decode_tokens = 0
+        self._segments_run = np.zeros(self.cfg.cascade.n_components, np.int64)
+        self._decode_steps = 0
+        self._skip_opportunities = 0
+        self._skip_opportunity_total = 0
 
     # -- jitted cores ---------------------------------------------------
-    def _prefill_impl(self, params, tokens, cache, extra):
-        return self.model.prefill(params, tokens, cache, extra)
+    def _prefill_impl(self, params, tokens, cache, state, extra):
+        d, cache, state = self.executor.prefill(params, tokens, cache, extra,
+                                                state=state)
+        return d.prediction, d.exit_index, d.confidence, cache, state
 
-    def _decode_impl(self, params, token, t, cache, extra, policy_state):
-        logits, cache = self.model.decode_step(params, token, t, cache, extra)
-        d = self.decider.decide(logits, state=policy_state)
-        return d.prediction, d.exit_index, d.confidence, cache, d.state
+    def _decode_impl(self, params, token, cache, state, extra):
+        d, cache, state = self.executor.decode_step(params, token, cache,
+                                                    state, extra)
+        return d.prediction, d.exit_index, d.confidence, cache, state
 
     # -- public API -----------------------------------------------------
     def submit(self, req: Request):
@@ -104,11 +125,10 @@ class CascadeServingEngine:
     def _predict_depth(self, req: Request) -> float:
         """Expected exit depth for an incoming request: an explicit hint in
         ``req.extra["predicted_depth"]`` (e.g. from an earlier turn's prefill
-        exit) wins; otherwise the engine's running prior over observed
+        exit) wins; otherwise the compactor's population prior over observed
         prefill exits."""
-        if req.extra and "predicted_depth" in req.extra:
-            return float(req.extra["predicted_depth"])
-        return self._depth_prior
+        hint = (req.extra or {}).get("predicted_depth")
+        return self.compactor.predict_depth(hint)
 
     def _admit(self):
         while self.queue:
@@ -128,15 +148,18 @@ class CascadeServingEngine:
             # when admission changes (simple + correct).
             lane["dirty"] = True
 
-    def _finish_if_done(self, s: _Slot, lane, lane_id: int):
+    def _finish_if_done(self, s: _Slot, pos: int, lane_id: int):
         if (len(s.generated) >= s.request.max_new_tokens
-                or lane["pos"] >= self.cache_len - 1):
+                or pos >= self.cache_len - 1):
             s.done = True
             self.finished[s.request.rid] = {
                 "tokens": list(s.generated),
                 "exit_depths": list(s.exit_depths),
                 "lane": lane_id,
             }
+
+    def _live_mask(self, lane) -> np.ndarray:
+        return np.array([not s.done for s in lane["slots"]])
 
     def _lane_prefill(self, lane, lane_id: int):
         """(Re)prefill a lane: pad contexts to a common length.
@@ -157,30 +180,28 @@ class CascadeServingEngine:
             toks[i, -len(p):] = p          # left-pad (simplest alignment)
         lane["cache"] = self.model.init_cache(self.lane_batch, self.cache_len)
         extra = self._extra(self.lane_batch)
-        logits, cache = self._prefill(self.params, jnp.asarray(toks),
-                                      lane["cache"], extra)
+        # re-prefill restarts the lane's DecodeState (streaks, EMA, cursors);
+        # the prefill decision itself counts as the streak's first step
+        state = self.executor.init_state(self.lane_batch,
+                                         active=self._live_mask(lane))
+        tok, exit_idx, _conf, cache, state = self._prefill(
+            self.params, jnp.asarray(toks), lane["cache"], state, extra)
         lane["cache"] = cache
-        lane["pos"] = S
-        decision = self.decider.decide(logits)
-        # re-prefill restarts stateful-measure streaks for the lane, but the
-        # prefill decision itself counts as the streak's first step
-        lane["policy_state"] = (decision.state if decision.state is not None
-                                else self.decider.init_state(self.lane_batch))
-        tok = np.asarray(decision.prediction)
-        exit_idx = np.asarray(decision.exit_index)
+        lane["state"] = state
+        tok = np.asarray(tok)
+        exit_idx = np.asarray(exit_idx)
         for i, s in enumerate(slots):
             if not s.done:
                 if not s.generated:
                     # warm the admission depth prior with the FIRST prefill
                     # exit only (re-prefills of in-flight slots don't
                     # re-count toward the prior)
-                    self._depth_prior = (0.8 * self._depth_prior
-                                         + 0.2 * float(exit_idx[i]))
+                    self.compactor.observe_prefill_exit(float(exit_idx[i]))
                 s.generated.append(int(tok[i]))
                 s.exit_depths.append(int(exit_idx[i]))
                 # the prefill token counts toward max_new_tokens like any
                 # decode tick — an in-flight slot near its limit may finish
-                self._finish_if_done(s, lane, lane_id)
+                self._finish_if_done(s, S, lane_id)
         lane["dirty"] = False
 
     def _extra(self, batch):
@@ -201,30 +222,44 @@ class CascadeServingEngine:
             last = [s.generated[-1] if not s.done else 0
                     for s in lane["slots"]]
             token = jnp.asarray(np.array(last, np.int32)[:, None])
-            t = lane["pos"]
-            tok, exit_idx, conf, cache, lane["policy_state"] = self._decode(
-                self.params, token, jnp.asarray(t, jnp.int32), lane["cache"],
-                self._extra(self.lane_batch), lane["policy_state"])
-            lane["cache"] = cache
-            lane["pos"] = t + 1
-            tok = np.asarray(tok)
+            live = self._live_mask(lane)
+            state = lane["state"].replace(active=jnp.asarray(live))
+            run_before = np.asarray(state.segments_run)
+            t0 = time.perf_counter()
+            tok, exit_idx, conf, cache, state = self._decode(
+                self.params, token, lane["cache"], state,
+                self._extra(self.lane_batch))
+            tok = np.asarray(tok)              # forces device sync
             exit_idx = np.asarray(exit_idx)
-            live = np.array([not s.done for s in lane["slots"]])
+            self._decode_seconds += time.perf_counter() - t0
+            lane["cache"] = cache
+            lane["state"] = state
             depths = exit_idx[live]
-            # analytic MAC accounting (paper §6.2): dense cost vs exit cost
             n_live = int(live.sum())
+            self._decode_tokens += n_live
+            self._decode_steps += 1
+            # real execution accounting from the carried segment counters:
+            # in cond_batch mode skipped segments genuinely did not compute
+            ran = np.asarray(state.segments_run) - run_before
+            self._segments_run += ran.astype(np.int64)
+            skipped_real = int(np.sum(ran[1:] == 0))
+            # scheduling headroom: segments nobody needed this step (what a
+            # perfect cond_batch run would skip), vs what actually skipped
+            max_depth = int(depths.max()) if n_live else 0
+            self._skip_opportunities += max(
+                0, (self.cfg.cascade.n_components - 1) - max_depth)
+            self._skip_opportunity_total += self.cfg.cascade.n_components - 1
+            # analytic MAC accounting (paper §6.2): dense cost vs exit cost
             self._macs_dense += n_live * self.mac_prefix[-1]
             self._macs_spent += float(
                 np.sum(np.asarray(self.mac_prefix)[depths])) if n_live else 0.0
-            max_depth = int(depths.max()) if n_live else 0
-            skipped = (self.cfg.cascade.n_components - 1) - max_depth
-            self.compactor.observe(lane_id, depths, max(0, skipped))
+            self.compactor.observe(lane_id, depths, skipped_real)
             for i, s in enumerate(lane["slots"]):
                 if s.done:
                     continue
                 s.generated.append(int(tok[i]))
                 s.exit_depths.append(int(exit_idx[i]))
-                self._finish_if_done(s, lane, lane_id)
+                self._finish_if_done(s, int(state.t), lane_id)
 
     def run(self, max_ticks: int = 1000):
         for _ in range(max_ticks):
@@ -241,9 +276,18 @@ class CascadeServingEngine:
             return 1.0
         return self._macs_dense / self._macs_spent
 
+    def wallclock_us_per_token(self) -> Optional[float]:
+        """Measured decode wall-clock per generated token (µs); includes
+        jit warm-up unless :meth:`reset_metrics` was called after it."""
+        if not self._decode_tokens:
+            return None
+        return 1e6 * self._decode_seconds / self._decode_tokens
+
     def stats(self) -> dict:
         depths = list(itertools.chain.from_iterable(
             r["exit_depths"] for r in self.finished.values()))
+        opp = (self._skip_opportunities / self._skip_opportunity_total
+               if self._skip_opportunity_total else 0.0)
         return {
             "requests_finished": len(self.finished),
             "mean_exit_depth": float(np.mean(depths)) if depths else None,
@@ -251,5 +295,15 @@ class CascadeServingEngine:
                 depths, minlength=self.cfg.cascade.n_components).tolist()
             if depths else None,
             "analytic_speedup": self.speedup(),
+            # realized skips (cond_batch executes them; select never skips)
             "cond_batch_skip_rate": self.compactor.skip_rate(),
+            # what perfect depth compaction could have skipped
+            "skip_opportunity_rate": opp,
+            "segments_run": self._segments_run.tolist(),
+            "wallclock_us_per_token": self.wallclock_us_per_token(),
+            # per-lane mean of the carried confidence EMA (slot difficulty
+            # telemetry from DecodeState)
+            "lane_conf_ema": [
+                float(np.mean(np.asarray(lane["state"].ema_conf)))
+                for lane in self.lanes],
         }

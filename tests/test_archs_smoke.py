@@ -101,7 +101,10 @@ def test_sliding_window_cache_matches_full_window_mask():
 
 def test_cond_batch_skips_and_backfills():
     """cond_batch with threshold 0 ⇒ every sequence exits at component 0;
-    deeper segments are skipped but their caches stay coherent (backfill)."""
+    the staged executor skips the deeper segment's compute (its execution
+    counter stays 0) but keeps its caches coherent (backfill)."""
+    from repro.core.exec import StagedExecutor
+
     cfg = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
     cfg = cfg.with_cascade(thresholds=(0.0, 0.0), exit_mode="cond_batch",
                            state_backfill=True)
@@ -110,10 +113,15 @@ def test_cond_batch_skips_and_backfills():
     rng = np.random.default_rng(4)
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
     cache = model.init_cache(2, 16)
-    el, cache = model.prefill(params, toks, cache)
-    logits, cache2 = model.decode_step(params, toks[:, :1], 8, cache)
-    # cache of segment 1 must have been written at slot 8 (backfill)
+    ex = StagedExecutor(model, cfg)
+    d, cache, state = ex.prefill(params, toks, cache)
     k_before = cache["segments"][1][0]["k"][:, :, 8]
+    d2, cache2, state = ex.decode_step(params, d.prediction[:, None], cache,
+                                       state)
+    assert int(np.max(np.asarray(d2.exit_index))) == 0
+    # the deep segment never computed ...
+    np.testing.assert_array_equal(np.asarray(state.segments_run), [1, 0])
+    # ... yet its cache was written at slot 8 (backfill keeps it coherent)
     k_after = cache2["segments"][1][0]["k"][:, :, 8]
     assert float(jnp.max(jnp.abs(k_after))) > 0
     assert float(jnp.max(jnp.abs(k_before))) == 0

@@ -2,7 +2,12 @@
 beyond-paper LLM-cascade and kernel benches.
 
 Prints ``name,us_per_call,derived`` CSV (and tees a copy to
-results/bench.csv when results/ exists).
+results/bench.csv when results/ exists).  Whenever the llm_cascade bench
+runs its host-vs-device serving comparison, the machine-readable summary
+(wall-clock µs/token per runtime, device_speedup, realized skip rate,
+opportunity rate, MAC speedup, compile seconds) is persisted to
+``BENCH_serving.json`` at the repo root so the serving perf trajectory is
+tracked across PRs.
 
     python benchmarks/run.py [--quick] [--only llm_cascade,fig3]
 
@@ -10,6 +15,7 @@ results/bench.csv when results/ exists).
 """
 import argparse
 import inspect
+import json
 import os
 import sys
 import traceback
@@ -55,6 +61,14 @@ def main() -> None:
     if os.path.isdir("results"):
         with open("results/bench.csv", "w") as f:
             f.write(out + "\n")
+    summary = getattr(bench_llm_cascade, "LAST_SERVING_SUMMARY", None)
+    if summary is not None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        path = os.path.join(root, "BENCH_serving.json")
+        with open(path, "w") as f:
+            json.dump(summary, f, indent=2)
+            f.write("\n")
+        print(f"# serving summary -> {path}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

@@ -1,0 +1,40 @@
+"""CI gate for the host-vs-device serving comparison.
+
+Reads ``BENCH_serving.json`` (written by ``benchmarks/run.py`` whenever the
+llm_cascade bench runs) and enforces the dispatch-amortization acceptance
+criterion: the device while_loop runtime is strictly faster than the host
+per-token runtime on every measured row.  Exit code 1 on violation so CI
+can retry once — the quick-mode margin is pure dispatch amortization
+(~1.1–1.8x) and a shared runner's scheduler noise can eat it in a single
+unlucky run.
+
+    python scripts/check_bench_serving.py [path]
+"""
+import json
+import sys
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_serving.json"
+    with open(path) as f:
+        s = json.load(f)
+    if not s.get("rows"):
+        print(f"{path}: no serving rows", file=sys.stderr)
+        return 1
+    ok = True
+    for r in s["rows"]:
+        if not (r["host_us_per_token"] and r["device_us_per_token"]):
+            print(f"missing wallclock in row: {r}", file=sys.stderr)
+            ok = False
+            continue
+        if r["device_speedup"] <= 1.0:
+            print(f"device loop not faster (th={r['threshold']}): "
+                  f"{r['device_speedup']:.3f}x", file=sys.stderr)
+            ok = False
+    print("device_speedup:",
+          [round(r["device_speedup"], 3) for r in s["rows"]])
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

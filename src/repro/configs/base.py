@@ -49,6 +49,17 @@ class CascadeConfig:
     # The two modes produce bit-identical tokens, exit indices and carried
     # DecodeState — exit_mode picks an execution strategy, never a semantics.
     exit_mode: str = "select"
+    # Skip-predicate granularity for staged decode: the batch is split into
+    # ``n_cohorts`` contiguous, equal-size cohorts, each with its OWN skip
+    # predicate (nested lax.cond per cohort in cond_batch mode).  A segment's
+    # compute is skipped for a cohort once every live sequence in THAT cohort
+    # has exited, so mixed-difficulty batches realize more of the measured
+    # skip opportunity than the whole-batch (n_cohorts=1) predicate.  Unlike
+    # exit_mode this IS semantics: which rows get backfilled (vs computed)
+    # cache entries depends on the cohort split, so compare runs at equal
+    # n_cohorts.  Batches not divisible by n_cohorts degrade to the largest
+    # divisor (1 in the worst case), mirroring the sharding rules.
+    n_cohorts: int = 1
     # Whether deeper-layer KV / recurrent state is backfilled from the exit
     # hidden state so later tokens can attend at full depth.
     state_backfill: bool = True
@@ -71,6 +82,8 @@ class CascadeConfig:
             raise ValueError(
                 f"exit_mode must be 'select' or 'cond_batch', got "
                 f"{self.exit_mode!r}")
+        if self.n_cohorts < 1:
+            raise ValueError(f"n_cohorts must be >= 1, got {self.n_cohorts}")
 
 
 @dataclasses.dataclass(frozen=True)

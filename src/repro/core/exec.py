@@ -50,6 +50,29 @@ from repro.core.policy import ExitDecider, ExitDecision
 CONF_EMA_DECAY = 0.8
 
 
+def effective_cohorts(n_cohorts: int, batch: int) -> int:
+    """Largest divisor of ``batch`` that is <= ``n_cohorts`` (>= 1).
+
+    Cohort slices must be equal-size static ranges, so an indivisible batch
+    degrades gracefully instead of erroring — the same policy the sharding
+    rules apply to indivisible axes.
+    """
+    c = max(1, min(int(n_cohorts), int(batch)))
+    while batch % c:
+        c -= 1
+    return c
+
+
+def _slice_ctx(ctx, lo, hi):
+    """Batch-slice a decode context: only ``cross`` (B, T, d) carries a
+    batch dim; everything else (kpos ring, scalars, shared params) is
+    batch-free and passes through."""
+    cross = ctx.get("cross")
+    if cross is None:
+        return ctx
+    return {**ctx, "cross": cross[lo:hi]}
+
+
 @dataclasses.dataclass
 class DecodeState:
     """Per-lane decode carry (a registered pytree).
@@ -160,14 +183,28 @@ class StagedExecutor:
         Returns (decision, new_cache, new_state).  Segment 0 always runs;
         each deeper segment runs only while some live sequence has not
         exited (cond_batch) or computes-but-masks (select).
+
+        ``cfg.cascade.n_cohorts > 1`` splits the batch into C contiguous
+        equal-size cohorts, each with its OWN skip predicate: a deep
+        segment's compute is skipped for a cohort as soon as every live
+        sequence in THAT cohort has exited, even while another cohort still
+        needs it (nested ``lax.cond`` per cohort).  The serving engine
+        places similar-depth requests into the same cohort so this converts
+        more of the measured skip opportunity into realized skips.
+        ``segments_run`` counts in cohort units: segment ``si`` advances by
+        the number of cohorts that actually computed it (C per step when
+        nothing skips; C == 1 reproduces the whole-batch predicate exactly).
         """
         model, decider, n_m = self.model, self.decider, self.n_components
         ths = decider.resolved_thresholds(n_m)
         t = state.t
+        B = token.shape[0]
+        C = effective_cohorts(self.cfg.cascade.n_cohorts, B)
+        Bc = B // C
         h, ctx = model.begin_decode(params, token, t, cache, extra)
         segs = cache["segments"]
         new_segs = []
-        ran = [jnp.ones((), jnp.int32)]
+        ran = [jnp.asarray(C, jnp.int32)]
 
         h, nc, _ = model.run_segment(0, params, h, ctx, segs[0])
         new_segs.append(nc)
@@ -177,31 +214,57 @@ class StagedExecutor:
                                     state=state.policy)
 
         for si in range(1, n_m):
-            skip = decider.should_skip(sc, state.active)
+            h_parts, nc_parts, sc_parts = [], [], []
+            ran_si = jnp.zeros((), jnp.int32)
+            for c in range(C):
+                lo, hi = c * Bc, (c + 1) * Bc
+                if C == 1:
+                    h_c, seg_c, sc_c, ctx_c = h, segs[si], sc, ctx
+                    active_c = state.active
+                else:
+                    h_c = h[lo:hi]
+                    seg_c = jax.tree_util.tree_map(
+                        lambda x: x[:, lo:hi], segs[si])
+                    sc_c = decider.slice_carry(sc, lo, hi)
+                    ctx_c = _slice_ctx(ctx, lo, hi)
+                    active_c = state.active[lo:hi]
+                skip = decider.should_skip(sc_c, active_c)
 
-            def run_path(h, seg_cache, sc, _si=si):
-                h2, nc2, _ = model.run_segment(_si, params, h, ctx, seg_cache)
-                o, c = decider.measure_one(
-                    model.exit_logits(params, _si, h2)[:, 0, :])
-                return h2, nc2, decider.scan_component(_si, n_m, o, c, ths,
-                                                       sc)
+                def run_path(h, seg_cache, sc, _si=si, _ctx=ctx_c):
+                    h2, nc2, _ = model.run_segment(_si, params, h, _ctx,
+                                                   seg_cache)
+                    o, c = decider.measure_one(
+                        model.exit_logits(params, _si, h2)[:, 0, :])
+                    return h2, nc2, decider.scan_component(_si, n_m, o, c,
+                                                           ths, sc)
 
-            def skip_path(h, seg_cache, sc, _si=si):
-                if self.cfg.cascade.state_backfill:
-                    seg_cache = model.backfill_segment(_si, params, h, ctx,
-                                                       seg_cache)
-                return h, seg_cache, sc
+                def skip_path(h, seg_cache, sc, _si=si, _ctx=ctx_c):
+                    if self.cfg.cascade.state_backfill:
+                        seg_cache = model.backfill_segment(_si, params, h,
+                                                           _ctx, seg_cache)
+                    return h, seg_cache, sc
 
-            if self.mode == "cond_batch":
-                h, nc, sc = lax.cond(skip, skip_path, run_path,
-                                     h, segs[si], sc)
-                ran.append(jnp.logical_not(skip).astype(jnp.int32))
-            else:  # select: both paths compute; skip only masks the result
-                full = run_path(h, segs[si], sc)
-                lite = skip_path(h, segs[si], sc)
-                h, nc, sc = jax.tree_util.tree_map(
-                    lambda a, b: jnp.where(skip, a, b), lite, full)
-                ran.append(jnp.ones((), jnp.int32))
+                if self.mode == "cond_batch":
+                    h_c, nc_c, sc_c = lax.cond(skip, skip_path, run_path,
+                                               h_c, seg_c, sc_c)
+                    ran_si = ran_si + jnp.logical_not(skip).astype(jnp.int32)
+                else:  # select: both paths compute; skip only masks results
+                    full = run_path(h_c, seg_c, sc_c)
+                    lite = skip_path(h_c, seg_c, sc_c)
+                    h_c, nc_c, sc_c = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(skip, a, b), lite, full)
+                    ran_si = ran_si + 1
+                h_parts.append(h_c)
+                nc_parts.append(nc_c)
+                sc_parts.append(sc_c)
+            if C == 1:
+                h, nc, sc = h_parts[0], nc_parts[0], sc_parts[0]
+            else:
+                h = jnp.concatenate(h_parts, axis=0)
+                nc = jax.tree_util.tree_map(
+                    lambda *xs: jnp.concatenate(xs, axis=1), *nc_parts)
+                sc = decider.concat_carry(sc_parts)
+            ran.append(ran_si)
             new_segs.append(nc)
 
         decision = decider.finish_scan(sc)

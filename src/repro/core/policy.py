@@ -138,6 +138,14 @@ class ConfidenceMeasure:
         return None
 
     def init_state(self, n_exits: int, batch: int):
+        """Per-sequence decode-time carry for stateful measures, or None.
+
+        LAYOUT CONTRACT: a non-None state must be shaped
+        ``(n_exits, batch, ...)`` — the component scan indexes row ``m``
+        per component, ``decode_state_spec`` shards axis 1 as the batch,
+        and cohort-split execution slices axis 1
+        (:meth:`ExitDecider.slice_carry`).
+        """
         return None
 
 
@@ -589,6 +597,25 @@ class ExitDecider:
             "conf": jnp.where(fresh, confidence, carry["conf"]),
             "streak": streak,
         }
+
+    def slice_carry(self, carry, lo: int, hi: int):
+        """Batch-slice a decision-scan carry (cohort-split execution).
+
+        Lives here, next to the carry layout :meth:`scan_component`
+        defines: per-sample leaves are batch-leading; the stateful-measure
+        ``streak`` follows the :meth:`ConfidenceMeasure.init_state`
+        contract ``(n_exits, batch, ...)`` and slices axis 1.
+        """
+        return {k: (v if v is None
+                    else (v[:, lo:hi] if k == "streak" else v[lo:hi]))
+                for k, v in carry.items()}
+
+    def concat_carry(self, parts):
+        """Inverse of :meth:`slice_carry`: rejoin per-cohort carries."""
+        return {k: (None if parts[0][k] is None
+                    else jnp.concatenate([p[k] for p in parts],
+                                         axis=1 if k == "streak" else 0))
+                for k in parts[0]}
 
     def should_skip(self, carry, active=None) -> jnp.ndarray:
         """Scalar bool: every live sample has already exited — the staged

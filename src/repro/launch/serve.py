@@ -32,6 +32,14 @@ def main():
                          "entropy, margin, patience@k[:base], ...)")
     ap.add_argument("--exit-mode", default="select",
                     choices=["select", "cond_batch"])
+    ap.add_argument("--runtime", default="host",
+                    choices=["host", "device"],
+                    help="host: one dispatch per token; device: K-token "
+                         "lax.while_loop chunks (DeviceDecodeLoop)")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="device-runtime tokens per dispatch (K)")
+    ap.add_argument("--cohorts", type=int, default=1,
+                    help="cohort-split skip granularity (cascade.n_cohorts)")
     ap.add_argument("--lanes", type=int, default=2)
     ap.add_argument("--lane-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=64)
@@ -42,7 +50,8 @@ def main():
         cfg = reduced(cfg)
     n = cfg.cascade.n_components
     ths = tuple([args.threshold] * (n - 1) + [0.0])
-    cfg = cfg.with_cascade(thresholds=ths, exit_mode=args.exit_mode)
+    cfg = cfg.with_cascade(thresholds=ths, exit_mode=args.exit_mode,
+                           n_cohorts=args.cohorts)
     if args.confidence:
         cfg = cfg.with_cascade(confidence=args.confidence)
     model = build_model(cfg)
@@ -50,7 +59,9 @@ def main():
     engine = CascadeServingEngine(cfg, model, params,
                                   lane_batch=args.lane_batch,
                                   n_lanes=args.lanes,
-                                  cache_len=args.cache_len)
+                                  cache_len=args.cache_len,
+                                  runtime=args.runtime,
+                                  chunk=args.chunk)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(Request(
@@ -62,10 +73,12 @@ def main():
     stats = engine.stats()
     log.info("stats: %s", json.dumps(stats, indent=2))
     if args.exit_mode == "cond_batch":
-        log.info("real skip rate %.3f (opportunity %.3f), %.1f us/token",
+        log.info("real skip rate %.3f (opportunity %.3f), %.1f us/token "
+                 "(%s runtime, compile %.2fs)",
                  stats["cond_batch_skip_rate"],
                  stats["skip_opportunity_rate"],
-                 stats["wallclock_us_per_token"] or 0.0)
+                 stats["wallclock_us_per_token"] or 0.0,
+                 stats["runtime"], stats["compile_seconds"])
     assert stats["requests_finished"] == args.requests
 
 

@@ -209,6 +209,23 @@ def decode_state_spec(state, cfg, mesh, batch: int):
     return jax.tree_util.tree_map_with_path(rule, state)
 
 
+def decode_loop_in_specs(params, cache, state, cfg, mesh, batch: int):
+    """Input PartitionSpecs for ``launch.steps.make_decode_loop_step``'s
+    ``(params, token, cache, state, remaining, extra)`` signature — the whole
+    while_loop carry sharded by the existing rules: weights via
+    :func:`param_spec` (serve1d inference layout), the KV/state cache via
+    :func:`cache_spec`, the carried DecodeState via
+    :func:`decode_state_spec`, and the (B, 1) token / (B,) remaining-budget
+    vectors batch-sharded like any token batch.  ``extra`` is left
+    unconstrained (None)."""
+    return (param_spec(params, cfg, mesh, mode="serve1d"),
+            batch_spec(cfg, mesh, batch, 2),
+            cache_spec(cache, cfg, mesh, batch),
+            decode_state_spec(state, cfg, mesh, batch),
+            batch_spec(cfg, mesh, batch, 1),
+            None)
+
+
 def batch_spec(cfg, mesh, batch: int, ndim: int) -> P:
     dp = batch_axes(mesh)
     if divisible(batch, axis_size(mesh, dp)):

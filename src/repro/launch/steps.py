@@ -3,7 +3,10 @@
 ``make_train_step``: joint-loss cascade training step (fwd + bwd + AdamW).
 ``make_prefill_step`` / ``make_serve_step``: inference steps built on the
 staged executor; serve_step is ONE new token against a KV/state cache (what
-the decode shapes lower).
+the decode shapes lower).  ``make_decode_loop_step``: the device-resident
+multi-token variant — a ``lax.while_loop`` over the staged executor that
+decodes up to K tokens per dispatch into preallocated device buffers (the
+body of :class:`repro.serving.runtime.DeviceDecodeLoop`).
 
 Serve-step signature (the DecodeState redesign)::
 
@@ -83,6 +86,80 @@ def make_serve_step(model: CascadeModel, cfg: ModelConfig):
                                                extra)
         return d.prediction, d.exit_index, d.confidence, cache, state
     return serve_step
+
+
+def make_decode_loop_step(model: CascadeModel, cfg: ModelConfig,
+                          chunk: int, cache_len: int):
+    """Device-resident multi-token decode: a ``lax.while_loop`` over the
+    staged executor that generates up to ``chunk`` tokens per call with NO
+    host round-trip between tokens.
+
+    Signature::
+
+        loop_step(params, token, cache, state, remaining, extra)
+            -> (tokens, exits, confs, live, n_steps, cache, state, remaining)
+
+    ``token`` is the (B, 1) continuation token, ``remaining`` the (B,)
+    per-slot token budget (``max_new_tokens`` minus tokens already
+    generated; 0 for finished slots).  Outputs land in preallocated
+    ``(chunk, B)`` device buffers — tokens, exit indices, confidences, and
+    the per-step live mask — so the caller syncs to host once per chunk
+    instead of once per token.  ``n_steps`` is how many loop iterations
+    actually ran: the loop ends early once every slot has either spent its
+    budget or hit the cache limit (``state.active`` goes all-False), exactly
+    mirroring the host engine's per-token finish rule
+    (``len(generated) >= max_new_tokens or pos >= cache_len - 1``), which is
+    what keeps host- and device-runtime token streams bit-identical.
+
+    Each iteration is one :meth:`StagedExecutor.decode_step`, so cond_batch
+    segment skipping and cohort-split predicates (``cascade.n_cohorts``)
+    apply inside the loop body unchanged.
+    """
+    executor = StagedExecutor(model, cfg)
+    K = int(chunk)
+    limit = int(cache_len) - 1
+
+    def loop_step(params, token, cache, state, remaining, extra):
+        B = token.shape[0]
+        bufs = {
+            "tokens": jnp.zeros((K, B), jnp.int32),
+            "exits": jnp.zeros((K, B), jnp.int32),
+            "confs": jnp.zeros((K, B), jnp.float32),
+            "live": jnp.zeros((K, B), bool),
+        }
+
+        def cond_fn(carry):
+            i, _token, _cache, st, _remaining, _bufs = carry
+            return jnp.logical_and(i < K, jnp.any(st.active))
+
+        def body_fn(carry):
+            i, token, cache, st, remaining, bufs = carry
+            live = st.active
+            d, cache, st = executor.decode_step(params, token, cache, st,
+                                                extra)
+            bufs = {
+                "tokens": bufs["tokens"].at[i].set(
+                    d.prediction.astype(jnp.int32)),
+                "exits": bufs["exits"].at[i].set(
+                    d.exit_index.astype(jnp.int32)),
+                "confs": bufs["confs"].at[i].set(
+                    d.confidence.astype(jnp.float32)),
+                "live": bufs["live"].at[i].set(live),
+            }
+            remaining = remaining - live.astype(jnp.int32)
+            st = st.replace(active=jnp.logical_and(
+                jnp.logical_and(live, remaining > 0), st.t < limit))
+            token = d.prediction[:, None].astype(jnp.int32)
+            return (i + 1, token, cache, st, remaining, bufs)
+
+        carry = (jnp.zeros((), jnp.int32), token, cache, state,
+                 jnp.asarray(remaining, jnp.int32), bufs)
+        i, token, cache, state, remaining, bufs = jax.lax.while_loop(
+            cond_fn, body_fn, carry)
+        return (bufs["tokens"], bufs["exits"], bufs["confs"], bufs["live"],
+                i, cache, state, remaining)
+
+    return loop_step
 
 
 def make_decode_state(cfg: ModelConfig, batch: int, t: int = 0) -> DecodeState:

@@ -1,4 +1,6 @@
 from repro.serving.engine import CascadeServingEngine, Request
 from repro.serving.batching import DepthCompactor
+from repro.serving.runtime import DecodeChunk, DeviceDecodeLoop
 
-__all__ = ["CascadeServingEngine", "Request", "DepthCompactor"]
+__all__ = ["CascadeServingEngine", "Request", "DepthCompactor",
+           "DecodeChunk", "DeviceDecodeLoop"]

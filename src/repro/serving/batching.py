@@ -22,7 +22,9 @@ import numpy as np
 class LaneStats:
     depth_ema: float
     steps: int = 0
-    skipped_segments: int = 0
+    # float: with cohort-split skipping (cascade.n_cohorts > 1) a segment
+    # can be skipped for a fraction of the lane (skipped cohorts / cohorts)
+    skipped_segments: float = 0.0
     total_segments: int = 0
 
 
@@ -64,15 +66,54 @@ class DepthCompactor:
                  for i in free_slots]
         return free_slots[int(np.argmin(dists))]
 
+    # -- cohort placement (within-lane skip granularity) -----------------
+    def preferred_cohort(self, predicted_depth: float, n_cohorts: int) -> int:
+        """Cohort band for a predicted exit depth: cohort c of C targets
+        depths in [c, c+1) * n_components / C — shallow traffic lands in
+        low cohorts, deep traffic in high ones, so per-cohort skip
+        predicates fire on homogeneous subgroups."""
+        if n_cohorts <= 1:
+            return 0
+        frac = predicted_depth / max(1, self.n_components - 1)
+        return int(np.clip(int(frac * n_cohorts), 0, n_cohorts - 1))
+
+    def pick_slot(self, predicted_depth: float, free_slots: List[int],
+                  lane_batch: int, n_cohorts: int) -> int:
+        """Among a lane's free slots, pick the one whose cohort (contiguous
+        ``lane_batch / n_cohorts`` slot ranges) best matches the request's
+        predicted depth.  n_cohorts == 1 degenerates to first-free."""
+        if not free_slots:
+            raise ValueError("no free slots")
+        pref = self.preferred_cohort(predicted_depth, n_cohorts)
+        return min(free_slots,
+                   key=lambda s: (abs(s * n_cohorts // lane_batch - pref), s))
+
     def observe(self, lane: int, exit_depths: np.ndarray,
-                segments_skipped: int):
+                segments_skipped: float, steps: int = 1):
+        """Record ``steps`` decode steps of a lane: the exit depths of every
+        live (slot, step), and how many segment-executions were skipped
+        (fractional under cohort splitting).  The device runtime reports a
+        whole K-token chunk at once (steps = chunk length run)."""
         st = self.lane_stats[lane]
         if len(exit_depths):
-            st.depth_ema = (self.ema * st.depth_ema
-                            + (1 - self.ema) * float(np.mean(exit_depths)))
-        st.steps += 1
+            # one EMA blend per STEP, compounded: a K-step chunk report
+            # must move depth_ema as far as K per-token reports would,
+            # or device-runtime lanes adapt ~chunk-times slower than host
+            decay = self.ema ** steps
+            st.depth_ema = (decay * st.depth_ema
+                            + (1 - decay) * float(np.mean(exit_depths)))
+        st.steps += steps
         st.skipped_segments += segments_skipped
-        st.total_segments += self.n_components - 1
+        st.total_segments += (self.n_components - 1) * steps
+
+    def observe_retire(self, lane: int):
+        """A slot in ``lane`` finished: decay the lane's depth EMA toward
+        the population prior.  Without this, a lane that drained its deep
+        requests keeps a stale high ``depth_ema`` and repels the shallow
+        traffic that should now fill it (and vice versa)."""
+        st = self.lane_stats[lane]
+        st.depth_ema = (self.ema * st.depth_ema
+                        + (1 - self.ema) * self.population_prior)
 
     def skip_rate(self) -> float:
         tot = sum(s.total_segments for s in self.lane_stats)

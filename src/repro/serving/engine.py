@@ -14,6 +14,27 @@ Exit decisions route through the shared :class:`repro.core.policy.ExitDecider`
 resolved from the config's ``cascade.confidence`` / ``cascade.policy``
 registry strings — swapping the measure (entropy, margin, patience@k, a
 custom registered one) requires no engine change.
+
+Two execution runtimes (``runtime=`` at construction):
+
+* ``"host"`` — one jitted decode step per token, synced to host every tick
+  (simple, admission-responsive; dispatch overhead per token).
+* ``"device"`` — a :class:`repro.serving.runtime.DeviceDecodeLoop` decodes
+  up to ``chunk`` tokens per dispatch inside a ``lax.while_loop``; tokens /
+  exit indices land in device buffers and sync once per chunk.  Per-token
+  dispatch cost is amortized ~chunk-fold (the win at small lane batches).
+  Pass ``mesh`` to shard the whole loop carry over devices (shard_rules
+  layout).  Token streams are bit-identical to the host runtime for
+  requests admitted at the same points — i.e. whenever nothing queues
+  (offered load <= slot capacity).  QUEUED requests admit at chunk
+  boundaries here (up to ``chunk`` tokens later than the host runtime),
+  so a lane's re-prefill can land at a different generated length and
+  its sequences legitimately diverge: an admission-latency trade, not an
+  execution-semantics difference.
+
+Both runtimes time the jit warm-up call separately and report it as
+``compile_seconds`` in :meth:`stats` — ``wallclock_us_per_token`` never
+includes compilation.
 """
 from __future__ import annotations
 
@@ -27,10 +48,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.exec import StagedExecutor
+from repro.core.exec import StagedExecutor, effective_cohorts
 from repro.core.macs import segment_macs_per_token
 from repro.models.model import CascadeModel, extra_input_shapes
 from repro.serving.batching import DepthCompactor
+from repro.serving.runtime import DeviceDecodeLoop
 from repro.utils import get_logger
 
 log = get_logger("serving")
@@ -63,13 +85,26 @@ class CascadeServingEngine:
 
     def __init__(self, cfg: ModelConfig, model: CascadeModel, params,
                  lane_batch: int = 4, n_lanes: int = 2,
-                 cache_len: int = 256):
+                 cache_len: int = 256, runtime: str = "host",
+                 chunk: int = 8, mesh=None):
+        if runtime not in ("host", "device"):
+            raise ValueError(
+                f"runtime must be 'host' or 'device', got {runtime!r}")
+        if mesh is not None and runtime != "device":
+            raise ValueError(
+                "mesh sharding is only applied by the device decode loop; "
+                "the host per-token step runs unsharded — pass "
+                "runtime='device' (or drop mesh=) rather than silently "
+                "serving single-device")
         self.cfg = cfg
         self.model = model
         self.params = params
         self.lane_batch = lane_batch
         self.n_lanes = n_lanes
         self.cache_len = cache_len
+        self.runtime = runtime
+        self.chunk = chunk
+        self.cohorts = effective_cohorts(cfg.cascade.n_cohorts, lane_batch)
         self.compactor = DepthCompactor(n_lanes, cfg.cascade.n_components)
         self.executor = StagedExecutor(model, cfg)
         self.decider = self.executor.decider
@@ -83,20 +118,35 @@ class CascadeServingEngine:
         self.queue: List[Request] = []
         self.finished: Dict[int, dict] = {}
         self.mac_prefix = segment_macs_per_token(cfg, cache_len)
+        # jit warm-up accounting: the first decode dispatch per runtime path
+        # pays compilation and is reported as compile_seconds, never as
+        # decode wall-clock (reset_metrics does NOT clear these — compile is
+        # a one-time cost, not part of any measurement window)
+        self._compile_seconds = 0.0
+        self._decode_warm = False
         self.reset_metrics()
         # cache + DecodeState are donated: the engine never reuses the old
         # buffers, and in-place updates keep decode wall-clock honest
         self._prefill = jax.jit(self._prefill_impl, donate_argnums=(2, 3))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(2, 3))
+        self.loop = (DeviceDecodeLoop(model, cfg, chunk=chunk,
+                                      cache_len=cache_len, mesh=mesh)
+                     if runtime == "device" else None)
 
     def reset_metrics(self):
-        """Zero the MAC / wall-clock / skip-rate accounting (e.g. after jit
-        warm-up, so timing excludes compilation).  The compactor's learned
-        depth EMAs survive (scheduler state); only its skip counters reset,
-        so the MAC / wall-clock / skip rates in :meth:`stats` all cover the
-        same step window.  Per-request outputs (``finished``, and the
-        ``requests_finished`` / exit-depth stats derived from them) are NOT
-        cleared — they describe completed work, not a measurement window."""
+        """Zero the MAC / wall-clock / skip-rate accounting.  The
+        compactor's learned depth EMAs survive (scheduler state); only its
+        skip counters reset, so the MAC / wall-clock / skip rates in
+        :meth:`stats` all cover the same step window.  ``compile_seconds``
+        and the warm flags also survive: jit compilation is timed apart
+        from decode automatically, so resetting after warm-up is no longer
+        required for a clean ``wallclock_us_per_token``.  Per-request
+        outputs (``finished``, and the ``requests_finished`` / exit-depth
+        stats derived from them) are NOT cleared — they describe completed
+        work, not a measurement window.  The warm-up dispatch (host: first
+        step; device: first chunk) is excluded from EVERY window metric —
+        MAC, skip, opportunity, wallclock — so they always describe the
+        same steps."""
         self.compactor.reset_skip_counters()
         self._macs_spent = 0.0
         self._macs_dense = 0.0
@@ -137,9 +187,15 @@ class CascadeServingEngine:
             if not free:
                 break
             req = self.queue.pop(0)
-            lane_id = self.compactor.assign(self._predict_depth(req), free)
+            depth = self._predict_depth(req)
+            lane_id = self.compactor.assign(depth, free)
             lane = self.lanes[lane_id]
-            slot = next(s for s in lane["slots"] if s.done)
+            # within the lane, place the request in the cohort whose depth
+            # band matches — cohort-split skip predicates (n_cohorts > 1)
+            # only fire when a cohort's co-residents exit together
+            free_slots = [i for i, s in enumerate(lane["slots"]) if s.done]
+            slot = lane["slots"][self.compactor.pick_slot(
+                depth, free_slots, self.lane_batch, self.cohorts)]
             slot.request = req
             slot.generated = []
             slot.exit_depths = []
@@ -157,6 +213,10 @@ class CascadeServingEngine:
                 "exit_depths": list(s.exit_depths),
                 "lane": lane_id,
             }
+            # retiring traffic decays the lane's depth EMA toward the
+            # population prior so the lane doesn't keep repelling traffic
+            # that no longer matches its drained residents
+            self.compactor.observe_retire(lane_id)
 
     def _live_mask(self, lane) -> np.ndarray:
         return np.array([not s.done for s in lane["slots"]])
@@ -211,7 +271,9 @@ class CascadeServingEngine:
         return {k: jnp.zeros(v, jnp.float32) for k, v in shapes.items()}
 
     def step(self):
-        """One engine tick: admit, prefill dirty lanes, decode one token."""
+        """One engine tick: admit, prefill dirty lanes, then decode — one
+        token per lane (``runtime="host"``) or up to ``chunk`` tokens per
+        lane inside the device loop (``runtime="device"``)."""
         self._admit()
         for lane_id, lane in enumerate(self.lanes):
             if all(s.done for s in lane["slots"]):
@@ -219,47 +281,124 @@ class CascadeServingEngine:
             if lane.get("dirty"):
                 self._lane_prefill(lane, lane_id)
                 continue
-            last = [s.generated[-1] if not s.done else 0
-                    for s in lane["slots"]]
-            token = jnp.asarray(np.array(last, np.int32)[:, None])
-            live = self._live_mask(lane)
-            state = lane["state"].replace(active=jnp.asarray(live))
-            run_before = np.asarray(state.segments_run)
-            t0 = time.perf_counter()
-            tok, exit_idx, conf, cache, state = self._decode(
-                self.params, token, lane["cache"], state,
-                self._extra(self.lane_batch))
-            tok = np.asarray(tok)              # forces device sync
-            exit_idx = np.asarray(exit_idx)
-            self._decode_seconds += time.perf_counter() - t0
-            lane["cache"] = cache
-            lane["state"] = state
-            depths = exit_idx[live]
-            n_live = int(live.sum())
+            if self.runtime == "device":
+                self._device_tick(lane, lane_id)
+            else:
+                self._host_tick(lane, lane_id)
+
+    def _account(self, lane_id: int, depths: np.ndarray, n_tokens: int,
+                 ran: np.ndarray, steps: int, max_depths):
+        """Shared per-tick accounting over ``steps`` decode steps of one
+        lane: ``depths`` are the exit indices of every live (slot, step),
+        ``ran`` the segment execution-counter deltas (cohort units),
+        ``max_depths`` the per-step max live exit depth."""
+        n_comp = self.cfg.cascade.n_components
+        self._decode_steps += steps
+        # real execution accounting from the carried segment counters: in
+        # cond_batch mode skipped segments genuinely did not compute; with
+        # C cohorts a segment-step splits into C independently skippable
+        # cohort units, so the skipped count is fractional
+        self._segments_run += ran.astype(np.int64)
+        C = self.cohorts
+        skipped_real = float(np.sum((C * steps - ran[1:]) / C))
+        # scheduling headroom: segments nobody needed each step (what a
+        # perfect cond_batch run would skip), vs what actually skipped
+        for md in max_depths:
+            self._skip_opportunities += max(0, (n_comp - 1) - md)
+            self._skip_opportunity_total += n_comp - 1
+        # analytic MAC accounting (paper §6.2): dense cost vs exit cost
+        self._macs_dense += n_tokens * self.mac_prefix[-1]
+        self._macs_spent += float(
+            np.sum(np.asarray(self.mac_prefix)[depths])) if n_tokens else 0.0
+        self.compactor.observe(lane_id, depths, skipped_real, steps=steps)
+
+    def _host_tick(self, lane, lane_id: int):
+        """Decode ONE token for every live slot of a lane (one dispatch +
+        one host sync per token)."""
+        last = [s.generated[-1] if not s.done else 0
+                for s in lane["slots"]]
+        token = jnp.asarray(np.array(last, np.int32)[:, None])
+        live = self._live_mask(lane)
+        state = lane["state"].replace(active=jnp.asarray(live))
+        run_before = np.asarray(state.segments_run)
+        t0 = time.perf_counter()
+        tok, exit_idx, conf, cache, state = self._decode(
+            self.params, token, lane["cache"], state,
+            self._extra(self.lane_batch))
+        tok = np.asarray(tok)              # forces device sync
+        exit_idx = np.asarray(exit_idx)
+        dt = time.perf_counter() - t0
+        n_live = int(live.sum())
+        warm = self._decode_warm
+        if warm:
+            self._decode_seconds += dt
             self._decode_tokens += n_live
-            self._decode_steps += 1
-            # real execution accounting from the carried segment counters:
-            # in cond_batch mode skipped segments genuinely did not compute
+        else:                              # first dispatch pays compilation
+            self._compile_seconds += dt
+            self._decode_warm = True
+        lane["cache"] = cache
+        lane["state"] = state
+        depths = exit_idx[live]
+        ran = np.asarray(state.segments_run) - run_before
+        if warm:
+            # the warm-up dispatch is excluded from EVERY window metric
+            # (MAC, skip, opportunity, wallclock) so stats() rates all
+            # cover the same steps; its tokens still reach the slots below
+            self._account(lane_id, depths, n_live, ran, steps=1,
+                          max_depths=[int(depths.max()) if n_live else 0])
+        for i, s in enumerate(lane["slots"]):
+            if s.done:
+                continue
+            s.generated.append(int(tok[i]))
+            s.exit_depths.append(int(exit_idx[i]))
+            self._finish_if_done(s, int(state.t), lane_id)
+
+    def _device_tick(self, lane, lane_id: int):
+        """Decode up to ``chunk`` tokens for a lane inside the device
+        while_loop — one dispatch and ONE host sync per chunk; finished
+        slots drain from the returned buffers."""
+        slots = lane["slots"]
+        last = [s.generated[-1] if not s.done else 0 for s in slots]
+        token = np.array(last, np.int32)[:, None]
+        live = self._live_mask(lane)
+        remaining = np.array(
+            [s.request.max_new_tokens - len(s.generated) if not s.done else 0
+             for s in slots], np.int32)
+        state = lane["state"].replace(active=jnp.asarray(live))
+        run_before = np.asarray(state.segments_run)
+        chunk, cache, state = self.loop.run_chunk(
+            self.params, token, lane["cache"], state, remaining,
+            self._extra(self.lane_batch))
+        lane["cache"] = cache
+        lane["state"] = state
+        n = chunk.n_steps
+        n_tok = int(chunk.live.sum())
+        if chunk.compiled:                 # first dispatch pays compilation
+            self._compile_seconds += chunk.seconds
+        else:
+            self._decode_seconds += chunk.seconds
+            self._decode_tokens += n_tok
+        if not n:
+            return
+        if not chunk.compiled:
+            # like the host tick: the compile chunk is excluded from every
+            # window metric so all stats() rates cover the same steps
             ran = np.asarray(state.segments_run) - run_before
-            self._segments_run += ran.astype(np.int64)
-            skipped_real = int(np.sum(ran[1:] == 0))
-            # scheduling headroom: segments nobody needed this step (what a
-            # perfect cond_batch run would skip), vs what actually skipped
-            max_depth = int(depths.max()) if n_live else 0
-            self._skip_opportunities += max(
-                0, (self.cfg.cascade.n_components - 1) - max_depth)
-            self._skip_opportunity_total += self.cfg.cascade.n_components - 1
-            # analytic MAC accounting (paper §6.2): dense cost vs exit cost
-            self._macs_dense += n_live * self.mac_prefix[-1]
-            self._macs_spent += float(
-                np.sum(np.asarray(self.mac_prefix)[depths])) if n_live else 0.0
-            self.compactor.observe(lane_id, depths, skipped_real)
-            for i, s in enumerate(lane["slots"]):
-                if s.done:
-                    continue
-                s.generated.append(int(tok[i]))
-                s.exit_depths.append(int(exit_idx[i]))
-                self._finish_if_done(s, int(state.t), lane_id)
+            max_depths = []
+            for step in range(n):
+                d = chunk.exits[step][chunk.live[step]]
+                max_depths.append(int(d.max()) if d.size else 0)
+            self._account(lane_id, chunk.exits[chunk.live], n_tok, ran,
+                          steps=n, max_depths=max_depths)
+        pos = int(state.t)
+        for i, s in enumerate(slots):
+            if s.done:
+                continue
+            for step in range(n):
+                if chunk.live[step, i]:
+                    s.generated.append(int(chunk.tokens[step, i]))
+                    s.exit_depths.append(int(chunk.exits[step, i]))
+            self._finish_if_done(s, pos, lane_id)
 
     def run(self, max_ticks: int = 1000):
         for _ in range(max_ticks):
@@ -277,8 +416,9 @@ class CascadeServingEngine:
         return self._macs_dense / self._macs_spent
 
     def wallclock_us_per_token(self) -> Optional[float]:
-        """Measured decode wall-clock per generated token (µs); includes
-        jit warm-up unless :meth:`reset_metrics` was called after it."""
+        """Measured decode wall-clock per generated token (µs).  The jit
+        warm-up dispatch is timed separately (``compile_seconds`` in
+        :meth:`stats`) and never counted here."""
         if not self._decode_tokens:
             return None
         return 1e6 * self._decode_seconds / self._decode_tokens
@@ -301,6 +441,12 @@ class CascadeServingEngine:
             "skip_opportunity_rate": opp,
             "segments_run": self._segments_run.tolist(),
             "wallclock_us_per_token": self.wallclock_us_per_token(),
+            # one-time jit compilation cost (first decode dispatch per
+            # runtime path; cumulative across reset_metrics)
+            "compile_seconds": self._compile_seconds,
+            "runtime": self.runtime,
+            "n_cohorts": self.cohorts,
+            "chunk": self.chunk if self.runtime == "device" else 1,
             # per-lane mean of the carried confidence EMA (slot difficulty
             # telemetry from DecodeState)
             "lane_conf_ema": [

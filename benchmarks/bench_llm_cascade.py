@@ -8,13 +8,20 @@ Measures, per threshold / measure, BOTH of:
        is timed apart by the engine (``compile_seconds``) and a warm-up
        wave + ``reset_metrics()`` keeps the measured wave steady-state.
 
-Also compares the two serving runtimes head-to-head: ``runtime="host"``
-(one dispatch + host sync per token) vs ``runtime="device"`` (the
-``DeviceDecodeLoop`` while_loop decodes a K-token chunk per dispatch) —
-the ``device_speedup`` rows are the dispatch-amortization win at small
-lane batches.  The machine-readable summary of those rows is exposed as
-``LAST_SERVING_SUMMARY`` (benchmarks/run.py persists it to
-``BENCH_serving.json`` so the perf trajectory is tracked across PRs).
+The serving sweep is the skip-aware hot-path ablation (persisted to
+``BENCH_serving.json`` by ``benchmarks/run.py``): at every threshold, with
+``n_cohorts=2`` and ``use_kernels=True``,
+
+* ``runtime=host`` vs ``runtime=device`` — the ``DeviceDecodeLoop``
+  while_loop amortizes per-token dispatch (``device_speedup``);
+* ``cohort_layout=copy`` vs ``cohort_layout=major`` — the per-segment
+  slice+concat cohort path vs the cohort-major layout that splits once and
+  scatters cache results back in place (``layout_speedup``), with the two
+  layouts' token streams asserted bit-identical (``streams_identical``);
+* kernels on vs off — the exit-masked decode-attention + fused exit-update
+  Pallas fast path vs the plain jnp path (``kernel_speedup``; on CPU CI the
+  kernels run interpreted, so this column is only meaningful on real
+  hardware — it is recorded, not gated).
 
 All exit decisions route through the one ExitDecider resolved from the
 config's registry strings; per-lane decode state (patience streaks
@@ -29,31 +36,55 @@ from repro.serving import CascadeServingEngine, Request
 
 LANE_BATCH = 2
 CHUNK = 8
-# the host-vs-device comparison runs cohort-split skipping (the device
-# loop's intended configuration); summary rows record it
+# the serving ablation runs cohort-split skipping (the device loop's
+# intended configuration); summary rows record it
 N_COHORTS = 2
+# serving-ablation lane shape: larger than the mode rows above so the
+# layout delta (cache copies per segment per step) clears timer noise
+SERVE_LANE_BATCH = 4
+SERVE_CACHE_LEN = 256
+# the full threshold sweep persisted to BENCH_serving.json — at least 3
+# operating points so the perf trajectory tracks the cascade, not one row:
+# 0.0 exits everyone at component 0 (max skipping), 0.02 sits inside the
+# random-init confidence band (~0.02–0.03 over a 512 vocab) for genuinely
+# mixed per-slot exits, 1.1 never exits early (the dense ceiling)
+SERVE_THRESHOLDS = (0.0, 0.02, 1.1)
 
-# set by run(): machine-readable host-vs-device serving summary
+# set by run(): machine-readable serving-ablation summary
 LAST_SERVING_SUMMARY = None
 
 
 def _drive(cfg, model, params, n_req=6, max_new=8, runtime="host",
-           chunk=CHUNK):
-    """Run a warm-up wave, reset metrics, run the measured wave."""
+           chunk=CHUNK, lane_batch=LANE_BATCH, n_lanes=2, cache_len=48,
+           waves=1):
+    """Run a warm-up wave, reset metrics, run ``waves`` measured waves.
+
+    Returns the engine (callers read ``stats()`` and the finished token
+    streams).  Prompts are seeded per request id, so two runs with the
+    same shape execute identical traffic; every wave is submitted exactly
+    at capacity so nothing queues (queueing admits at chunk boundaries in
+    the device runtime and would legitimately diverge the streams).
+    """
     rng = np.random.default_rng(0)
-    eng = CascadeServingEngine(cfg, model, params, lane_batch=LANE_BATCH,
-                               n_lanes=2, cache_len=48, runtime=runtime,
-                               chunk=chunk)
+    eng = CascadeServingEngine(cfg, model, params, lane_batch=lane_batch,
+                               n_lanes=n_lanes, cache_len=cache_len,
+                               runtime=runtime, chunk=chunk)
     prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
-               for _ in range(2 * n_req)]
+               for _ in range((waves + 1) * n_req)]
     for i in range(n_req):                       # wave 1: jit warm-up
         eng.submit(Request(rid=i, prompt=prompts[i], max_new_tokens=max_new))
     eng.run(300)
     eng.reset_metrics()
-    for i in range(n_req, 2 * n_req):            # wave 2: measured
-        eng.submit(Request(rid=i, prompt=prompts[i], max_new_tokens=max_new))
-    eng.run(300)
-    return eng.stats()
+    for w in range(1, waves + 1):                # measured waves
+        for i in range(w * n_req, (w + 1) * n_req):
+            eng.submit(Request(rid=i, prompt=prompts[i],
+                               max_new_tokens=max_new))
+        eng.run(300)
+    return eng
+
+
+def _streams(eng):
+    return {rid: tuple(r["tokens"]) for rid, r in eng.finished.items()}
 
 
 def run(quick: bool = False):
@@ -68,7 +99,7 @@ def run(quick: bool = False):
         per_mode = {}
         for mode in ("select", "cond_batch"):
             c = cfg.with_cascade(thresholds=(th, 0.0), exit_mode=mode)
-            st = _drive(c, model, params, n_req=n_req)
+            st = _drive(c, model, params, n_req=n_req).stats()
             per_mode[mode] = st
             rows.append((f"llm_cascade/th={th:g}/{mode}",
                          st["wallclock_us_per_token"] or 0.0,
@@ -86,64 +117,119 @@ def run(quick: bool = False):
     for measure in measures:
         c = cfg.with_cascade(thresholds=(0.5, 0.0), exit_mode="cond_batch",
                              confidence=measure)
-        st = _drive(c, model, params, n_req=n_req)
+        st = _drive(c, model, params, n_req=n_req).stats()
         rows.append((f"llm_cascade/measure={measure}",
                      st["wallclock_us_per_token"] or 0.0,
                      f"analytic={st['analytic_speedup']:.3f};"
                      f"skip_rate={st['cond_batch_skip_rate']:.3f}"))
 
-    # host-vs-device runtime: identical token streams, the device
-    # while_loop amortizes dispatch over CHUNK tokens (the win the paper's
-    # MAC savings need at small lane batches).  Longer generations than the
-    # mode rows above: dispatch amortization is a per-token effect, so the
-    # measured wave needs enough decode ticks to dominate timer noise.
-    # Exactly at capacity (2 lanes x LANE_BATCH slots): with no queued
-    # requests both runtimes admit at the same points, so the compared
-    # runs execute bit-identical token streams (queued traffic admits at
-    # chunk boundaries in the device runtime and may re-prefill lanes at
-    # different points — a documented latency trade, not a fair timing
-    # comparison).
+    # ------------------------------------------------------------------
+    # the skip-aware hot-path ablation (persisted to BENCH_serving.json):
+    # host-vs-device x cohort-layout x kernels, full threshold sweep.
+    # A 3-component cascade on a 3-layer reduced config: two deep segments,
+    # so the copy layout pays its per-segment slice+concat twice per step —
+    # the copy overhead the cohort-major layout deletes.  Exactly at
+    # capacity (2 lanes x SERVE_LANE_BATCH slots): with no queued requests
+    # every compared run admits at the same points, so identical-semantics
+    # runs (copy vs major at equal n_cohorts) execute bit-identical token
+    # streams (asserted below, recorded per row as streams_identical).
+    scfg = reduced(get_config("qwen2.5-3b"), n_layers=3).replace(
+        dtype="float32").with_cascade(
+            n_components=3, exit_boundaries=(1, 2), exit_mode="cond_batch",
+            n_cohorts=N_COHORTS)
+    smodel = build_model(scfg)
+    sparams = smodel.init(jax.random.PRNGKey(1))
     serving_rows = []
-    rt_req = 2 * LANE_BATCH
-    # quick (CI) mode keeps only th=0 — skipping + amortization, the
-    # widest device margin — so the CI strictly-faster gate doesn't flake
-    # on the thin pure-amortization margin of the no-skip row
-    for th in ((0.0,) if quick else (0.0, 0.5)):
-        c = cfg.with_cascade(thresholds=(th, 0.0), exit_mode="cond_batch",
-                             n_cohorts=N_COHORTS)
-        per_rt = {}
-        for rt in ("host", "device"):
-            st = _drive(c, model, params, n_req=rt_req, max_new=16,
-                        runtime=rt)
-            per_rt[rt] = st
-            rows.append((f"llm_cascade/th={th:g}/runtime={rt}",
-                         st["wallclock_us_per_token"] or 0.0,
-                         f"analytic={st['analytic_speedup']:.3f};"
-                         f"skip_rate={st['cond_batch_skip_rate']:.3f};"
-                         f"opportunity={st['skip_opportunity_rate']:.3f};"
-                         f"compile_s={st['compile_seconds']:.2f}"))
-        hu = per_rt["host"]["wallclock_us_per_token"]
-        du = per_rt["device"]["wallclock_us_per_token"]
-        sp = (hu / du) if (hu and du) else 1.0
+    rt_req = 2 * SERVE_LANE_BATCH
+    # many short waves beat few long ones: the engines interleave at wave
+    # granularity, so shorter waves = finer interleave = better cancellation
+    # of machine-load drift between the compared variants
+    max_new = 12 if quick else 16
+    waves = 6 if quick else 8
+    # the four compared engines per threshold; measured waves run
+    # INTERLEAVED across them (host load drifts on multi-second scales —
+    # back-to-back runs would hand whole waves of drift to one variant)
+    variants = (("host", "host", "major", True),
+                ("major", "device", "major", True),
+                ("copy", "device", "copy", True),
+                ("nokernel", "device", "major", False))
+
+    def serve_ablation(th):
+        engines = {}
+        for name, runtime, layout, kernels in variants:
+            c = scfg.replace(use_kernels=kernels).with_cascade(
+                thresholds=(th, th, 0.0), cohort_layout=layout)
+            eng = _drive(c, smodel, sparams, n_req=rt_req, max_new=max_new,
+                         runtime=runtime, lane_batch=SERVE_LANE_BATCH,
+                         cache_len=SERVE_CACHE_LEN, waves=0)
+            engines[name] = eng
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, scfg.vocab_size, 8).astype(np.int32)
+                   for _ in range((waves + 1) * rt_req)]
+        for w in range(1, waves + 1):            # interleaved measured waves
+            for name, eng in engines.items():
+                for i in range(w * rt_req, (w + 1) * rt_req):
+                    eng.submit(Request(rid=i, prompt=prompts[i],
+                                       max_new_tokens=max_new))
+                eng.run(300)
+        stats = {}
+        for name, runtime, layout, kernels in variants:
+            st = engines[name].stats()
+            stats[name] = st
+            rows.append((
+                f"llm_cascade/th={th:g}/runtime={runtime}/layout={layout}/"
+                f"kernels={'on' if kernels else 'off'}",
+                st["wallclock_us_per_token"] or 0.0,
+                f"analytic={st['analytic_speedup']:.3f};"
+                f"skip_rate={st['cond_batch_skip_rate']:.3f};"
+                f"opportunity={st['skip_opportunity_rate']:.3f};"
+                f"compile_s={st['compile_seconds']:.2f}"))
+        return engines, stats
+
+    for th in SERVE_THRESHOLDS:
+        engines, stats = serve_ablation(th)
+        host_st, major_st = stats["host"], stats["major"]
+        copy_st, off_st = stats["copy"], stats["nokernel"]
+        identical = _streams(engines["major"]) == _streams(engines["copy"])
+        hu = host_st["wallclock_us_per_token"]
+        du = major_st["wallclock_us_per_token"]
+        cu = copy_st["wallclock_us_per_token"]
+        ou = off_st["wallclock_us_per_token"]
+        device_speedup = (hu / du) if (hu and du) else 1.0
+        layout_speedup = (cu / du) if (cu and du) else 1.0
+        kernel_speedup = (ou / du) if (ou and du) else 1.0
         rows.append((f"llm_cascade/th={th:g}/device_speedup", 0.0,
-                     f"{sp:.3f}"))
+                     f"{device_speedup:.3f}"))
+        rows.append((f"llm_cascade/th={th:g}/layout_speedup", 0.0,
+                     f"{layout_speedup:.3f};streams_identical={identical}"))
+        rows.append((f"llm_cascade/th={th:g}/kernel_speedup", 0.0,
+                     f"{kernel_speedup:.3f}"))
         serving_rows.append({
             "threshold": th,
             "host_us_per_token": hu,
             "device_us_per_token": du,
-            "device_speedup": sp,
-            "realized_skip_rate": per_rt["device"]["cond_batch_skip_rate"],
-            "opportunity_rate": per_rt["device"]["skip_opportunity_rate"],
-            "mac_speedup": per_rt["device"]["analytic_speedup"],
-            "compile_seconds_host": per_rt["host"]["compile_seconds"],
-            "compile_seconds_device": per_rt["device"]["compile_seconds"],
+            "device_speedup": device_speedup,
+            "copy_us_per_token": cu,
+            "major_us_per_token": du,
+            "layout_speedup": layout_speedup,
+            "kernels_off_us_per_token": ou,
+            "kernel_speedup": kernel_speedup,
+            "streams_identical": identical,
+            "realized_skip_rate": major_st["cond_batch_skip_rate"],
+            "opportunity_rate": major_st["skip_opportunity_rate"],
+            "mac_speedup": major_st["analytic_speedup"],
+            "compile_seconds_host": host_st["compile_seconds"],
+            "compile_seconds_device": major_st["compile_seconds"],
         })
     LAST_SERVING_SUMMARY = {
         "bench": "llm_cascade",
-        "arch": cfg.name,
-        "lane_batch": LANE_BATCH,
+        "arch": scfg.name,
+        "lane_batch": SERVE_LANE_BATCH,
+        "cache_len": SERVE_CACHE_LEN,
         "chunk": CHUNK,
         "n_cohorts": N_COHORTS,
+        "n_components": scfg.cascade.n_components,
+        "use_kernels": True,
         "quick": bool(quick),
         "rows": serving_rows,
     }

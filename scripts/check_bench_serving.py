@@ -1,38 +1,85 @@
-"""CI gate for the host-vs-device serving comparison.
+"""CI gate for the serving hot-path ablation in ``BENCH_serving.json``.
 
-Reads ``BENCH_serving.json`` (written by ``benchmarks/run.py`` whenever the
-llm_cascade bench runs) and enforces the dispatch-amortization acceptance
-criterion: the device while_loop runtime is strictly faster than the host
-per-token runtime on every measured row.  Exit code 1 on violation so CI
-can retry once — the quick-mode margin is pure dispatch amortization
-(~1.1–1.8x) and a shared runner's scheduler noise can eat it in a single
-unlucky run.
+Validates EVERY row of the threshold sweep (written by
+``benchmarks/run.py`` whenever the llm_cascade bench runs):
+
+* the sweep covers at least 3 thresholds and every row carries all four
+  wall-clock measurements (host / device-major / device-copy / kernels-off);
+* ``streams_identical`` on every row — the cohort-major layout must decode
+  bit-identical token streams to the copy layout;
+* the cohort-major layout is no slower than the slice+concat copy path at
+  every threshold (small noise tolerance) and STRICTLY faster at
+  threshold 0.0, where cohort skipping makes the copy path's per-segment
+  cache concat pure overhead;
+* the device while_loop runtime is strictly faster than the host per-token
+  runtime at threshold 0.0 (the dispatch-amortization criterion).
+
+Exit code 1 on violation so CI can retry once — the strict margins are
+real but finite (~5–10%), and a shared runner's scheduler noise can eat
+them in a single unlucky run.
 
     python scripts/check_bench_serving.py [path]
 """
 import json
 import sys
 
+# Threshold 0.0 is gated strictly: every step takes the all-skip fast path
+# there, which is where the cohort-major layout structurally beats the
+# per-segment slice+concat (measured 1.05-1.30x).  At mixed-exit operating
+# points the dispatch falls back to per-cohort conds and the two layouts
+# are STRUCTURAL PARITY (repeated interleaved A/B: 0.98-1.01x), so those
+# rows gate "no slower" with headroom for the ±6-8% wave-level timing
+# noise a shared runner shows even with interleaved measurement.
+LAYOUT_NOISE_TOL = 0.90
+MIN_THRESHOLDS = 3
+
 
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_serving.json"
     with open(path) as f:
         s = json.load(f)
-    if not s.get("rows"):
-        print(f"{path}: no serving rows", file=sys.stderr)
-        return 1
+    rows = s.get("rows") or []
     ok = True
-    for r in s["rows"]:
-        if not (r["host_us_per_token"] and r["device_us_per_token"]):
-            print(f"missing wallclock in row: {r}", file=sys.stderr)
+    if len(rows) < MIN_THRESHOLDS:
+        print(f"{path}: only {len(rows)} serving rows; the threshold sweep "
+              f"must cover >= {MIN_THRESHOLDS}", file=sys.stderr)
+        ok = False
+    for r in rows:
+        th = r.get("threshold")
+        wallclocks = ("host_us_per_token", "device_us_per_token",
+                      "copy_us_per_token", "kernels_off_us_per_token")
+        missing = [k for k in wallclocks if not r.get(k)]
+        if missing:
+            print(f"th={th}: missing wallclock(s) {missing}",
+                  file=sys.stderr)
             ok = False
             continue
-        if r["device_speedup"] <= 1.0:
-            print(f"device loop not faster (th={r['threshold']}): "
-                  f"{r['device_speedup']:.3f}x", file=sys.stderr)
+        if not r.get("streams_identical"):
+            print(f"th={th}: cohort-major stream diverged from the copy "
+                  f"layout", file=sys.stderr)
+            ok = False
+        layout = r.get("layout_speedup", 0.0)
+        if th == 0.0:
+            if layout <= 1.0:
+                print(f"th={th}: cohort-major not strictly faster than "
+                      f"copy: {layout:.3f}x", file=sys.stderr)
+                ok = False
+            if r.get("device_speedup", 0.0) <= 1.0:
+                print(f"th={th}: device loop not faster than host: "
+                      f"{r.get('device_speedup', 0.0):.3f}x",
+                      file=sys.stderr)
+                ok = False
+        elif layout < LAYOUT_NOISE_TOL:
+            print(f"th={th}: cohort-major slower than copy beyond noise "
+                  f"tolerance: {layout:.3f}x < {LAYOUT_NOISE_TOL}",
+                  file=sys.stderr)
             ok = False
     print("device_speedup:",
-          [round(r["device_speedup"], 3) for r in s["rows"]])
+          [round(r.get("device_speedup", 0.0), 3) for r in rows])
+    print("layout_speedup:",
+          [round(r.get("layout_speedup", 0.0), 3) for r in rows])
+    print("kernel_speedup:",
+          [round(r.get("kernel_speedup", 0.0), 3) for r in rows])
     return 0 if ok else 1
 
 

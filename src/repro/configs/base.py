@@ -60,6 +60,19 @@ class CascadeConfig:
     # n_cohorts.  Batches not divisible by n_cohorts degrade to the largest
     # divisor (1 in the worst case), mirroring the sharding rules.
     n_cohorts: int = 1
+    # How cohort-split staged decode touches memory (perf only — the two
+    # layouts are bit-identical; tested):
+    #   "major" — cohort-major hot path: the batch axis of h / carry /
+    #             cache is viewed as (cohort, B/C) (a zero-copy reshape —
+    #             cohorts are contiguous batch ranges), the per-cohort
+    #             split happens ONCE per step, and every deep segment
+    #             dispatches on the lane's exit state (all-exited -> one
+    #             whole-batch backfill; none-exited -> one whole-batch
+    #             dense segment; mixed -> per-cohort lax.cond), so the
+    #             slice/re-join machinery only runs when cohorts disagree.
+    #   "copy"  — the legacy per-segment slice + concat path, kept as the
+    #             ablation baseline for the layout benchmark.
+    cohort_layout: str = "major"
     # Whether deeper-layer KV / recurrent state is backfilled from the exit
     # hidden state so later tokens can attend at full depth.
     state_backfill: bool = True
@@ -84,6 +97,10 @@ class CascadeConfig:
                 f"{self.exit_mode!r}")
         if self.n_cohorts < 1:
             raise ValueError(f"n_cohorts must be >= 1, got {self.n_cohorts}")
+        if self.cohort_layout not in ("major", "copy"):
+            raise ValueError(
+                f"cohort_layout must be 'major' or 'copy', got "
+                f"{self.cohort_layout!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,6 +162,11 @@ class ModelConfig:
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
     use_kernels: bool = False     # route hot ops through Pallas kernels
+    # Pallas execution backend override for this config's kernels: None =
+    # auto (interpret only off-TPU; REPRO_KERNEL_INTERPRET env var wins),
+    # True/False force the interpreter / compiled path.  See
+    # repro.kernels.backend.resolve_interpret for the precedence order.
+    kernel_interpret: Optional[bool] = None
     remat: bool = True            # activation-checkpoint each block in training
     # remat policy: "full" recomputes everything in backward (min memory,
     # max recompute bytes); "dots" saves matmul outputs and recomputes only

@@ -18,15 +18,38 @@ Two pieces:
   the serving engine's stats), and per-segment execution counters.
 
 * :class:`StagedExecutor` — runs the cascade one segment at a time, feeding
-  each segment's logits to the shared :class:`~repro.core.policy.ExitDecider`
-  component scan.  Under ``cascade.exit_mode == "cond_batch"`` every segment
-  after the first sits under ``lax.cond``: once all live sequences have
-  exited, deeper segments take only the cheap ``backfill`` path (cache
-  coherence writes), skipping their matmuls entirely.  Under ``"select"``
-  the graph stays fixed (the dry-run / roofline shape) but applies the SAME
-  masked state updates, so the two modes produce bit-identical tokens, exit
-  indices, and carried state — ``exit_mode`` chooses an execution strategy,
-  never a semantics.
+  each segment's exit logits to the shared
+  :class:`~repro.core.policy.ExitDecider` scan (the fused exit-update Pallas
+  kernel when ``cfg.use_kernels``).  Under ``cascade.exit_mode ==
+  "cond_batch"`` every segment after the first sits under ``lax.cond``: once
+  all live sequences have exited, deeper segments take only the cheap
+  ``backfill`` path (cache coherence writes), skipping their matmuls
+  entirely.  Under ``"select"`` the graph stays fixed (the dry-run /
+  roofline shape) but applies the SAME masked state updates, so the two
+  modes produce bit-identical tokens, exit indices, and carried state —
+  ``exit_mode`` chooses an execution strategy, never a semantics.
+
+Cohort-split execution (``cascade.n_cohorts > 1``) has two memory layouts,
+picked by ``cascade.cohort_layout`` (bit-identical outputs, different
+copies — see :meth:`StagedExecutor.decode_step`):
+
+* ``"major"`` (default) — the cohort-major hot path.  Cohorts are
+  contiguous equal batch ranges, so viewing the batch axis as
+  ``(cohort, B/C)`` is a zero-copy reshape; the step's hidden state /
+  decision carry / context / active mask split into per-cohort parts ONCE
+  (not per segment), and every deep segment dispatches on the lane's exit
+  state: all-exited → one whole-batch backfill, none-exited → one
+  whole-batch dense segment, mixed → per-cohort ``lax.cond`` over
+  cohort-major cache views.  The per-cohort slice/re-join machinery only
+  runs when cohorts actually disagree.
+* ``"copy"`` — the legacy layout: every segment re-slices the batch per
+  cohort and re-concatenates hidden state, carry and the full segment
+  cache, whatever the exit state.  Kept as the ablation baseline the
+  layout benchmark (``benchmarks/bench_llm_cascade.py``) measures against.
+
+The per-slot ``DecodeState.active`` mask also rides in the decode context
+(``ctx["live"]``), where the exit-masked decode-attention kernel early-outs
+dead slots' grid cells (``cfg.use_kernels``).
 
 This replaces the old fixed ``(params, token, t, cache, extra)`` serve-step
 signature: launch steps and the serving engine now thread
@@ -37,6 +60,7 @@ signature: launch steps and the serving engine now thread
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -49,28 +73,48 @@ from repro.core.policy import ExitDecider, ExitDecision
 # DecodeState (same decay as DepthCompactor's host-side depth prior).
 CONF_EMA_DECAY = 0.8
 
+# (requested n_cohorts, batch) pairs already warned about degrading.
+_COHORT_WARNED = set()
 
-def effective_cohorts(n_cohorts: int, batch: int) -> int:
+
+def effective_cohorts(n_cohorts: int, batch: int, warn: bool = False) -> int:
     """Largest divisor of ``batch`` that is <= ``n_cohorts`` (>= 1).
 
     Cohort slices must be equal-size static ranges, so an indivisible batch
     degrades gracefully instead of erroring — the same policy the sharding
-    rules apply to indivisible axes.
+    rules apply to indivisible axes.  ``warn=True`` emits a one-time
+    warning per (n_cohorts, batch) pair when the degradation actually
+    triggers, because silently collapsing to fewer (or one) cohorts
+    forfeits exactly the skip granularity ``n_cohorts`` was asked for —
+    size lanes with :func:`repro.serving.batching.cohort_capacity` to avoid
+    it.
     """
-    c = max(1, min(int(n_cohorts), int(batch)))
+    want = max(1, min(int(n_cohorts), int(batch)))
+    c = want
     while batch % c:
         c -= 1
+    if warn and c != int(n_cohorts) and (n_cohorts, batch) not in _COHORT_WARNED:
+        _COHORT_WARNED.add((n_cohorts, batch))
+        warnings.warn(
+            f"n_cohorts={n_cohorts} does not divide batch={batch}; "
+            f"degrading to {c} cohort(s).  Round the lane capacity up to a "
+            f"cohort multiple (repro.serving.batching.cohort_capacity) to "
+            f"keep the requested skip granularity.", stacklevel=3)
     return c
 
 
 def _slice_ctx(ctx, lo, hi):
-    """Batch-slice a decode context: only ``cross`` (B, T, d) carries a
-    batch dim; everything else (kpos ring, scalars, shared params) is
-    batch-free and passes through."""
+    """Batch-slice a decode context: ``cross`` (B, T, d) and the per-slot
+    exit mask ``live`` (B,) carry a batch dim; everything else (kpos ring,
+    scalars, shared params) is batch-free and passes through."""
+    out = ctx
     cross = ctx.get("cross")
-    if cross is None:
-        return ctx
-    return {**ctx, "cross": cross[lo:hi]}
+    if cross is not None:
+        out = {**out, "cross": cross[lo:hi]}
+    live = ctx.get("live")
+    if live is not None:
+        out = {**out, "live": live[lo:hi]}
+    return out
 
 
 @dataclasses.dataclass
@@ -79,7 +123,9 @@ class DecodeState:
 
     t             () int32   — decode position == cache-write cursor.
     active        (B,) bool  — sequences still generating; finished slots
-                               neither block segment skipping nor update EMAs.
+                               neither block segment skipping nor update
+                               EMAs, and their attention grid cells
+                               early-out in the exit-masked decode kernel.
     policy        stateful-measure carry (e.g. patience streaks,
                                (n_components, B) int32) or None.
     ema_conf      (B,) f32   — EMA of the answering confidence per lane
@@ -144,6 +190,7 @@ class StagedExecutor:
         self.cfg = cfg or model.cfg
         self.decider = decider or ExitDecider.from_config(self.cfg)
         self.mode = self.cfg.cascade.exit_mode
+        self.layout = self.cfg.cascade.cohort_layout
         self.n_components = self.cfg.cascade.n_components
 
     # ------------------------------------------------------------------
@@ -176,6 +223,58 @@ class StagedExecutor:
         return decision, cache, state
 
     # ------------------------------------------------------------------
+    def _segment_paths(self, si, ctx_c, params, ths):
+        """(run, skip) closures for one deeper segment over one cohort's
+        (h, seg_cache, carry) triple — the two ``lax.cond`` branches.
+
+        ``run`` computes the segment, measures its exit logits and folds
+        them into the decision scan (:meth:`ExitDecider.scan_logits` — the
+        fused exit-update kernel when enabled); ``skip`` only backfills the
+        segment's caches from the exit hidden state.
+
+        The DecodeState confidence EMA is deliberately NOT folded inside
+        these branches: the fold is a mul+add chain XLA may contract into
+        FMAs differently per surrounding computation, so folding in-branch
+        puts ``select`` and ``cond_batch`` one ulp apart.  The executor
+        folds once at the step boundary instead (:meth:`_carry_forward`),
+        identically placed in every execution variant.  (The fused kernel
+        still supports the in-kernel fold — ``ema_decay`` in
+        :func:`repro.kernels.exit_update.exit_update` — for fixed-graph
+        callers without a cross-branch bit-identity contract.)
+        """
+        model, decider, n_m = self.model, self.decider, self.n_components
+
+        def run(h, seg_cache, sc):
+            h2, nc2, _ = model.run_segment(si, params, h, ctx_c, seg_cache)
+            lg = model.exit_logits(params, si, h2)[:, 0, :]
+            return h2, nc2, decider.scan_logits(si, n_m, lg, ths, sc)
+
+        def skip(h, seg_cache, sc):
+            if self.cfg.cascade.state_backfill:
+                seg_cache = model.backfill_segment(si, params, h, ctx_c,
+                                                   seg_cache)
+            return h, seg_cache, sc
+
+        return run, skip
+
+    def _segment_step(self, si, ctx_c, params, ths, h, seg_cache, sc,
+                      active):
+        """One (segment, cohort) cell: cond-skip in ``cond_batch`` mode,
+        compute-and-mask in ``select`` mode.  Returns
+        (h, new_seg_cache, carry, ran) with ``ran`` the 0/1 execution
+        count feeding ``DecodeState.segments_run``."""
+        run, skip_fn = self._segment_paths(si, ctx_c, params, ths)
+        skip = self.decider.should_skip(sc, active)
+        if self.mode == "cond_batch":
+            h, nc, sc = lax.cond(skip, skip_fn, run, h, seg_cache, sc)
+            return h, nc, sc, jnp.logical_not(skip).astype(jnp.int32)
+        full = run(h, seg_cache, sc)
+        lite = skip_fn(h, seg_cache, sc)
+        h, nc, sc = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(skip, a, b), lite, full)
+        return h, nc, sc, jnp.asarray(1, jnp.int32)
+
+    # ------------------------------------------------------------------
     def decode_step(self, params, token, cache, state: DecodeState,
                     extra=None):
         """One staged decode step.  token: (B, 1) int32.
@@ -194,78 +293,158 @@ class StagedExecutor:
         ``segments_run`` counts in cohort units: segment ``si`` advances by
         the number of cohorts that actually computed it (C per step when
         nothing skips; C == 1 reproduces the whole-batch predicate exactly).
+
+        ``cfg.cascade.cohort_layout`` picks the memory layout of the
+        cohort split (outputs bit-identical):
+
+        * ``"major"`` — hot path: h / carry / context / active split per
+          cohort ONCE, segment caches viewed cohort-major
+          (``(n, C, B/C, ...)`` — a zero-copy reshape, cohorts being
+          contiguous), and each deep segment dispatches on the exit state
+          (all-exited / none-exited / mixed) so the per-cohort slice +
+          re-join machinery only runs when cohorts actually disagree.
+        * ``"copy"`` — the legacy per-segment slice + concat regardless of
+          exit state (ablation baseline; this is the copy overhead the
+          ROADMAP flagged).
         """
         model, decider, n_m = self.model, self.decider, self.n_components
         ths = decider.resolved_thresholds(n_m)
         t = state.t
         B = token.shape[0]
-        C = effective_cohorts(self.cfg.cascade.n_cohorts, B)
+        C = effective_cohorts(self.cfg.cascade.n_cohorts, B, warn=True)
         Bc = B // C
         h, ctx = model.begin_decode(params, token, t, cache, extra)
+        # thread the exit mask to the kernels: dead slots' attention grid
+        # cells early-out (zero rows) — safe, because a retired slot's
+        # outputs are never read and its lane re-prefills before reuse
+        ctx = {**ctx, "live": state.active}
         segs = cache["segments"]
         new_segs = []
         ran = [jnp.asarray(C, jnp.int32)]
 
+        # segment 0 computes for everyone (every cohort needs it)
         h, nc, _ = model.run_segment(0, params, h, ctx, segs[0])
         new_segs.append(nc)
-        out, conf = decider.measure_one(
-            model.exit_logits(params, 0, h)[:, 0, :])
-        sc = decider.scan_component(0, n_m, out, conf, ths,
-                                    state=state.policy)
+        sc = decider.scan_logits(0, n_m, model.exit_logits(params, 0, h)
+                                 [:, 0, :], ths, state=state.policy)
 
-        for si in range(1, n_m):
-            h_parts, nc_parts, sc_parts = [], [], []
-            ran_si = jnp.zeros((), jnp.int32)
-            for c in range(C):
-                lo, hi = c * Bc, (c + 1) * Bc
-                if C == 1:
-                    h_c, seg_c, sc_c, ctx_c = h, segs[si], sc, ctx
-                    active_c = state.active
-                else:
-                    h_c = h[lo:hi]
+        if C == 1:
+            for si in range(1, n_m):
+                h, nc, sc, r = self._segment_step(
+                    si, ctx, params, ths, h, segs[si], sc, state.active)
+                new_segs.append(nc)
+                ran.append(r)
+        elif self.layout == "copy":
+            # ablation baseline: re-slice + re-concat per segment
+            for si in range(1, n_m):
+                h_parts, nc_parts, sc_parts = [], [], []
+                ran_si = jnp.zeros((), jnp.int32)
+                for c in range(C):
+                    lo, hi = c * Bc, (c + 1) * Bc
                     seg_c = jax.tree_util.tree_map(
                         lambda x: x[:, lo:hi], segs[si])
-                    sc_c = decider.slice_carry(sc, lo, hi)
-                    ctx_c = _slice_ctx(ctx, lo, hi)
-                    active_c = state.active[lo:hi]
-                skip = decider.should_skip(sc_c, active_c)
-
-                def run_path(h, seg_cache, sc, _si=si, _ctx=ctx_c):
-                    h2, nc2, _ = model.run_segment(_si, params, h, _ctx,
-                                                   seg_cache)
-                    o, c = decider.measure_one(
-                        model.exit_logits(params, _si, h2)[:, 0, :])
-                    return h2, nc2, decider.scan_component(_si, n_m, o, c,
-                                                           ths, sc)
-
-                def skip_path(h, seg_cache, sc, _si=si, _ctx=ctx_c):
-                    if self.cfg.cascade.state_backfill:
-                        seg_cache = model.backfill_segment(_si, params, h,
-                                                           _ctx, seg_cache)
-                    return h, seg_cache, sc
-
-                if self.mode == "cond_batch":
-                    h_c, nc_c, sc_c = lax.cond(skip, skip_path, run_path,
-                                               h_c, seg_c, sc_c)
-                    ran_si = ran_si + jnp.logical_not(skip).astype(jnp.int32)
-                else:  # select: both paths compute; skip only masks results
-                    full = run_path(h_c, seg_c, sc_c)
-                    lite = skip_path(h_c, seg_c, sc_c)
-                    h_c, nc_c, sc_c = jax.tree_util.tree_map(
-                        lambda a, b: jnp.where(skip, a, b), lite, full)
-                    ran_si = ran_si + 1
-                h_parts.append(h_c)
-                nc_parts.append(nc_c)
-                sc_parts.append(sc_c)
-            if C == 1:
-                h, nc, sc = h_parts[0], nc_parts[0], sc_parts[0]
-            else:
+                    h_c, nc_c, sc_c, r = self._segment_step(
+                        si, _slice_ctx(ctx, lo, hi), params, ths,
+                        h[lo:hi], seg_c, decider.slice_carry(sc, lo, hi),
+                        state.active[lo:hi])
+                    ran_si = ran_si + r
+                    h_parts.append(h_c)
+                    nc_parts.append(nc_c)
+                    sc_parts.append(sc_c)
                 h = jnp.concatenate(h_parts, axis=0)
                 nc = jax.tree_util.tree_map(
                     lambda *xs: jnp.concatenate(xs, axis=1), *nc_parts)
                 sc = decider.concat_carry(sc_parts)
-            ran.append(ran_si)
-            new_segs.append(nc)
+                ran.append(ran_si)
+                new_segs.append(nc)
+        else:
+            # cohort-major hot path: h / decision carry / context / active
+            # are split ONCE into per-cohort parts (zero-copy views —
+            # cohorts are contiguous batch ranges) that persist across the
+            # deep segments; each segment then DISPATCHES on the lane's
+            # exit state instead of always paying the per-cohort machinery:
+            #
+            #   all exited  -> ONE whole-batch backfill: no cache slicing,
+            #                  no per-cohort conds, no re-join — the common
+            #                  state at low thresholds, i.e. exactly where
+            #                  the paper's savings materialize;
+            #   none exited -> ONE whole-batch dense segment: full-width
+            #                  matmuls, again no cohort machinery — the
+            #                  dense ceiling costs what C == 1 costs;
+            #   mixed       -> per-cohort lax.cond over cohort-major cache
+            #                  views, results re-joined per segment.
+            #
+            # The three branches are bit-identical per row because every
+            # decode op is batch-separable (pinned by the layout parity
+            # tests).  MoE couples rows through expert capacity, so MoE
+            # configs keep a two-way (all-exited vs per-cohort) dispatch.
+            spans = [(c * Bc, (c + 1) * Bc) for c in range(C)]
+            h_parts = [h[lo:hi] for lo, hi in spans]
+            sc_parts = [decider.slice_carry(sc, lo, hi) for lo, hi in spans]
+            ctx_parts = [_slice_ctx(ctx, lo, hi) for lo, hi in spans]
+            act_parts = [state.active[lo:hi] for lo, hi in spans]
+            separable = self.cfg.n_experts == 0
+
+            for si in range(1, n_m):
+                preds = jnp.stack([decider.should_skip(s, a)
+                                   for s, a in zip(sc_parts, act_parts)])
+
+                def _all_skip(hp, seg, scp, _si=si):
+                    if self.cfg.cascade.state_backfill:
+                        seg = model.backfill_segment(
+                            _si, params, jnp.concatenate(hp, axis=0), ctx,
+                            seg)
+                    return (list(hp), seg, list(scp),
+                            jnp.zeros((), jnp.int32))
+
+                def _mixed(hp, seg, scp, _si=si):
+                    view = jax.tree_util.tree_map(
+                        lambda x: x.reshape((x.shape[0], C, Bc)
+                                            + x.shape[2:]), seg)
+                    hp, scp = list(hp), list(scp)
+                    parts = []
+                    r = jnp.zeros((), jnp.int32)
+                    for c in range(C):
+                        seg_c = jax.tree_util.tree_map(
+                            lambda x: x[:, c], view)
+                        hp[c], nc_c, scp[c], rc = self._segment_step(
+                            _si, ctx_parts[c], params, ths, hp[c], seg_c,
+                            scp[c], act_parts[c])
+                        parts.append(nc_c)
+                        r = r + rc
+                    nc = jax.tree_util.tree_map(
+                        lambda *xs: jnp.concatenate(xs, axis=1), *parts)
+                    return hp, nc, scp, r
+
+                def _all_run(hp, seg, scp, _si=si):
+                    h2, nc, _ = model.run_segment(
+                        _si, params, jnp.concatenate(hp, axis=0), ctx, seg)
+                    lg = model.exit_logits(params, _si, h2)[:, 0, :]
+                    sc2 = decider.scan_logits(
+                        _si, n_m, lg, ths, decider.concat_carry(list(scp)))
+                    return ([h2[lo:hi] for lo, hi in spans], nc,
+                            [decider.slice_carry(sc2, lo, hi)
+                             for lo, hi in spans],
+                            jnp.asarray(C, jnp.int32))
+
+                if self.mode != "cond_batch":
+                    # select: fixed graph — the dry-run / roofline shape
+                    h_parts, nc, sc_parts, r = _mixed(h_parts, segs[si],
+                                                      sc_parts)
+                elif separable:
+                    n_skip = jnp.sum(preds.astype(jnp.int32))
+                    idx = jnp.where(n_skip == C, 0,
+                                    jnp.where(n_skip == 0, 2, 1))
+                    h_parts, nc, sc_parts, r = lax.switch(
+                        idx, (_all_skip, _mixed, _all_run), h_parts,
+                        segs[si], sc_parts)
+                else:
+                    h_parts, nc, sc_parts, r = lax.cond(
+                        jnp.all(preds), _all_skip, _mixed, h_parts,
+                        segs[si], sc_parts)
+                new_segs.append(nc)
+                ran.append(r)
+            sc = decider.concat_carry(sc_parts)
 
         decision = decider.finish_scan(sc)
         cache = model.commit_decode(cache, new_segs, t)

@@ -129,11 +129,12 @@ class ConfidenceMeasure:
     def __call__(self, logits: jnp.ndarray):
         raise NotImplementedError
 
-    def fused_kernel(self, logits: jnp.ndarray):
+    def fused_kernel(self, logits: jnp.ndarray, interpret=None):
         """Optional fused-kernel path for 2D (B, V) logits; None = no kernel.
 
         Only consulted when the caller opted in (``cfg.use_kernels``); the
         semantics must match ``__call__`` bit-for-bit up to float tolerance.
+        ``interpret`` is the config's Pallas-backend override (None = auto).
         """
         return None
 
@@ -161,11 +162,11 @@ class SoftmaxMaxMeasure(ConfidenceMeasure):
     def __call__(self, logits):
         return softmax_outputs(logits)
 
-    def fused_kernel(self, logits):
+    def fused_kernel(self, logits, interpret=None):
         if logits.ndim != 2:
             return None
-        from repro.kernels.confidence import confidence as fused_confidence
-        return fused_confidence(logits)
+        from repro.kernels.ops import softmax_confidence_fused
+        return softmax_confidence_fused(logits, interpret=interpret)
 
 
 @register_measure("entropy")
@@ -228,8 +229,8 @@ class PatienceMeasure(ConfidenceMeasure):
     def __call__(self, logits):
         return self.base(logits)
 
-    def fused_kernel(self, logits):
-        return self.base.fused_kernel(logits)
+    def fused_kernel(self, logits, interpret=None):
+        return self.base.fused_kernel(logits, interpret=interpret)
 
     def init_state(self, n_exits: int, batch: int):
         return jnp.zeros((n_exits, batch), jnp.int32)
@@ -492,20 +493,42 @@ class ExitDecider:
 
     def __init__(self, measure, policy="threshold",
                  thresholds: Optional[Sequence[float]] = None,
-                 use_kernels: bool = False):
+                 use_kernels: bool = False,
+                 kernel_interpret: Optional[bool] = None):
         self.measure = (get_measure(measure) if isinstance(measure, str)
                         else measure)
         self.policy = (get_policy(policy) if isinstance(policy, str)
                        else policy)
         self.thresholds = tuple(thresholds) if thresholds is not None else None
         self.use_kernels = use_kernels
+        self.kernel_interpret = kernel_interpret
 
     @classmethod
     def from_config(cls, cfg) -> "ExitDecider":
         """Resolve a ModelConfig's cascade strings through the registries."""
         cas = cfg.cascade
         return cls(measure=cas.confidence, policy=cas.policy,
-                   thresholds=cas.thresholds, use_kernels=cfg.use_kernels)
+                   thresholds=cas.thresholds, use_kernels=cfg.use_kernels,
+                   kernel_interpret=cfg.kernel_interpret)
+
+    @property
+    def fused_scan(self) -> bool:
+        """Whether :meth:`scan_logits` may take the fused exit-update
+        kernel: the caller opted into kernels, the measure bottoms out in
+        softmax-max (Defs. 3.2/3.3 — ``softmax_max`` itself or
+        ``patience@k`` over it), and the policy gates are the plain
+        per-component threshold comparisons the kernel hard-codes
+        (:class:`ThresholdPolicy` and subclasses; a fitted
+        :class:`BudgetPolicy` qualifies because its thresholds resolve to
+        static floats before the scan)."""
+        if not self.use_kernels:
+            return False
+        base = getattr(self.measure, "base", self.measure)
+        if getattr(base, "name", "") != "softmax_max":
+            return False
+        if self.measure.stateful and self.measure.name != "patience":
+            return False
+        return isinstance(self.policy, ThresholdPolicy)
 
     def init_state(self, batch: int, n_exits: Optional[int] = None):
         if n_exits is None:
@@ -537,7 +560,8 @@ class ExitDecider:
     def measure_one(self, logits: jnp.ndarray):
         """(prediction, confidence) of ONE component (fused path if asked)."""
         if self.use_kernels:
-            pair = self.measure.fused_kernel(logits)
+            pair = self.measure.fused_kernel(logits,
+                                             interpret=self.kernel_interpret)
             if pair is not None:
                 return pair
         return self.measure(logits)
@@ -549,6 +573,35 @@ class ExitDecider:
                 jnp.stack([p[1] for p in pairs]))
 
     # -- the component scan (staged execution's decision core) -----------
+    def _init_carry(self, m: int, n_components: int, prediction, confidence,
+                    state):
+        """THE decision-scan carry layout, shared by the dense
+        (:meth:`scan_component`) and fused (:meth:`scan_logits`) paths —
+        one definition, so a new carry field cannot drift between them.
+
+        ``prediction`` / ``confidence`` are shape/dtype templates for the
+        per-sample leaves.  "ema"/"act" are the optional DecodeState rider
+        ((B,) confidence EMA + active mask) the staged executor may seed so
+        the final component's EMA fold can happen inside the scan (fused
+        into the exit-update kernel on the fast path); None when the
+        caller doesn't carry an EMA (eval sweep, decide()).
+        """
+        if m != 0:
+            raise ValueError("a decision scan must start at component 0")
+        streak = None
+        if self.measure.stateful:
+            streak = (state if state is not None else jnp.zeros(
+                (n_components,) + confidence.shape, jnp.int32))
+        return {
+            "answered": jnp.zeros(confidence.shape, bool),
+            "pred": jnp.zeros_like(prediction),
+            "exit": jnp.zeros(confidence.shape, jnp.int32),
+            "conf": jnp.zeros_like(confidence),
+            "streak": streak,
+            "ema": None,
+            "act": None,
+        }
+
     def scan_component(self, m: int, n_components: int,
                        prediction: jnp.ndarray, confidence: jnp.ndarray,
                        thresholds: Tuple[float, ...], carry=None,
@@ -565,19 +618,8 @@ class ExitDecider:
         gate = self.policy.component_gate(confidence, thresholds, m,
                                           n_components)
         if carry is None:
-            if m != 0:
-                raise ValueError("a decision scan must start at component 0")
-            streak = None
-            if self.measure.stateful:
-                streak = (state if state is not None else jnp.zeros(
-                    (n_components,) + confidence.shape, jnp.int32))
-            carry = {
-                "answered": jnp.zeros(confidence.shape, bool),
-                "pred": jnp.zeros_like(prediction),
-                "exit": jnp.zeros(confidence.shape, jnp.int32),
-                "conf": jnp.zeros_like(confidence),
-                "streak": streak,
-            }
+            carry = self._init_carry(m, n_components, prediction, confidence,
+                                     state)
         streak = carry["streak"]
         if self.measure.stateful:
             row = jnp.where(gate, streak[m] + 1, 0)
@@ -596,7 +638,73 @@ class ExitDecider:
             "exit": jnp.where(fresh, jnp.int32(m), carry["exit"]),
             "conf": jnp.where(fresh, confidence, carry["conf"]),
             "streak": streak,
+            "ema": carry.get("ema"),
+            "act": carry.get("act"),
         }
+
+    def fold_ema(self, carry, decay: float):
+        """Fold the final decision confidence into the carry's "ema" rider
+        (the :class:`~repro.core.exec.DecodeState` confidence EMA) — no-op
+        when the caller didn't seed one.  Formula and operand order match
+        the fused kernel's exactly, so the dense and fused paths produce
+        bit-identical EMAs given identical confidences."""
+        if carry.get("ema") is None:
+            return carry
+        new = dict(carry)
+        ema = decay * carry["ema"] + (1.0 - decay) * carry["conf"]
+        new["ema"] = (jnp.where(carry["act"], ema, carry["ema"])
+                      if carry.get("act") is not None else ema)
+        return new
+
+    def scan_logits(self, m: int, n_components: int, logits: jnp.ndarray,
+                    thresholds: Tuple[float, ...], carry=None, state=None,
+                    batch_uniform: bool = False, ema_decay: float = 0.0):
+        """Measure component ``m``'s logits AND fold them into the decision
+        scan in one call.
+
+        When :attr:`fused_scan` allows (2D logits, softmax-max-family
+        measure, threshold-family policy), this takes the fused exit-update
+        Pallas kernel: ONE streaming pass over the (B, V) logits computes
+        the confidence (softmax never materialized), the threshold gate,
+        the patience-streak rewrite and the carry merge — plus, when
+        ``ema_decay > 0`` (callers pass it on the final component only),
+        the DecodeState confidence-EMA fold.  Otherwise it is exactly
+        :meth:`measure_one` + :meth:`scan_component` (+ :meth:`fold_ema`),
+        so callers never branch on kernel availability.
+        """
+        fused = (self.fused_scan and not batch_uniform
+                 and logits.ndim == 2)
+        if not fused:
+            out, conf = self.measure_one(logits)
+            carry = self.scan_component(m, n_components, out, conf,
+                                        thresholds, carry, state=state,
+                                        batch_uniform=batch_uniform)
+            return self.fold_ema(carry, ema_decay) if ema_decay else carry
+        from repro.kernels.ops import exit_update_fused
+        B = logits.shape[0]
+        if carry is None:
+            carry = self._init_carry(m, n_components,
+                                     jnp.zeros((B,), jnp.int32),
+                                     jnp.zeros((B,), jnp.float32), state)
+        streak = carry["streak"]
+        srow = streak[m] if streak is not None else jnp.zeros((B,), jnp.int32)
+        has_ema = carry.get("ema") is not None
+        ema = carry["ema"] if has_ema else jnp.zeros((B,), jnp.float32)
+        act = (carry["act"] if carry.get("act") is not None
+               else jnp.ones((B,), bool))
+        ans, pred, exi, conf, srow_n, ema_n = exit_update_fused(
+            logits, carry["answered"], carry["pred"], carry["exit"],
+            carry["conf"], srow, ema, act,
+            threshold=float(thresholds[m]), m=m, n_components=n_components,
+            patience_k=(self.measure.patience_k if self.measure.stateful
+                        else 0),
+            ema_decay=(float(ema_decay) if has_ema else 0.0),
+            interpret=self.kernel_interpret)
+        return {"answered": ans, "pred": pred, "exit": exi, "conf": conf,
+                "streak": (streak.at[m].set(srow_n) if streak is not None
+                           else None),
+                "ema": ema_n if has_ema else None,
+                "act": carry.get("act")}
 
     def slice_carry(self, carry, lo: int, hi: int):
         """Batch-slice a decision-scan carry (cohort-split execution).
@@ -650,10 +758,8 @@ class ExitDecider:
         ths = self.resolved_thresholds(n_m, thresholds)
         carry = None
         for m, lg in enumerate(logits_list):
-            out, conf = self.measure_one(lg)
-            new = self.scan_component(m, n_m, out, conf, ths, carry,
-                                      state=state,
-                                      batch_uniform=batch_uniform)
+            new = self.scan_logits(m, n_m, lg, ths, carry, state=state,
+                                   batch_uniform=batch_uniform)
             if carry is None:
                 carry = new
             else:

@@ -1,6 +1,9 @@
 from repro.kernels import ref
-from repro.kernels.ops import (decode_attention_cache, flash_attention_bshd,
-                               rmsnorm_fused, softmax_confidence_fused)
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.ops import (decode_attention_cache, exit_update_fused,
+                               flash_attention_bshd, rmsnorm_fused,
+                               softmax_confidence_fused)
 
-__all__ = ["ref", "softmax_confidence_fused", "rmsnorm_fused",
-           "flash_attention_bshd", "decode_attention_cache"]
+__all__ = ["ref", "resolve_interpret", "softmax_confidence_fused",
+           "rmsnorm_fused", "flash_attention_bshd",
+           "decode_attention_cache", "exit_update_fused"]

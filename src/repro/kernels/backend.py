@@ -1,0 +1,66 @@
+"""Kernel execution-backend policy: when do Pallas kernels run interpreted?
+
+The kernels were seeded with ``interpret=True`` hard defaults (this repo's CI
+is CPU-only), which meant a real TPU deployment that forgot to flip an env
+var silently ran every kernel through the Pallas *interpreter* — orders of
+magnitude slower than the compiled path, with no error to notice.  This
+module makes the default backend-aware and keeps exactly one precedence
+order for overrides:
+
+1. an explicit non-None override — either an ``interpret=`` argument at a
+   kernel call site (tests pin interpreter semantics this way) or
+   ``ModelConfig.kernel_interpret`` threaded through ``kernels/ops.py`` by
+   the model layer (both arrive here as ``override``),
+2. the ``REPRO_KERNEL_INTERPRET`` environment variable ("0" forces
+   compiled, anything else forces interpreted) — consulted only when no
+   explicit override was given,
+3. auto-detection: interpret only off-TPU (CPU/GPU hosts run the
+   interpreter because Mosaic lowering needs a TPU; a TPU backend runs
+   compiled).
+
+Forcing the interpreter ON a TPU backend is almost always a mistake, so that
+combination logs a one-time warning instead of staying silent.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from repro.utils import get_logger
+
+log = get_logger("kernels.backend")
+
+_ENV = "REPRO_KERNEL_INTERPRET"
+_warned_interpret_on_tpu = False
+
+
+def on_tpu() -> bool:
+    """True when the default jax backend is a TPU."""
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # pragma: no cover - backend init failure
+        return False
+
+
+def resolve_interpret(override: Optional[bool] = None) -> bool:
+    """The ``interpret=`` value a Pallas kernel should actually use.
+
+    ``override`` is a call-site / config override (``None`` = no opinion).
+    Precedence: explicit override > ``REPRO_KERNEL_INTERPRET`` env var >
+    backend auto-detection (interpret iff not on TPU).
+    """
+    global _warned_interpret_on_tpu
+    if override is None and _ENV in os.environ:
+        override = os.environ[_ENV] != "0"
+    if override is None:
+        return not on_tpu()
+    override = bool(override)
+    if override and on_tpu() and not _warned_interpret_on_tpu:
+        _warned_interpret_on_tpu = True
+        log.warning(
+            "Pallas kernels forced to interpret mode ON a TPU backend "
+            "(override/%s) — this runs the interpreter, not Mosaic; "
+            "expect orders-of-magnitude slowdown", _ENV)
+    return override

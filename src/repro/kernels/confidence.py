@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG = -1e30
 
 
@@ -46,9 +48,16 @@ def _conf_kernel(x_ref, idx_ref, conf_ref, m_s, l_s, a_s, *, n_vtiles, vt):
         conf_ref[...] = 1.0 / l_s[...]              # exp(m − lse) = 1/Σe^{x−m}
 
 
+def confidence(logits, *, bt: int = 8, vt: int = 2048,
+               interpret: "bool | None" = None):
+    """logits: (B, V) -> (argmax (B,) int32, δ (B,) f32).  ``interpret``
+    resolves outside the jit boundary (never baked into the trace)."""
+    return _confidence(logits, bt=bt, vt=vt,
+                       interpret=resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("bt", "vt", "interpret"))
-def confidence(logits, *, bt: int = 8, vt: int = 2048, interpret: bool = True):
-    """logits: (B, V) -> (argmax (B,) int32, δ (B,) f32)."""
+def _confidence(logits, *, bt, vt, interpret):
     B, V = logits.shape
     bt = min(bt, B)
     vt = min(vt, V)

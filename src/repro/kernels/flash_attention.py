@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG = -1e30
 
 
@@ -74,11 +76,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_s, m_s, l_s,
                        ).astype(o_ref.dtype)
 
 
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    tq: int = 128, tk: int = 128,
+                    interpret: "bool | None" = None):
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd) -> (B, H, S, hd).
+    ``interpret`` resolves outside the jit boundary."""
+    return _flash_attention(q, k, v, causal=causal, window=window, tq=tq,
+                            tk=tk, interpret=resolve_interpret(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "window", "tq", "tk",
                                              "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    tq: int = 128, tk: int = 128, interpret: bool = True):
-    """q: (B, H, S, hd); k, v: (B, KV, S, hd) -> (B, H, S, hd)."""
+def _flash_attention(q, k, v, *, causal, window, tq, tk, interpret):
     B, H, S, hd = q.shape
     KV = k.shape[1]
     qpk = H // KV

@@ -1,61 +1,88 @@
 """Jit'd public wrappers routing model-layer calls to the Pallas kernels.
 
-``interpret`` defaults to True (this container is CPU-only; on a real TPU
-deployment set REPRO_KERNEL_INTERPRET=0 to run the compiled kernels).
+``interpret`` resolves through :func:`repro.kernels.backend.resolve_interpret`
+(explicit argument > ``REPRO_KERNEL_INTERPRET`` env var > interpret only
+off-TPU), so a real TPU deployment never silently runs the interpreter and
+CPU CI never tries to Mosaic-compile.  Call sites that route through
+``cfg.use_kernels`` pass ``cfg.kernel_interpret`` as the override.
+
 Wrappers adapt the model's (B, S, H, hd) layouts to the kernels' tiled
 layouts and fall back to the jnp reference for shapes the kernels don't
 support (e.g. head_dim not a multiple of 8 in interpret tests).
 """
 from __future__ import annotations
 
-import os
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.confidence import confidence as _confidence
 from repro.kernels.decode_attention import decode_attention as _decode_attn
+from repro.kernels.exit_update import exit_update as _exit_update
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 
-INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
 
-
-def softmax_confidence_fused(logits):
+def softmax_confidence_fused(logits, *, interpret=None):
     """(..., V) -> (argmax, δ) — Defs 3.2/3.3 via the fused kernel."""
     shape = logits.shape[:-1]
     V = logits.shape[-1]
     flat = logits.reshape(-1, V)
-    idx, conf = _confidence(flat, interpret=INTERPRET)
+    idx, conf = _confidence(flat, interpret=resolve_interpret(interpret))
     return idx.reshape(shape), conf.reshape(shape)
 
 
-def rmsnorm_fused(x, w, eps: float = 1e-5):
+def rmsnorm_fused(x, w, eps: float = 1e-5, *, interpret=None):
     shape = x.shape
-    out = _rmsnorm(x.reshape(-1, shape[-1]), w, eps=eps, interpret=INTERPRET)
+    out = _rmsnorm(x.reshape(-1, shape[-1]), w, eps=eps,
+                   interpret=resolve_interpret(interpret))
     return out.reshape(shape)
 
 
-def flash_attention_bshd(q, k, v, *, causal=True, window=0):
+def flash_attention_bshd(q, k, v, *, causal=True, window=0, interpret=None):
     """Model layout (B, S, H, hd) + (B, S, KV, hd) -> (B, S, H, hd)."""
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
     out = _flash(qt, kt, vt, causal=causal, window=window,
-                 interpret=INTERPRET)
+                 interpret=resolve_interpret(interpret))
     return out.transpose(0, 2, 1, 3)
 
 
-def decode_attention_cache(q, k_cache, v_cache, t, kpos, *, window=0):
-    """Model layout: q (B, 1, H, hd); caches (B, W, KV, hd)."""
+def decode_attention_cache(q, k_cache, v_cache, t, kpos, *, window=0,
+                           live=None, interpret=None):
+    """Model layout: q (B, 1, H, hd); caches (B, W, KV, hd).
+
+    ``live`` is the per-slot exit mask ((B,) bool, None = all live): dead
+    slots' grid cells early-out inside the kernel and their output rows
+    zero-fill — the decode-attention FLOPs scale with the number of live
+    slots, not the lane batch.
+    """
     B, _, H, hd = q.shape
     KV = k_cache.shape[2]
     qpk = H // KV
     qg = q[:, 0].reshape(B, KV, qpk, hd)
     kc = k_cache.transpose(0, 2, 1, 3)
     vc = v_cache.transpose(0, 2, 1, 3)
-    out = _decode_attn(qg, kc, vc, t, kpos, window=window,
-                       interpret=INTERPRET)
+    out = _decode_attn(qg, kc, vc, t, kpos, live, window=window,
+                       interpret=resolve_interpret(interpret))
     return out.reshape(B, 1, H, hd)
+
+
+def exit_update_fused(logits, answered, pred, exit_idx, conf, streak, ema,
+                      active, *, threshold, m, n_components, patience_k=0,
+                      ema_decay=0.0, interpret=None):
+    """One fused component step of the exit-decision scan (see
+    :mod:`repro.kernels.exit_update`): softmax-max confidence + threshold
+    gate + patience streak + carry merge + optional DecodeState EMA fold,
+    without materializing the softmax.  logits (B, V); all carry vectors
+    (B,).  Static ``threshold``/``m``/``n_components``/``patience_k``/
+    ``ema_decay`` fold into the kernel body."""
+    return _exit_update(logits, answered, pred, exit_idx, conf, streak, ema,
+                        active, threshold=threshold, m=m,
+                        n_components=n_components, patience_k=patience_k,
+                        ema_decay=ema_decay,
+                        interpret=resolve_interpret(interpret))

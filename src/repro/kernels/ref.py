@@ -50,8 +50,12 @@ def ref_flash_attention(q, k, v, causal: bool = True, window: int = 0):
     return o.reshape(B, H, S, hd).astype(q.dtype)
 
 
-def ref_decode_attention(q, k_cache, v_cache, t, kpos, window: int = 0):
-    """q: (B, H, hd); caches: (B, W, KV, hd); t scalar; kpos (W,)."""
+def ref_decode_attention(q, k_cache, v_cache, t, kpos, window: int = 0,
+                         live=None):
+    """q: (B, H, hd); caches: (B, W, KV, hd); t scalar; kpos (W,);
+    live (B,) bool or None.  Dead slots' output rows are exact zeros (the
+    exit-masked kernel's early-out contract); live rows are the plain
+    ring-masked single-query attention."""
     B, H, hd = q.shape
     W, KV = k_cache.shape[1], k_cache.shape[2]
     qpk = H // KV
@@ -64,4 +68,40 @@ def ref_decode_attention(q, k_cache, v_cache, t, kpos, window: int = 0):
     s = jnp.where(m[None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgw,bwkh->bkgh", p, v_cache.astype(jnp.float32))
-    return o.reshape(B, H, hd).astype(q.dtype)
+    o = o.reshape(B, H, hd)
+    if live is not None:
+        o = jnp.where(jnp.asarray(live, bool)[:, None, None], o, 0.0)
+    return o.astype(q.dtype)
+
+
+def ref_exit_update(logits, answered, pred, exit_idx, conf, streak, ema,
+                    active, *, threshold, m, n_components, patience_k=0,
+                    ema_decay=0.0):
+    """Fused exit-update oracle: one component step of the decision scan
+    (:meth:`repro.core.policy.ExitDecider.scan_component` semantics) plus
+    the optional DecodeState confidence-EMA fold, in plain jnp."""
+    idx, delta = ref_confidence(logits)
+    last = m >= n_components - 1
+    # final component: gate open BEFORE the patience rewrite (dense order)
+    if last:
+        gate = jnp.ones_like(delta, bool)
+    else:
+        gate = delta >= threshold
+    streak_n = jnp.asarray(streak)
+    if patience_k > 0:
+        streak_n = jnp.where(gate, streak_n + 1, 0)
+        gate = streak_n >= patience_k
+        if last:
+            gate = jnp.ones_like(gate)
+    answered = jnp.asarray(answered, bool)
+    fresh = gate & ~answered
+    conf_n = jnp.where(fresh, delta, conf)
+    ema_n = jnp.asarray(ema, jnp.float32)
+    if ema_decay > 0.0:
+        ema_n = jnp.where(jnp.asarray(active, bool),
+                          ema_decay * ema_n + (1.0 - ema_decay) * conf_n,
+                          ema_n)
+    return (answered | gate,
+            jnp.where(fresh, idx, pred).astype(jnp.int32),
+            jnp.where(fresh, jnp.int32(m), exit_idx).astype(jnp.int32),
+            conf_n, streak_n.astype(jnp.int32), ema_n)

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
     x = x_ref[...].astype(jnp.float32)              # (Rt, d)
@@ -21,10 +23,17 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
     o_ref[...] = (y * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("rt", "eps", "interpret"))
-def rmsnorm(x, w, *, rt: int = 8, eps: float = 1e-5, interpret: bool = True):
+def rmsnorm(x, w, *, rt: int = 8, eps: float = 1e-5,
+            interpret: "bool | None" = None):
     """x: (R, d); w: (d,).  Rows tiled by rt; d kept whole in VMEM
-    (d ≤ 8192 ⇒ (8, 8192) f32 tile = 256 KiB, well within VMEM)."""
+    (d ≤ 8192 ⇒ (8, 8192) f32 tile = 256 KiB, well within VMEM).
+    ``interpret`` resolves outside the jit boundary."""
+    return _rmsnorm(x, w, rt=rt, eps=eps,
+                    interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("rt", "eps", "interpret"))
+def _rmsnorm(x, w, *, rt, eps, interpret):
     R, d = x.shape
     rt = min(rt, R)
     pad = (-R) % rt

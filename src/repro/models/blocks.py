@@ -85,7 +85,8 @@ def _self_attention(cfg, params, h, ctx, cache):
         if cfg.use_kernels and S % 128 == 0 and q.shape[-1] % 8 == 0:
             from repro.kernels.ops import flash_attention_bshd
             out = flash_attention_bshd(q, k, v, causal=True,
-                                       window=cfg.attn_window)
+                                       window=cfg.attn_window,
+                                       interpret=cfg.kernel_interpret)
         else:
             attend = pick_attend(cfg, S, S, differentiable=cache is None)
             out = attend(q, k, v, ctx["positions"], ctx["positions"],
@@ -101,8 +102,14 @@ def _self_attention(cfg, params, h, ctx, cache):
         kpos = ctx["kpos"].at[slot].set(t)
         if cfg.use_kernels and q.shape[-1] % 8 == 0:
             from repro.kernels.ops import decode_attention_cache
+            # ctx["live"] is the per-slot exit mask threaded down from the
+            # carried DecodeState: dead slots' (b, h, ik) grid cells
+            # early-out inside the kernel (zero-filled rows; live rows are
+            # bit-identical — decode attention is batch-separable)
             out = decode_attention_cache(q, new_cache["k"], new_cache["v"],
-                                         t, kpos, window=cfg.attn_window)
+                                         t, kpos, window=cfg.attn_window,
+                                         live=ctx.get("live"),
+                                         interpret=cfg.kernel_interpret)
         else:
             out = attend_decode(q, new_cache["k"], new_cache["v"], t, kpos,
                                 window=cfg.attn_window)

@@ -65,7 +65,8 @@ def norm_apply(params, cfg, x):
                          params["b"].astype(x.dtype), cfg.norm_eps)
     if cfg.use_kernels:
         from repro.kernels.ops import rmsnorm_fused
-        return rmsnorm_fused(x, params["w"], eps=cfg.norm_eps)
+        return rmsnorm_fused(x, params["w"], eps=cfg.norm_eps,
+                             interpret=cfg.kernel_interpret)
     return rmsnorm(x, params["w"].astype(x.dtype), cfg.norm_eps)
 
 

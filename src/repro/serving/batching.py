@@ -18,6 +18,22 @@ from typing import Dict, List, Optional
 import numpy as np
 
 
+def cohort_capacity(lane_batch: int, n_cohorts: int) -> int:
+    """Round a lane's slot capacity UP to a multiple of ``n_cohorts``.
+
+    Cohorts are contiguous equal-size slot ranges, so a lane whose capacity
+    is not a cohort multiple silently degrades to fewer cohorts (see
+    :func:`repro.core.exec.effective_cohorts`) — forfeiting exactly the
+    per-cohort skip granularity the config asked for.  The serving engine
+    admits with this rounded capacity so the degradation path never
+    triggers in default configs; the extra slots are ordinary admission
+    capacity (idle slots cost one masked row each).
+    """
+    n = max(1, int(n_cohorts))
+    lane_batch = max(1, int(lane_batch))
+    return ((lane_batch + n - 1) // n) * n
+
+
 @dataclasses.dataclass
 class LaneStats:
     depth_ema: float

@@ -51,7 +51,7 @@ from repro.configs.base import ModelConfig
 from repro.core.exec import StagedExecutor, effective_cohorts
 from repro.core.macs import segment_macs_per_token
 from repro.models.model import CascadeModel, extra_input_shapes
-from repro.serving.batching import DepthCompactor
+from repro.serving.batching import DepthCompactor, cohort_capacity
 from repro.serving.runtime import DeviceDecodeLoop
 from repro.utils import get_logger
 
@@ -99,12 +99,22 @@ class CascadeServingEngine:
         self.cfg = cfg
         self.model = model
         self.params = params
-        self.lane_batch = lane_batch
+        # one-time layout normalization at admission capacity: lanes are
+        # sized to a cohort multiple so cohort-split skipping never
+        # silently degrades (the extra slots are plain admission capacity)
+        rounded = cohort_capacity(lane_batch, cfg.cascade.n_cohorts)
+        if rounded != lane_batch:
+            log.info("lane_batch %d rounded up to %d (cohort multiple of "
+                     "n_cohorts=%d)", lane_batch, rounded,
+                     cfg.cascade.n_cohorts)
+        self.lane_batch = rounded
+        lane_batch = rounded
         self.n_lanes = n_lanes
         self.cache_len = cache_len
         self.runtime = runtime
         self.chunk = chunk
-        self.cohorts = effective_cohorts(cfg.cascade.n_cohorts, lane_batch)
+        self.cohorts = effective_cohorts(cfg.cascade.n_cohorts, lane_batch,
+                                         warn=True)
         self.compactor = DepthCompactor(n_lanes, cfg.cascade.n_components)
         self.executor = StagedExecutor(model, cfg)
         self.decider = self.executor.decider
@@ -446,6 +456,9 @@ class CascadeServingEngine:
             "compile_seconds": self._compile_seconds,
             "runtime": self.runtime,
             "n_cohorts": self.cohorts,
+            "cohort_layout": self.cfg.cascade.cohort_layout,
+            "use_kernels": self.cfg.use_kernels,
+            "lane_batch": self.lane_batch,
             "chunk": self.chunk if self.runtime == "device" else 1,
             # per-lane mean of the carried confidence EMA (slot difficulty
             # telemetry from DecodeState)

@@ -15,8 +15,15 @@ host syncs once per chunk instead of once per token.
 Because each loop iteration is one :class:`~repro.core.exec.StagedExecutor`
 step, everything the staged executor does carries over unchanged inside the
 loop: cond_batch segment skipping, cohort-split skip predicates
-(``cascade.n_cohorts``), stateful measures (patience streaks ride in the
-carried ``DecodeState.policy``), and the per-segment execution counters.
+(``cascade.n_cohorts``) in either cohort layout (the cohort-major hot path
+or the legacy copy ablation — ``cascade.cohort_layout``), stateful measures
+(patience streaks ride in the carried ``DecodeState.policy``), and the
+per-segment execution counters.  With ``cfg.use_kernels`` the kernel fast
+path also runs *inside* the while_loop carry: the per-slot
+``DecodeState.active`` mask reaches the exit-masked decode-attention kernel
+every iteration (drained slots stop paying attention FLOPs mid-chunk), and
+each component's exit decision + DecodeState update (patience streaks,
+confidence EMA) is one fused exit-update kernel over the exit logits.
 The loop ends early once every slot has either spent its token budget or
 hit the cache limit, mirroring the host engine's per-token finish rule —
 which is what keeps host- and device-runtime token streams bit-identical

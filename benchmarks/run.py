@@ -33,10 +33,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_table2, bench_fig3, bench_fig4,
-                            bench_llm_cascade, bench_kernels, bench_ablation)
+                            bench_llm_cascade, bench_kernels,
+                            bench_ablation, bench_autotune)
     mods = [("table2", bench_table2), ("fig3", bench_fig3),
             ("fig4", bench_fig4), ("ablation", bench_ablation),
-            ("llm_cascade", bench_llm_cascade), ("kernels", bench_kernels)]
+            ("llm_cascade", bench_llm_cascade), ("kernels", bench_kernels),
+            ("autotune", bench_autotune)]
     if args.only:
         wanted = {w.strip() for w in args.only.split(",") if w.strip()}
         unknown = wanted - {n for n, _ in mods}
@@ -62,11 +64,24 @@ def main() -> None:
         with open("results/bench.csv", "w") as f:
             f.write(out + "\n")
     summary = getattr(bench_llm_cascade, "LAST_SERVING_SUMMARY", None)
-    if summary is not None:
+    autotune = getattr(bench_autotune, "LAST_AUTOTUNE_SUMMARY", None)
+    if summary is not None or autotune is not None:
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         path = os.path.join(root, "BENCH_serving.json")
+        # partial runs (--only) update their section and keep the rest
+        data = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                data = json.load(f)
+        if summary is not None:
+            autotune_keep = data.get("autotune")
+            data = dict(summary)
+            if autotune_keep is not None:
+                data["autotune"] = autotune_keep
+        if autotune is not None:
+            data["autotune"] = autotune
         with open(path, "w") as f:
-            json.dump(summary, f, indent=2)
+            json.dump(data, f, indent=2)
             f.write("\n")
         print(f"# serving summary -> {path}", file=sys.stderr)
     if failed:

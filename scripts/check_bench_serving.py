@@ -14,6 +14,16 @@ Validates EVERY row of the threshold sweep (written by
 * the device while_loop runtime is strictly faster than the host per-token
   runtime at threshold 0.0 (the dispatch-amortization criterion).
 
+When the summary carries an ``autotune`` section (written whenever
+``benchmarks/bench_autotune.py`` runs), it is validated too:
+
+* >= 3 swept budgets, each with the coordinate-descent solver STRICTLY
+  more accurate than the shared-quantile fit at <= its average MACs
+  (small quantization slack) — the per-component-dominates-shared gate;
+* telemetry overhead within 3% tokens/s of the telemetry-off engine,
+  with ZERO additional host syncs per decode chunk (counted, not
+  assumed) and bit-identical token streams.
+
 Exit code 1 on violation so CI can retry once — the strict margins are
 real but finite (~5–10%), and a shared runner's scheduler noise can eat
 them in a single unlucky run.
@@ -32,6 +42,66 @@ import sys
 # noise a shared runner shows even with interleaved measurement.
 LAYOUT_NOISE_TOL = 0.90
 MIN_THRESHOLDS = 3
+MIN_BUDGETS = 3
+# the acceptance bar: telemetry accumulation may cost at most 3% tokens/s
+TELEMETRY_RATIO_MIN = 0.97
+# realized-MAC slack for the equal-budget comparison: the solver fits on
+# a BINS-bin histogram and is evaluated on raw samples, so its realized
+# spend can quantize a hair past the shared fit's
+MAC_SLACK = 1.02
+
+
+def check_autotune(auto) -> bool:
+    ok = True
+    budgets = auto.get("budgets") or []
+    if len(budgets) < MIN_BUDGETS:
+        print(f"autotune: only {len(budgets)} budgets; sweep must cover "
+              f">= {MIN_BUDGETS}", file=sys.stderr)
+        ok = False
+    for b in budgets:
+        tag = f"autotune budget={b.get('budget')}"
+        # missing keys fail the gate with a printable value, not a
+        # TypeError mid-report
+        solver_acc = float(b.get("solver_acc") or 0.0)
+        shared_acc = float(b.get("shared_acc") or 1.0)
+        solver_macs = float(b.get("solver_macs") or 1e30)
+        shared_macs = float(b.get("shared_macs") or 0.0)
+        if not solver_acc > shared_acc:
+            print(f"{tag}: solver not strictly more accurate than the "
+                  f"shared quantile: {solver_acc:.4f} vs "
+                  f"{shared_acc:.4f}", file=sys.stderr)
+            ok = False
+        if solver_macs > shared_macs * MAC_SLACK:
+            print(f"{tag}: solver spends more MACs than the shared fit: "
+                  f"{solver_macs:.4f} vs {shared_macs:.4f}",
+                  file=sys.stderr)
+            ok = False
+    tel = auto.get("telemetry") or {}
+    ratio = tel.get("tokens_per_s_ratio", 0.0)
+    if ratio < TELEMETRY_RATIO_MIN:
+        print(f"autotune: telemetry overhead beyond 3%: tokens/s ratio "
+              f"{ratio:.3f} < {TELEMETRY_RATIO_MIN}", file=sys.stderr)
+        ok = False
+    if tel.get("extra_host_syncs_per_chunk_on", 1) != 0:
+        print(f"autotune: telemetry added host syncs per chunk: "
+              f"{tel.get('extra_host_syncs_per_chunk_on')}",
+              file=sys.stderr)
+        ok = False
+    if not tel.get("streams_identical"):
+        print("autotune: telemetry-on token streams diverged from "
+              "telemetry-off", file=sys.stderr)
+        ok = False
+    if not tel.get("mixed_exits"):
+        print("autotune: overhead bench ran at a non-mixed exit point — "
+              "the streams_identical gate is vacuous there (exit_counts "
+              f"{tel.get('exit_counts')})", file=sys.stderr)
+        ok = False
+    print("autotune solver_acc - shared_acc:",
+          [round(b.get("solver_acc", 0) - b.get("shared_acc", 0), 4)
+           for b in budgets])
+    print(f"autotune telemetry ratio: {ratio:.3f} "
+          f"(extra syncs {tel.get('extra_host_syncs_per_chunk_on')})")
+    return ok
 
 
 def main() -> int:
@@ -80,6 +150,8 @@ def main() -> int:
           [round(r.get("layout_speedup", 0.0), 3) for r in rows])
     print("kernel_speedup:",
           [round(r.get("kernel_speedup", 0.0), 3) for r in rows])
+    if s.get("autotune") is not None:
+        ok = check_autotune(s["autotune"]) and ok
     return 0 if ok else 1
 
 

@@ -1,0 +1,38 @@
+"""Online exit-telemetry + threshold-autotuning subsystem.
+
+The paper's headline knob — pick an acceptable accuracy degradation ε and
+the system determines per-component confidence thresholds δ̂_m — lives here
+as a *live serving* capability instead of an offline calibration script:
+
+* :mod:`repro.autotune.telemetry` — the device-resident
+  :class:`~repro.autotune.telemetry.ExitTelemetry` pytree accumulated
+  inside the decode hot path (host step and device while_loop alike),
+  including the sampled shadow full-depth correctness proxy.
+* :mod:`repro.autotune.solver` — the histogram-space coordinate-descent
+  threshold solver (ε → thresholds, and average-MAC budget → thresholds).
+* :mod:`repro.autotune.controller` — the
+  :class:`~repro.autotune.controller.ThresholdController` that periodically
+  resolves thresholds from live telemetry and pushes them into running
+  engines as plain arrays (no retrace).
+* :mod:`repro.autotune.artifacts` — config-hash-keyed calibration
+  artifacts so a fleet warm-starts instead of re-learning thresholds.
+"""
+from repro.autotune.artifacts import (CalibrationArtifact, config_key,
+                                      load_artifact, save_artifact)
+from repro.autotune.controller import ThresholdController
+from repro.autotune.solver import (ExitHistogram, SolveResult,
+                                   edges_from_thresholds, solve_budget,
+                                   solve_epsilon, thresholds_from_edges)
+from repro.autotune.telemetry import (ExitTelemetry, conf_to_bin,
+                                      init_telemetry, merge_telemetry,
+                                      pack_rider, telemetry_for,
+                                      telemetry_to_host)
+
+__all__ = [
+    "CalibrationArtifact", "config_key", "load_artifact", "save_artifact",
+    "ThresholdController",
+    "ExitHistogram", "SolveResult", "edges_from_thresholds", "solve_budget",
+    "solve_epsilon", "thresholds_from_edges",
+    "ExitTelemetry", "conf_to_bin", "init_telemetry", "merge_telemetry",
+    "pack_rider", "telemetry_for", "telemetry_to_host",
+]

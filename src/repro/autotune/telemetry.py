@@ -1,0 +1,294 @@
+"""Device-resident exit telemetry: the raw material of threshold autotuning.
+
+:class:`ExitTelemetry` is a registered pytree carried inside
+:class:`repro.core.exec.DecodeState`, so it rides wherever the decode state
+already rides — the host serve step, the :class:`DeviceDecodeLoop`
+``lax.while_loop`` carry, donation, and mesh sharding — and is accumulated
+*inside* the jitted decode program.  Nothing here ever syncs to host on its
+own: the device runtime keeps its one-host-sync-per-chunk discipline, and
+the controller fetches the counters only at its (much sparser) resolve
+ticks.
+
+Two families of counters, all float32 (exact integer arithmetic up to 2^24
+observations, and sharding-friendly):
+
+* **live** — accumulated every decode step from the components that
+  actually computed: per-component fixed-bin confidence histograms
+  (``conf_hist``, restricted to samples still undecided when the component
+  ran — the population its threshold gates), the answering component
+  (``exit_counts``), analytic MACs of those answers (``mac_spent`` via the
+  carried ``mac_weights``), and the observation count (``steps``).
+
+* **shadow** — a sampled full-depth correctness proxy.  Every
+  ``autotune.shadow_every``-th decode step (by the position cursor, so the
+  schedule is deterministic and identical across runtimes) segment skipping
+  is disabled for that one step, every component's (prediction, confidence)
+  is captured, and the *joint* binned routing-confidence vector is
+  scatter-added into ``shadow_count`` with per-component
+  agreement-with-the-final-component counts in ``shadow_agree``.  Prefill
+  already computes every component, so each prefill decision contributes a
+  free shadow observation.  Agreement with the final component is the
+  label-free stand-in for correctness: the cascade's disagreement rate with
+  the full model bounds its accuracy drop, which is exactly the ε the
+  paper's user-facing knob promises.
+
+The joint histogram is what lets the solver do a *joint* threshold search:
+the population reaching component m depends on the thresholds of components
+before it, and only the joint distribution can re-derive that population
+for candidate thresholds that differ from the deployed ones.  Cells are the
+binned confidences of the ``n_components - 1`` routing components (the
+final component always answers; its confidence never routes), flattened
+C-order (component 0 is the slowest-varying axis) to match
+``np.ravel_multi_index`` — the host-recompute reference
+(:meth:`repro.autotune.solver.ExitHistogram.from_samples`) must bit-match
+the device accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# joint-histogram size guard: bins ** (n_components - 1) cells
+MAX_CELLS = 1 << 20
+
+
+def conf_to_bin(conf, bins: int):
+    """Fixed-bin index of a confidence in (0, 1]: ``min(floor(c·bins),
+    bins-1)``.  A deployed threshold δ = e/bins then corresponds exactly to
+    the bin gate ``bin >= e`` (``c >= e/bins  ⟺  floor(c·bins) >= e`` for
+    c in [0, 1]).  The fused exit-update kernel computes the same formula
+    in-register; keep the two in lockstep."""
+    return jnp.clip((conf * bins).astype(jnp.int32), 0, bins - 1)
+
+
+def pack_rider(pred, conf, bins: int):
+    """The decision scan's telemetry rider code: ``pred * bins + bin``
+    packed into one int32, so each scanned component writes ONE carry row
+    (the hot path pays one update, not two).  The fused kernel emits the
+    same code in-register; :func:`accumulate_decode` unpacks with one
+    div/mod pair per step."""
+    return pred.astype(jnp.int32) * bins + conf_to_bin(conf, bins)
+
+
+@dataclasses.dataclass
+class ExitTelemetry:
+    """Per-lane telemetry counters (a registered pytree; all f32).
+
+    conf_hist    (n_m, bins) — live confidence histogram per component,
+                 over samples still undecided when the component computed.
+    exit_counts  (n_m,)      — answering component per live (slot, step).
+                 The MAC counter derives from it at host-sync time
+                 (``mac_spent = exit_counts · mac_weights`` in
+                 :func:`telemetry_to_host`) — pricing per step on device
+                 would only re-spend the decode hot path's dispatch
+                 budget on arithmetic a dot product recovers exactly.
+    mac_weights  (n_m,)      — per-exit analytic MAC cost (a constant
+                 rider: set at init by the engine, carried untouched).
+    steps        ()          — live decode (slot, step) observations.
+    shadow_count (cells,)    — joint binned routing-confidence counts from
+                 shadow full-depth observations (cells = bins^(n_m-1)).
+    shadow_agree (n_m-1, cells) — of those, how many of component m's
+                 predictions agreed with the final component's.
+    shadow_steps ()          — shadow observations.
+    """
+
+    conf_hist: jnp.ndarray
+    exit_counts: jnp.ndarray
+    mac_weights: jnp.ndarray
+    steps: jnp.ndarray
+    shadow_count: jnp.ndarray
+    shadow_agree: jnp.ndarray
+    shadow_steps: jnp.ndarray
+
+    def replace(self, **kw) -> "ExitTelemetry":
+        return dataclasses.replace(self, **kw)
+
+
+jax.tree_util.register_dataclass(
+    ExitTelemetry,
+    data_fields=("conf_hist", "exit_counts", "mac_weights",
+                 "steps", "shadow_count", "shadow_agree", "shadow_steps"),
+    meta_fields=())
+
+
+def n_cells(n_components: int, bins: int) -> int:
+    cells = bins ** (n_components - 1)
+    if cells > MAX_CELLS:
+        raise ValueError(
+            f"autotune joint histogram would need {cells} cells "
+            f"(bins={bins}, n_components={n_components}); lower "
+            f"autotune.bins (cap {MAX_CELLS})")
+    return cells
+
+
+def init_telemetry(n_components: int, bins: int,
+                   mac_weights=None) -> ExitTelemetry:
+    """Zeroed telemetry for one lane.  ``mac_weights`` is the per-exit
+    analytic MAC prefix (``repro.core.macs.segment_macs_per_token``);
+    zeros when the caller has no cache length to price against (the
+    exit-count vector always allows a host-side re-pricing)."""
+    cells = n_cells(n_components, bins)
+    if mac_weights is None:
+        mw = jnp.zeros((n_components,), jnp.float32)
+    else:
+        mw = jnp.asarray(np.asarray(mac_weights, np.float32))
+        if mw.shape != (n_components,):
+            raise ValueError(f"mac_weights shape {mw.shape} != "
+                             f"({n_components},)")
+    return ExitTelemetry(
+        conf_hist=jnp.zeros((n_components, bins), jnp.float32),
+        exit_counts=jnp.zeros((n_components,), jnp.float32),
+        mac_weights=mw,
+        steps=jnp.zeros((), jnp.float32),
+        shadow_count=jnp.zeros((cells,), jnp.float32),
+        shadow_agree=jnp.zeros((n_components - 1, cells), jnp.float32),
+        shadow_steps=jnp.zeros((), jnp.float32))
+
+
+def telemetry_for(cfg, mac_weights=None) -> Optional[ExitTelemetry]:
+    """Telemetry for a ModelConfig, or None when autotune is disabled —
+    the one switch that keeps every decode graph byte-identical to the
+    pre-autotune program when the subsystem is off."""
+    if not cfg.autotune.enabled:
+        return None
+    return init_telemetry(cfg.cascade.n_components, cfg.autotune.bins,
+                          mac_weights)
+
+
+def _shadow_cell(tbin: jnp.ndarray, bins: int) -> jnp.ndarray:
+    """Flat C-order joint cell index from (n_m, B) bin rows (routing
+    components only — row n_m-1 never routes)."""
+    r = tbin.shape[0] - 1
+    cell = jnp.zeros(tbin.shape[1:], jnp.int32)
+    for m in range(r):
+        cell = cell * bins + tbin[m]
+    return cell
+
+
+def _fold_shadow(ops, tbin, tpred, f_live, bins: int):
+    """THE shadow fold — one full-depth observation batch into the
+    (shadow_count, shadow_agree, shadow_steps) triple.  Shared by the
+    decode path (under its lax.cond shadow gate) and the prefill path so
+    the two sample sources can never drift apart."""
+    s_count, s_agree, s_steps = ops
+    n_m = tbin.shape[0]
+    cell = _shadow_cell(tbin, bins)
+    s_count = s_count.at[cell].add(f_live)
+    agree = (tpred[:-1] == tpred[-1][None, :]).astype(jnp.float32)
+    cells = s_count.shape[0]
+    arows = jnp.broadcast_to(
+        jnp.arange(n_m - 1, dtype=jnp.int32)[:, None], agree.shape)
+    aidx = (arows * cells + cell[None, :]).reshape(-1)
+    s_agree = s_agree.reshape(-1).at[aidx].add(
+        (agree * f_live[None, :]).reshape(-1)).reshape(s_agree.shape)
+    return s_count, s_agree, s_steps + jnp.sum(f_live)
+
+
+def accumulate_decode(tel: ExitTelemetry, carry, decision, active,
+                      shadow) -> ExitTelemetry:
+    """Fold one staged decode step into the counters (pure jnp — safe
+    inside jit / lax.while_loop / lax.cond).
+
+    ``carry`` is the finished decision-scan carry holding the telemetry
+    rider (``tcode``: :func:`pack_rider`'s per-component packed
+    prediction/confidence-bin codes); segments that were skipped left
+    their rows zeroed.  "Still undecided when component m ran" is exactly
+    ``m <= exit_index`` (the answering component is the last one a sample
+    reaches), so the reach mask comes from the decision instead of a
+    carried rider row — fewer hot-path dispatches.  ``shadow`` is this
+    step's shadow flag (traced scalar bool): when set, skipping was
+    disabled upstream, every row is filled, and the joint histogram
+    absorbs the full confidence vector.
+    """
+    bins = tel.conf_hist.shape[1]
+    tcode = carry["tcode"]
+    tbin = tcode % bins
+    tpred = tcode // bins
+    n_m = tbin.shape[0]
+    live = jnp.asarray(active, bool)
+    f_live = live.astype(jnp.float32)
+
+    # live: per-component confidence histogram over still-undecided samples
+    rows = jnp.broadcast_to(jnp.arange(n_m, dtype=jnp.int32)[:, None],
+                            tbin.shape)
+    reach = jnp.logical_and(rows <= decision.exit_index[None, :],
+                            live[None, :]).astype(jnp.float32)
+    flat_idx = (rows * bins + tbin).reshape(-1)
+    conf_hist = tel.conf_hist.reshape(-1).at[flat_idx].add(
+        reach.reshape(-1)).reshape(tel.conf_hist.shape)
+
+    exit_counts = tel.exit_counts.at[decision.exit_index].add(f_live)
+    steps = tel.steps + jnp.sum(f_live)
+
+    # shadow: joint routing-confidence histogram + agreement proxy.  The
+    # scatter-adds sit under lax.cond so the (shadow_every - 1)/shadow_every
+    # non-shadow steps skip their dispatch entirely — telemetry's per-step
+    # cost is the live counters only.
+    shadow_count, shadow_agree, shadow_steps = jax.lax.cond(
+        jnp.asarray(shadow, bool),
+        lambda ops: _fold_shadow(ops, tbin, tpred, f_live, bins),
+        lambda ops: ops,
+        (tel.shadow_count, tel.shadow_agree, tel.shadow_steps))
+
+    return tel.replace(conf_hist=conf_hist, exit_counts=exit_counts,
+                       steps=steps, shadow_count=shadow_count,
+                       shadow_agree=shadow_agree, shadow_steps=shadow_steps)
+
+
+def accumulate_prefill(tel: ExitTelemetry, tcode,
+                       active) -> ExitTelemetry:
+    """Fold one prefill decision into the SHADOW counters.
+
+    Prefill computes every component anyway, so each live slot is a free
+    full-depth observation: ``tcode`` is the decision carry's telemetry
+    rider ((n_m, B) :func:`pack_rider` codes — all rows filled, since
+    nothing skips at prefill).  Prefill does NOT touch the live counters
+    — those describe the decode hot path the thresholds gate.
+    """
+    f_live = jnp.asarray(active, bool).astype(jnp.float32)
+    bins = tel.conf_hist.shape[1]
+    shadow_count, shadow_agree, shadow_steps = _fold_shadow(
+        (tel.shadow_count, tel.shadow_agree, tel.shadow_steps),
+        tcode % bins, tcode // bins, f_live, bins)
+    return tel.replace(shadow_count=shadow_count, shadow_agree=shadow_agree,
+                       shadow_steps=shadow_steps)
+
+
+def telemetry_to_host(tel: ExitTelemetry) -> dict:
+    """One batched device_get of every counter → plain numpy dict.
+
+    ``mac_spent`` is derived here (``exit_counts · mac_weights`` in f32)
+    rather than priced per step on device — bit-identical across host and
+    device runtimes by construction, zero hot-path cost."""
+    vals = jax.device_get((tel.conf_hist, tel.exit_counts,
+                           tel.mac_weights, tel.steps, tel.shadow_count,
+                           tel.shadow_agree, tel.shadow_steps))
+    keys = ("conf_hist", "exit_counts", "mac_weights",
+            "steps", "shadow_count", "shadow_agree", "shadow_steps")
+    out = {k: np.asarray(v) for k, v in zip(keys, vals)}
+    out["mac_spent"] = np.float32(
+        np.dot(out["exit_counts"].astype(np.float32),
+               out["mac_weights"].astype(np.float32)))
+    return out
+
+
+def merge_telemetry(tels: Sequence) -> dict:
+    """Sum per-lane telemetry into one host-side counter dict, in lane
+    order (fixed summation order keeps the merge bit-deterministic).
+    Accepts ExitTelemetry pytrees or host dicts; ``mac_weights`` is a
+    constant rider and is carried, not summed."""
+    hosts = [t if isinstance(t, dict) else telemetry_to_host(t)
+             for t in tels]
+    if not hosts:
+        raise ValueError("no telemetry to merge")
+    out = {k: hosts[0][k].copy() for k in hosts[0]}
+    for h in hosts[1:]:
+        for k in out:
+            if k == "mac_weights":
+                continue
+            out[k] = out[k] + h[k]
+    return out

@@ -1,9 +1,10 @@
-from repro.configs.base import (CascadeConfig, InputShape, INPUT_SHAPES,
-                                ModelConfig, default_exit_boundaries,
-                                get_config, list_configs, reduced, register)
+from repro.configs.base import (AutotuneConfig, CascadeConfig, InputShape,
+                                INPUT_SHAPES, ModelConfig,
+                                default_exit_boundaries, get_config,
+                                list_configs, reduced, register)
 
 __all__ = [
-    "CascadeConfig", "InputShape", "INPUT_SHAPES", "ModelConfig",
-    "default_exit_boundaries", "get_config", "list_configs", "reduced",
-    "register",
+    "AutotuneConfig", "CascadeConfig", "InputShape", "INPUT_SHAPES",
+    "ModelConfig", "default_exit_boundaries", "get_config", "list_configs",
+    "reduced", "register",
 ]

@@ -104,6 +104,65 @@ class CascadeConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class AutotuneConfig:
+    """Online exit-telemetry + threshold-autotuning knobs (``repro.autotune``).
+
+    With ``enabled``, every staged decode step accumulates a device-resident
+    :class:`repro.autotune.telemetry.ExitTelemetry` pytree inside the carried
+    ``DecodeState`` (per-component confidence histograms, exit counts, MAC
+    counters, and a shadow-sampled joint histogram with a correctness proxy:
+    does the exited prediction agree with the final component?).  The
+    histograms are fixed-bin over the confidence range (0, 1]: ``bins``
+    uniform bins, so a deployed threshold δ = e/bins corresponds exactly to
+    the bin-edge gate ``bin >= e``.
+
+    ``shadow_every`` picks the shadow full-depth sampling rate: every k-th
+    decode step (by the lane's position cursor, so the schedule is
+    deterministic and identical across host/device runtimes) OBSERVES the
+    full depth — segments the skip predicate would drop compute their exit
+    logits from a separate shadow hidden chain and record ALL components'
+    confidences + agreement-with-final into the telemetry rider only,
+    while the committed caches, decisions and patience streaks keep exact
+    skip semantics.  Token streams are bit-identical with telemetry on or
+    off (pinned by tests); the cost is ~1/k extra segment compute and the
+    ``segments_run`` counters counting the observations.
+
+    The remaining fields parameterize the :class:`ThresholdController`:
+    ``resolve_every`` engine ticks between threshold resolutions,
+    ``min_shadow`` shadow observations before the first solve, ``hysteresis``
+    (minimum max-threshold movement worth pushing), and ``drift_tol``
+    (L1 distance between consecutive windows' normalized joint SHADOW
+    histograms — full-depth, threshold-independent evidence — beyond which
+    the pre-drift accumulated history is excluded from this and all future
+    resolves).
+    ``epsilon`` / ``mac_budget`` pick the solve direction: a target accuracy
+    degradation ε (paper §5, generalized to a joint search) or a target
+    average-MAC budget (``mac_budget > 0`` wins when both are set).
+    """
+
+    enabled: bool = False
+    bins: int = 32
+    shadow_every: int = 16
+    resolve_every: int = 64
+    min_shadow: int = 256
+    hysteresis: float = 0.02
+    drift_tol: float = 0.25
+    epsilon: float = 0.05
+    mac_budget: float = 0.0
+
+    def __post_init__(self):
+        if self.bins < 2:
+            raise ValueError(f"autotune.bins must be >= 2, got {self.bins}")
+        if self.shadow_every < 1:
+            raise ValueError(
+                f"autotune.shadow_every must be >= 1, got {self.shadow_every}")
+        if self.resolve_every < 1:
+            raise ValueError(
+                f"autotune.resolve_every must be >= 1, got "
+                f"{self.resolve_every}")
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelConfig:
     """One architecture.  Units follow each model card exactly."""
 
@@ -178,6 +237,8 @@ class ModelConfig:
     scan_unroll: bool = False
 
     cascade: CascadeConfig = dataclasses.field(default_factory=CascadeConfig)
+    autotune: AutotuneConfig = dataclasses.field(
+        default_factory=AutotuneConfig)
 
     # ------------------------------------------------------------------
     @property
@@ -203,6 +264,10 @@ class ModelConfig:
     def with_cascade(self, **kw) -> "ModelConfig":
         return dataclasses.replace(
             self, cascade=dataclasses.replace(self.cascade, **kw))
+
+    def with_autotune(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(
+            self, autotune=dataclasses.replace(self.autotune, **kw))
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -56,14 +56,28 @@ def accuracy_vs_confidence(conf: np.ndarray, correct: np.ndarray):
 
 def threshold_for_epsilon(conf: np.ndarray, correct: np.ndarray,
                           epsilon: float,
-                          target: float | None = None) -> Tuple[float, float]:
+                          target: float | None = None,
+                          val_conf: np.ndarray | None = None,
+                          val_correct: np.ndarray | None = None
+                          ) -> Tuple[float, float]:
     """δ_m(ε) = min{δ : α_m(δ) ≥ target − ε} and α*_m, per §5.
 
-    target defaults to the component's own α*_m (the paper's rule).  When the
-    target is unreachable at any δ, returns threshold 1.1 (never exit)."""
+    target defaults to the component's own α*_m (the paper's rule).  When
+    the target is unreachable at any δ, returns threshold 1.1 (never exit).
+
+    ``val_conf`` / ``val_correct`` realize the paper's remark that a
+    validation set distinct from the statistics set should ideally pick
+    the threshold: α*_m (and the default target) still come from
+    ``(conf, correct)``, but the threshold is the smallest δ whose
+    accuracy ON THE VALIDATION CURVE clears the goal — so the selection
+    cannot overfit the same samples that set the bar."""
     grid, alpha = accuracy_vs_confidence(conf, correct)
     alpha_star = float(np.max(alpha))
     goal = (alpha_star if target is None else target) - epsilon
+    if val_conf is not None:
+        if val_correct is None:
+            raise ValueError("val_conf given without val_correct")
+        grid, alpha = accuracy_vs_confidence(val_conf, val_correct)
     ok = alpha >= goal
     if not ok.any():
         return 1.1, alpha_star
@@ -74,18 +88,33 @@ def threshold_for_epsilon(conf: np.ndarray, correct: np.ndarray,
 def calibrate_thresholds(confidences: Sequence[np.ndarray],
                          corrects: Sequence[np.ndarray],
                          epsilon: float,
-                         relative_to: str = "self") -> CalibrationResult:
+                         relative_to: str = "self",
+                         val_confidences: Sequence[np.ndarray] | None = None,
+                         val_corrects: Sequence[np.ndarray] | None = None
+                         ) -> CalibrationResult:
     """Per-component thresholds for accuracy budget ε.
 
     confidences[m], corrects[m]: arrays over the calibration set for component
     m.  The final component's threshold is forced to 0 (paper's remark (i)).
 
     ``relative_to`` is a calibrator registry spec (repro.core.policy):
-      "self"  — the paper's §5 rule (SelfCalibrator).
-      "final" — beyond-paper cascade-level rule (FinalCalibrator).
+      "self"    — the paper's §5 rule (SelfCalibrator).
+      "final"   — beyond-paper cascade-level rule (FinalCalibrator).
+      "holdout" — §5 with the threshold *selected* on a validation split
+                  distinct from the statistics that set α*_m (the paper's
+                  validation-set remark); splits internally unless
+                  ``val_confidences`` / ``val_corrects`` are given.
     New rules register via ``@register_calibrator`` and become available here
-    without touching this function.
+    without touching this function.  Explicit ``val_confidences`` /
+    ``val_corrects`` (per-component arrays like the calibration set) are
+    honored by every calibrator.
     """
     from repro.core.policy import get_calibrator  # circular-import guard
-    return get_calibrator(relative_to).calibrate(confidences, corrects,
-                                                 epsilon)
+    cal = get_calibrator(relative_to)
+    if val_confidences is None and val_corrects is None:
+        # registered third-party calibrators may predate the validation-
+        # split kwargs; don't force the wider signature on them
+        return cal.calibrate(confidences, corrects, epsilon)
+    return cal.calibrate(confidences, corrects, epsilon,
+                         val_confidences=val_confidences,
+                         val_corrects=val_corrects)

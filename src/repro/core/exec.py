@@ -136,6 +136,15 @@ class DecodeState:
                                ``select`` mode every segment counts every
                                step; in ``cond_batch`` skipped segments
                                don't).  The real-skip evidence.
+    tel           :class:`repro.autotune.telemetry.ExitTelemetry` counters
+                               accumulated inside the decode program, or
+                               None (autotune disabled — the default,
+                               keeping the carry byte-identical to the
+                               pre-autotune layout).
+    thresholds    (n_components,) f32 live threshold vector, or None (use
+                               the config's static thresholds).  As carry
+                               DATA, a ThresholdController push is a plain
+                               array swap — no retrace.
     """
 
     t: jnp.ndarray
@@ -143,6 +152,8 @@ class DecodeState:
     policy: Optional[jnp.ndarray]
     ema_conf: jnp.ndarray
     segments_run: jnp.ndarray
+    tel: Optional[object] = None
+    thresholds: Optional[jnp.ndarray] = None
 
     def replace(self, **kw) -> "DecodeState":
         return dataclasses.replace(self, **kw)
@@ -150,12 +161,14 @@ class DecodeState:
 
 jax.tree_util.register_dataclass(
     DecodeState,
-    data_fields=("t", "active", "policy", "ema_conf", "segments_run"),
+    data_fields=("t", "active", "policy", "ema_conf", "segments_run",
+                 "tel", "thresholds"),
     meta_fields=())
 
 
 def init_decode_state(decider: ExitDecider, batch: int, n_components: int,
-                      t: int = 0, active=None) -> DecodeState:
+                      t: int = 0, active=None, telemetry=None,
+                      thresholds=None) -> DecodeState:
     """Fresh decode carry for a lane of ``batch`` sequences."""
     return DecodeState(
         t=jnp.asarray(t, jnp.int32),
@@ -163,7 +176,10 @@ def init_decode_state(decider: ExitDecider, batch: int, n_components: int,
                 else jnp.asarray(active, bool)),
         policy=decider.measure.init_state(n_components, batch),
         ema_conf=jnp.zeros((batch,), jnp.float32),
-        segments_run=jnp.zeros((n_components,), jnp.int32))
+        segments_run=jnp.zeros((n_components,), jnp.int32),
+        tel=telemetry,
+        thresholds=(None if thresholds is None
+                    else jnp.asarray(thresholds, jnp.float32)))
 
 
 class StagedExecutor:
@@ -193,10 +209,30 @@ class StagedExecutor:
         self.layout = self.cfg.cascade.cohort_layout
         self.n_components = self.cfg.cascade.n_components
 
+    # sentinel: init_state should build fresh telemetry itself
+    _AUTO_TELEMETRY = object()
+
     # ------------------------------------------------------------------
-    def init_state(self, batch: int, t: int = 0, active=None) -> DecodeState:
+    def init_state(self, batch: int, t: int = 0, active=None,
+                   mac_weights=None,
+                   telemetry=_AUTO_TELEMETRY) -> DecodeState:
+        """Fresh carry.  With ``cfg.autotune.enabled`` the state also gets
+        zeroed telemetry counters (``mac_weights`` prices exits for the MAC
+        counter — the engine passes its cache-length-aware prefix) and a
+        live threshold vector seeded from the config.  Pass ``telemetry=``
+        to carry existing counters into the fresh state (lane re-prefill)
+        instead of allocating zeroed ones that would be thrown away."""
+        tel = thresholds = None
+        if self.cfg.autotune.enabled:
+            if telemetry is self._AUTO_TELEMETRY:
+                from repro.autotune.telemetry import telemetry_for
+                tel = telemetry_for(self.cfg, mac_weights)
+            else:
+                tel = telemetry
+            thresholds = self.cfg.cascade.thresholds
         return init_decode_state(self.decider, batch, self.n_components,
-                                 t=t, active=active)
+                                 t=t, active=active, telemetry=tel,
+                                 thresholds=thresholds)
 
     def _carry_forward(self, state: DecodeState,
                        decision: ExitDecision) -> DecodeState:
@@ -212,12 +248,23 @@ class StagedExecutor:
                 state: Optional[DecodeState] = None):
         """Full-sequence prefill; returns (decision, cache, state) with the
         prefill decision seeding the stateful-measure carry (it counts as
-        the streak's first step) and ``t`` set past the prompt."""
+        the streak's first step) and ``t`` set past the prompt.
+
+        With telemetry enabled, the prefill decision contributes a free
+        SHADOW observation per live slot: prefill computes every component
+        anyway, so the decision carry's rider rows hold the full per-
+        component confidence/prediction vectors at zero extra compute.
+        """
         if state is None:
             state = self.init_state(tokens.shape[0])
         logits, cache = self.model.prefill(params, tokens, cache, extra)
-        decision = self.decider.decide(logits, state=state.policy,
-                                       active=state.active)
+        decision, carry = self.decider.decide_with_carry(
+            logits, thresholds=state.thresholds, state=state.policy,
+            active=state.active)
+        if state.tel is not None:
+            from repro.autotune.telemetry import accumulate_prefill
+            state = state.replace(tel=accumulate_prefill(
+                state.tel, carry["tcode"], state.active))
         state = self._carry_forward(state, decision).replace(
             t=jnp.asarray(tokens.shape[1], jnp.int32))
         return decision, cache, state
@@ -258,21 +305,77 @@ class StagedExecutor:
         return run, skip
 
     def _segment_step(self, si, ctx_c, params, ths, h, seg_cache, sc,
-                      active):
+                      active, shadow=False, hs=None):
         """One (segment, cohort) cell: cond-skip in ``cond_batch`` mode,
         compute-and-mask in ``select`` mode.  Returns
-        (h, new_seg_cache, carry, ran) with ``ran`` the 0/1 execution
-        count feeding ``DecodeState.segments_run``."""
+        (h, new_seg_cache, carry, ran, hs) with ``ran`` the 0/1 execution
+        count feeding ``DecodeState.segments_run``.
+
+        ``shadow`` / ``hs`` are the telemetry shadow pass (python False /
+        None when telemetry is off — those graphs stay byte-identical to
+        the pre-autotune program).  On a shadow step, segments the skip
+        predicate would drop are OBSERVED, never committed: the shadow
+        hidden chain ``hs`` (== the committed ``h`` until the first skip,
+        since the skip predicate is monotone within a step) threads the
+        true full-depth activations through the skipped suffix, each
+        skipped segment computes its exit logits from it and lands ONLY
+        the telemetry rider row — the committed hidden state, the
+        backfilled caches, the decision carry and the patience streaks
+        all keep exact skip semantics, so telemetry-on token streams are
+        bit-identical to telemetry-off (pinned by tests/test_autotune.py).
+        """
         run, skip_fn = self._segment_paths(si, ctx_c, params, ths)
         skip = self.decider.should_skip(sc, active)
+        if shadow is False:
+            if self.mode == "cond_batch":
+                h, nc, sc = lax.cond(skip, skip_fn, run, h, seg_cache, sc)
+                return (h, nc, sc,
+                        jnp.logical_not(skip).astype(jnp.int32), hs)
+            full = run(h, seg_cache, sc)
+            lite = skip_fn(h, seg_cache, sc)
+            h, nc, sc = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(skip, a, b), lite, full)
+            return h, nc, sc, jnp.asarray(1, jnp.int32), hs
+        model, decider, n_m = self.model, self.decider, self.n_components
+
+        def run4(h, seg_cache, sc, hs):
+            h2, nc2, sc2 = run(h, seg_cache, sc)
+            return h2, nc2, sc2, h2          # shadow chain = real chain
+
+        def observe4(h, seg_cache, sc, hs):
+            # full-depth OBSERVATION: compute from the shadow chain, keep
+            # only the telemetry rider row; commit the skip results
+            h2s, _, _ = model.run_segment(si, params, hs, ctx_c, seg_cache)
+            lg = model.exit_logits(params, si, h2s)[:, 0, :]
+            sc_obs = decider.scan_logits(si, n_m, lg, ths, sc)
+            sc = {**sc, "tcode": sc_obs["tcode"]}
+            h, seg_cache, sc = skip_fn(h, seg_cache, sc)
+            return h, seg_cache, sc, h2s
+
+        def skip4(h, seg_cache, sc, hs):
+            h, seg_cache, sc = skip_fn(h, seg_cache, sc)
+            return h, seg_cache, sc, hs
+
         if self.mode == "cond_batch":
-            h, nc, sc = lax.cond(skip, skip_fn, run, h, seg_cache, sc)
-            return h, nc, sc, jnp.logical_not(skip).astype(jnp.int32)
-        full = run(h, seg_cache, sc)
+            def skip_branch(h, c, s, hs):
+                return lax.cond(shadow, observe4, skip4, h, c, s, hs)
+            h, nc, sc, hs = lax.cond(skip, skip_branch, run4,
+                                     h, seg_cache, sc, hs)
+            ran = jnp.logical_or(jnp.logical_not(skip),
+                                 shadow).astype(jnp.int32)
+            return h, nc, sc, ran, hs
+        # select: ONE dense run, from the shadow chain (hs == h while any
+        # sample is still undecided, so the skip-masked decision merge is
+        # unchanged); shadow steps take the rider row from the computed
+        # observation even where skip holds
+        full = run(hs, seg_cache, sc)
         lite = skip_fn(h, seg_cache, sc)
-        h, nc, sc = jax.tree_util.tree_map(
+        h, nc, sc_sel = jax.tree_util.tree_map(
             lambda a, b: jnp.where(skip, a, b), lite, full)
-        return h, nc, sc, jnp.asarray(1, jnp.int32)
+        observed = jnp.logical_or(jnp.logical_not(skip), shadow)
+        sc_sel = {**sc_sel, "tcode": jnp.where(observed, full[2]["tcode"],
+                                               lite[2]["tcode"])}
+        return h, nc, sc_sel, jnp.asarray(1, jnp.int32), full[0]
 
     # ------------------------------------------------------------------
     def decode_step(self, params, token, cache, state: DecodeState,
@@ -308,8 +411,24 @@ class StagedExecutor:
           ROADMAP flagged).
         """
         model, decider, n_m = self.model, self.decider, self.n_components
-        ths = decider.resolved_thresholds(n_m)
+        # live thresholds (autotune: carry data, a push never retraces)
+        # win over the config's static vector
+        if state.thresholds is not None:
+            ths = decider.resolved_thresholds(n_m, state.thresholds)
+        else:
+            ths = decider.resolved_thresholds(n_m)
         t = state.t
+        # telemetry shadow schedule: every shadow_every-th step (by the
+        # position cursor — deterministic and identical across host/device
+        # runtimes) OBSERVES the full depth: skipped segments compute their
+        # exit logits from the shadow hidden chain for the telemetry rider
+        # only, while caches/decisions/streaks keep exact skip semantics
+        # (see _segment_step) — token streams never change.  Python False
+        # when telemetry is off: the graphs stay untouched.
+        shadow = False
+        if state.tel is not None:
+            shadow = jnp.equal(
+                jnp.mod(t, jnp.int32(self.cfg.autotune.shadow_every)), 0)
         B = token.shape[0]
         C = effective_cohorts(self.cfg.cascade.n_cohorts, B, warn=True)
         Bc = B // C
@@ -327,31 +446,42 @@ class StagedExecutor:
         new_segs.append(nc)
         sc = decider.scan_logits(0, n_m, model.exit_logits(params, 0, h)
                                  [:, 0, :], ths, state=state.policy)
+        # the telemetry shadow chain starts at the committed hidden state
+        # (segment 0 always computes); None keeps telemetry-off graphs
+        # byte-identical to the pre-autotune program
+        hs = h if shadow is not False else None
 
         if C == 1:
             for si in range(1, n_m):
-                h, nc, sc, r = self._segment_step(
-                    si, ctx, params, ths, h, segs[si], sc, state.active)
+                h, nc, sc, r, hs = self._segment_step(
+                    si, ctx, params, ths, h, segs[si], sc, state.active,
+                    shadow=shadow, hs=hs)
                 new_segs.append(nc)
                 ran.append(r)
         elif self.layout == "copy":
             # ablation baseline: re-slice + re-concat per segment
             for si in range(1, n_m):
                 h_parts, nc_parts, sc_parts = [], [], []
+                hs_parts = [] if hs is not None else None
                 ran_si = jnp.zeros((), jnp.int32)
                 for c in range(C):
                     lo, hi = c * Bc, (c + 1) * Bc
                     seg_c = jax.tree_util.tree_map(
                         lambda x: x[:, lo:hi], segs[si])
-                    h_c, nc_c, sc_c, r = self._segment_step(
+                    h_c, nc_c, sc_c, r, hs_c = self._segment_step(
                         si, _slice_ctx(ctx, lo, hi), params, ths,
                         h[lo:hi], seg_c, decider.slice_carry(sc, lo, hi),
-                        state.active[lo:hi])
+                        state.active[lo:hi], shadow=shadow,
+                        hs=None if hs is None else hs[lo:hi])
                     ran_si = ran_si + r
                     h_parts.append(h_c)
                     nc_parts.append(nc_c)
                     sc_parts.append(sc_c)
+                    if hs_parts is not None:
+                        hs_parts.append(hs_c)
                 h = jnp.concatenate(h_parts, axis=0)
+                if hs_parts is not None:
+                    hs = jnp.concatenate(hs_parts, axis=0)
                 nc = jax.tree_util.tree_map(
                     lambda *xs: jnp.concatenate(xs, axis=1), *nc_parts)
                 sc = decider.concat_carry(sc_parts)
@@ -380,6 +510,7 @@ class StagedExecutor:
             # configs keep a two-way (all-exited vs per-cohort) dispatch.
             spans = [(c * Bc, (c + 1) * Bc) for c in range(C)]
             h_parts = [h[lo:hi] for lo, hi in spans]
+            hs_parts = ([p for p in h_parts] if hs is not None else None)
             sc_parts = [decider.slice_carry(sc, lo, hi) for lo, hi in spans]
             ctx_parts = [_slice_ctx(ctx, lo, hi) for lo, hi in spans]
             act_parts = [state.active[lo:hi] for lo, hi in spans]
@@ -389,65 +520,88 @@ class StagedExecutor:
                 preds = jnp.stack([decider.should_skip(s, a)
                                    for s, a in zip(sc_parts, act_parts)])
 
-                def _all_skip(hp, seg, scp, _si=si):
+                def _all_skip(hp, seg, scp, hsp, _si=si):
                     if self.cfg.cascade.state_backfill:
                         seg = model.backfill_segment(
                             _si, params, jnp.concatenate(hp, axis=0), ctx,
                             seg)
                     return (list(hp), seg, list(scp),
-                            jnp.zeros((), jnp.int32))
+                            jnp.zeros((), jnp.int32), hsp)
 
-                def _mixed(hp, seg, scp, _si=si):
+                def _mixed(hp, seg, scp, hsp, _si=si):
                     view = jax.tree_util.tree_map(
                         lambda x: x.reshape((x.shape[0], C, Bc)
                                             + x.shape[2:]), seg)
                     hp, scp = list(hp), list(scp)
+                    hsp = None if hsp is None else list(hsp)
                     parts = []
                     r = jnp.zeros((), jnp.int32)
                     for c in range(C):
                         seg_c = jax.tree_util.tree_map(
                             lambda x: x[:, c], view)
-                        hp[c], nc_c, scp[c], rc = self._segment_step(
+                        hp[c], nc_c, scp[c], rc, hs_c = self._segment_step(
                             _si, ctx_parts[c], params, ths, hp[c], seg_c,
-                            scp[c], act_parts[c])
+                            scp[c], act_parts[c], shadow=shadow,
+                            hs=None if hsp is None else hsp[c])
+                        if hsp is not None:
+                            hsp[c] = hs_c
                         parts.append(nc_c)
                         r = r + rc
                     nc = jax.tree_util.tree_map(
                         lambda *xs: jnp.concatenate(xs, axis=1), *parts)
-                    return hp, nc, scp, r
+                    return hp, nc, scp, r, hsp
 
-                def _all_run(hp, seg, scp, _si=si):
+                def _all_run(hp, seg, scp, hsp, _si=si):
                     h2, nc, _ = model.run_segment(
                         _si, params, jnp.concatenate(hp, axis=0), ctx, seg)
                     lg = model.exit_logits(params, _si, h2)[:, 0, :]
                     sc2 = decider.scan_logits(
                         _si, n_m, lg, ths, decider.concat_carry(list(scp)))
-                    return ([h2[lo:hi] for lo, hi in spans], nc,
+                    out_parts = [h2[lo:hi] for lo, hi in spans]
+                    return (out_parts, nc,
                             [decider.slice_carry(sc2, lo, hi)
                              for lo, hi in spans],
-                            jnp.asarray(C, jnp.int32))
+                            jnp.asarray(C, jnp.int32),
+                            (None if hsp is None else list(out_parts)))
 
                 if self.mode != "cond_batch":
                     # select: fixed graph — the dry-run / roofline shape
-                    h_parts, nc, sc_parts, r = _mixed(h_parts, segs[si],
-                                                      sc_parts)
+                    h_parts, nc, sc_parts, r, hs_parts = _mixed(
+                        h_parts, segs[si], sc_parts, hs_parts)
                 elif separable:
                     n_skip = jnp.sum(preds.astype(jnp.int32))
                     idx = jnp.where(n_skip == C, 0,
                                     jnp.where(n_skip == 0, 2, 1))
-                    h_parts, nc, sc_parts, r = lax.switch(
+                    if shadow is not False:
+                        # telemetry shadow step: any skipped cohort must
+                        # be OBSERVED, which only the per-cohort dispatch
+                        # does (skip semantics + rider-only observation in
+                        # _segment_step); the none-skipped dense branch
+                        # already observes everything
+                        idx = jnp.where(
+                            jnp.logical_and(shadow, n_skip > 0), 1, idx)
+                    h_parts, nc, sc_parts, r, hs_parts = lax.switch(
                         idx, (_all_skip, _mixed, _all_run), h_parts,
-                        segs[si], sc_parts)
+                        segs[si], sc_parts, hs_parts)
                 else:
-                    h_parts, nc, sc_parts, r = lax.cond(
-                        jnp.all(preds), _all_skip, _mixed, h_parts,
-                        segs[si], sc_parts)
+                    all_skip = jnp.all(preds)
+                    if shadow is not False:
+                        # shadow steps observe skipped cohorts per cohort
+                        all_skip = jnp.logical_and(
+                            all_skip, jnp.logical_not(shadow))
+                    h_parts, nc, sc_parts, r, hs_parts = lax.cond(
+                        all_skip, _all_skip, _mixed, h_parts,
+                        segs[si], sc_parts, hs_parts)
                 new_segs.append(nc)
                 ran.append(r)
             sc = decider.concat_carry(sc_parts)
 
         decision = decider.finish_scan(sc)
         cache = model.commit_decode(cache, new_segs, t)
+        if state.tel is not None:
+            from repro.autotune.telemetry import accumulate_decode
+            state = state.replace(tel=accumulate_decode(
+                state.tel, sc, decision, state.active, shadow))
         state = self._carry_forward(state, decision).replace(
             t=t + 1, segments_run=state.segments_run + jnp.stack(ran))
         return decision, cache, state

@@ -302,27 +302,46 @@ class ThresholdPolicy(ExitPolicy):
         return conf >= jnp.asarray(thresholds[m], conf.dtype)
 
 
+# one-time deprecation notice for the shared-quantile fit
+_SHARED_QUANTILE_WARNED = False
+
+
 @register_policy("budget")
 class BudgetPolicy(ThresholdPolicy):
     """Pick thresholds hitting a target *average* MAC budget per sample.
 
-    Thresholds are parameterized by one exit quantile q shared across
-    components: δ̂_m = quantile(conf_cal[m], q).  Average MACs under the
-    decision scan are monotone non-decreasing in q (q=0 exits everyone at
-    component 0), so a bisection on q lands within tolerance of the budget
-    (clamped to the feasible [mac_prefix[0], mac_prefix[-1]] range).
-    Spec: ``budget@<avg_macs>``.
+    Spec: ``budget@<avg_macs>`` (default) fits PER-COMPONENT thresholds via
+    the ``repro.autotune`` coordinate-descent solver: :meth:`fit` builds the
+    joint confidence histogram from the calibration dump (confidences +
+    correctness) and maximizes accuracy subject to mean MACs <= budget —
+    the search that dominates a shared quantile at equal budget (the
+    shared-quantile solution is one of its starting points).
+
+    ``budget@<avg_macs>:shared`` keeps the legacy parameterization for the
+    ablation: one exit quantile q shared across components,
+    δ̂_m = quantile(conf_cal[m], q), bisected on q until mean MACs lands on
+    the budget.  It is DEPRECATED as a default (a one-time warning fires
+    when it runs): it cannot shift exit mass toward the components that
+    earn it.  The solver path also falls back to it — with the same
+    warning — when :meth:`fit` is called without ``corrects``, since the
+    per-component search needs correctness to rank allocations.
 
     Unlike ThresholdPolicy this policy needs a calibration step: resolve it
     (``get_policy("budget@...")`` or via ``ExitDecider.from_config``), call
-    :meth:`fit` with held-out confidences + the MAC prefix, and only then
-    decide/serve with it.
+    :meth:`fit` with held-out confidences (+ correctness) + the MAC prefix,
+    and only then decide/serve with it.
     """
 
     name = "budget"
 
     def __init__(self, arg: str = ""):
-        self.mac_budget = float(arg) if arg else None
+        spec, _, mode = arg.partition(":")
+        self.mac_budget = float(spec) if spec else None
+        if mode not in ("", "shared", "solver"):
+            raise ValueError(
+                f"budget policy mode must be 'shared' or 'solver', "
+                f"got {mode!r}")
+        self.mode = mode or "solver"
         self.thresholds: Optional[Tuple[float, ...]] = None
 
     def resolve_thresholds(self, thresholds, explicit: bool = False):
@@ -342,17 +361,22 @@ class BudgetPolicy(ThresholdPolicy):
                 "fit — fitting needs held-out confidences)")
         return self.thresholds
 
-    def fit(self, confidences: Sequence[np.ndarray],
-            mac_prefix: Sequence[float],
-            mac_budget: Optional[float] = None,
-            iters: int = 40) -> Tuple[float, ...]:
-        """Calibrate thresholds so mean MACs ≈ mac_budget on ``confidences``."""
-        budget = self.mac_budget if mac_budget is None else mac_budget
-        if budget is None:
-            raise ValueError("no MAC budget given (budget@<float> or fit())")
-        conf = np.stack([np.asarray(c, np.float64) for c in confidences])
-        macs = np.asarray(mac_prefix, np.float64)
-        budget = float(np.clip(budget, macs[0], macs[-1]))
+    @staticmethod
+    def _warn_shared():
+        global _SHARED_QUANTILE_WARNED
+        if _SHARED_QUANTILE_WARNED:
+            return
+        _SHARED_QUANTILE_WARNED = True
+        warnings.warn(
+            "BudgetPolicy's shared-quantile fit is deprecated: the "
+            "per-component solver (repro.autotune.solver.solve_budget) "
+            "dominates it at equal budget.  Pass corrects= to fit() to "
+            "use it, or spell budget@<macs>:shared to keep the legacy "
+            "ablation behavior explicitly.",
+            DeprecationWarning, stacklevel=4)
+
+    def _fit_shared(self, conf, macs, budget, iters):
+        """Legacy shared-quantile bisection (the ``:shared`` ablation)."""
 
         def avg_macs(q):
             ths = np.quantile(conf, q, axis=1)
@@ -373,8 +397,43 @@ class BudgetPolicy(ThresholdPolicy):
                 hi = mid
             else:
                 lo = mid
-        self.thresholds = best[1]
-        self.fitted_avg_macs = best[0]
+        return best[1], best[0]
+
+    def fit(self, confidences: Sequence[np.ndarray],
+            mac_prefix: Sequence[float],
+            mac_budget: Optional[float] = None,
+            corrects: Optional[Sequence[np.ndarray]] = None,
+            iters: int = 40, bins: int = 64) -> Tuple[float, ...]:
+        """Calibrate thresholds so mean MACs <= mac_budget on
+        ``confidences``.  With ``corrects`` (per-component correctness
+        arrays) the per-component solver allocates the budget; without, or
+        under ``:shared``, the legacy shared quantile runs (deprecated)."""
+        budget = self.mac_budget if mac_budget is None else mac_budget
+        if budget is None:
+            raise ValueError("no MAC budget given (budget@<float> or fit())")
+        conf = np.stack([np.asarray(c, np.float64) for c in confidences])
+        macs = np.asarray(mac_prefix, np.float64)
+        budget = float(np.clip(budget, macs[0], macs[-1]))
+
+        if self.mode == "shared" or corrects is None:
+            self._warn_shared()
+            self.thresholds, self.fitted_avg_macs = self._fit_shared(
+                conf, macs, budget, iters)
+            return self.thresholds
+
+        from repro.autotune.solver import (ExitHistogram,
+                                           edges_from_thresholds,
+                                           solve_budget)
+        corr = np.stack([np.asarray(c, np.float64) for c in corrects])
+        hist = ExitHistogram.from_samples(conf, corr, macs, bins)
+        # seed with the (quantized) shared-quantile solution: coordinate
+        # moves only improve, so the solver provably fits no worse
+        shared_ths, _ = self._fit_shared(conf, macs, budget, iters)
+        res = solve_budget(hist, budget,
+                           init_edges=edges_from_thresholds(shared_ths,
+                                                            bins))
+        self.thresholds = res.thresholds
+        self.fitted_avg_macs = res.avg_macs
         return self.thresholds
 
 
@@ -383,21 +442,35 @@ class BudgetPolicy(ThresholdPolicy):
 # ---------------------------------------------------------------------------
 
 class Calibrator:
-    """Per-component confidences + correctness → δ̂(ε) thresholds."""
+    """Per-component confidences + correctness → δ̂(ε) thresholds.
+
+    ``val_confidences`` / ``val_corrects`` (optional, per-component arrays
+    like the calibration set) are the paper's validation-set remark: when
+    given, α*_m (and the target) still come from the calibration arrays,
+    but each threshold is *selected* on the validation accuracy curve.
+    """
 
     name = "base"
 
     def calibrate(self, confidences: Sequence[np.ndarray],
                   corrects: Sequence[np.ndarray],
-                  epsilon: float) -> CalibrationResult:
+                  epsilon: float,
+                  val_confidences: Optional[Sequence[np.ndarray]] = None,
+                  val_corrects: Optional[Sequence[np.ndarray]] = None
+                  ) -> CalibrationResult:
         raise NotImplementedError
 
-    def _run(self, confidences, corrects, epsilon, target):
+    def _run(self, confidences, corrects, epsilon, target,
+             val_confidences=None, val_corrects=None):
         n_m = len(confidences)
         ths, stars = [], []
         for m in range(n_m):
-            t, a = threshold_for_epsilon(confidences[m], corrects[m],
-                                         epsilon, target=target)
+            t, a = threshold_for_epsilon(
+                confidences[m], corrects[m], epsilon, target=target,
+                val_conf=(None if val_confidences is None
+                          else val_confidences[m]),
+                val_correct=(None if val_corrects is None
+                             else val_corrects[m]))
             ths.append(0.0 if m == n_m - 1 else t)
             stars.append(a)
         return CalibrationResult(tuple(ths), tuple(stars), epsilon)
@@ -417,8 +490,11 @@ class SelfCalibrator(Calibrator):
     def __init__(self, arg: str = ""):
         del arg
 
-    def calibrate(self, confidences, corrects, epsilon):
-        return self._run(confidences, corrects, epsilon, target=None)
+    def calibrate(self, confidences, corrects, epsilon,
+                  val_confidences=None, val_corrects=None):
+        return self._run(confidences, corrects, epsilon, target=None,
+                         val_confidences=val_confidences,
+                         val_corrects=val_corrects)
 
 
 @register_calibrator("final")
@@ -434,9 +510,64 @@ class FinalCalibrator(Calibrator):
     def __init__(self, arg: str = ""):
         del arg
 
-    def calibrate(self, confidences, corrects, epsilon):
+    def calibrate(self, confidences, corrects, epsilon,
+                  val_confidences=None, val_corrects=None):
         alpha_final = float(np.mean(corrects[-1]))
-        return self._run(confidences, corrects, epsilon, target=alpha_final)
+        return self._run(confidences, corrects, epsilon, target=alpha_final,
+                         val_confidences=val_confidences,
+                         val_corrects=val_corrects)
+
+
+@register_calibrator("holdout")
+class HoldoutCalibrator(Calibrator):
+    """§5 with the validation split the module docstring promises: α*_m is
+    estimated on a statistics split, the threshold is then the smallest δ
+    whose accuracy on a DISJOINT validation split clears α*_m − ε — so the
+    same samples never both set the bar and certify a threshold against it.
+
+    Spec: ``holdout`` (validation fraction 0.5), ``holdout@0.3`` (fraction),
+    ``holdout@0.3:final`` (cascade-level target like FinalCalibrator).
+    When the caller already has a separate validation set, pass it via
+    ``val_confidences`` / ``val_corrects`` and no internal split happens.
+    The internal split is deterministic and interleaved (every k-th sample
+    goes to validation), so ordered calibration dumps split evenly.
+    """
+
+    name = "holdout"
+
+    def __init__(self, arg: str = ""):
+        frac, _, target = arg.partition(":")
+        self.val_frac = float(frac) if frac else 0.5
+        if not 0.0 < self.val_frac < 1.0:
+            raise ValueError(
+                f"holdout fraction must be in (0, 1), got {self.val_frac}")
+        if target not in ("", "self", "final"):
+            raise ValueError(f"holdout target must be 'self' or 'final', "
+                             f"got {target!r}")
+        self.target_mode = target or "self"
+
+    def _split(self, arrays):
+        stats, vals = [], []
+        for a in arrays:
+            a = np.asarray(a)
+            n = len(a)
+            n_val = max(1, min(n - 1, int(round(n * self.val_frac))))
+            idx = np.zeros(n, bool)
+            idx[np.round(np.linspace(0, n - 1, n_val)).astype(int)] = True
+            stats.append(a[~idx])
+            vals.append(a[idx])
+        return stats, vals
+
+    def calibrate(self, confidences, corrects, epsilon,
+                  val_confidences=None, val_corrects=None):
+        if val_confidences is None:
+            confidences, val_confidences = self._split(confidences)
+            corrects, val_corrects = self._split(corrects)
+        target = (float(np.mean(corrects[-1]))
+                  if self.target_mode == "final" else None)
+        return self._run(confidences, corrects, epsilon, target=target,
+                         val_confidences=val_confidences,
+                         val_corrects=val_corrects)
 
 
 # ---------------------------------------------------------------------------
@@ -494,7 +625,8 @@ class ExitDecider:
     def __init__(self, measure, policy="threshold",
                  thresholds: Optional[Sequence[float]] = None,
                  use_kernels: bool = False,
-                 kernel_interpret: Optional[bool] = None):
+                 kernel_interpret: Optional[bool] = None,
+                 telemetry_bins: int = 0):
         self.measure = (get_measure(measure) if isinstance(measure, str)
                         else measure)
         self.policy = (get_policy(policy) if isinstance(policy, str)
@@ -502,6 +634,12 @@ class ExitDecider:
         self.thresholds = tuple(thresholds) if thresholds is not None else None
         self.use_kernels = use_kernels
         self.kernel_interpret = kernel_interpret
+        # > 0 enables the autotune telemetry rider: every scan additionally
+        # records each component's raw confidence bin / raw prediction /
+        # reached-mask in the carry (repro.autotune.telemetry consumes it).
+        # 0 keeps the carry — and thus every decode graph — byte-identical
+        # to the pre-autotune program.
+        self.telemetry_bins = int(telemetry_bins)
 
     @classmethod
     def from_config(cls, cfg) -> "ExitDecider":
@@ -509,7 +647,9 @@ class ExitDecider:
         cas = cfg.cascade
         return cls(measure=cas.confidence, policy=cas.policy,
                    thresholds=cas.thresholds, use_kernels=cfg.use_kernels,
-                   kernel_interpret=cfg.kernel_interpret)
+                   kernel_interpret=cfg.kernel_interpret,
+                   telemetry_bins=(cfg.autotune.bins
+                                   if cfg.autotune.enabled else 0))
 
     @property
     def fused_scan(self) -> bool:
@@ -540,16 +680,30 @@ class ExitDecider:
     def resolved_thresholds(self, n_components: int,
                             thresholds: Optional[Sequence[float]] = None
                             ) -> Tuple[float, ...]:
-        """The static threshold vector the decision scan gates on: per-call
+        """The threshold vector the decision scan gates on: per-call
         ``thresholds`` (explicit override) > policy-owned fitted vector
-        (BudgetPolicy) > the decider's configured vector."""
+        (BudgetPolicy) > the decider's configured vector.
+
+        Normally a tuple of static floats (folded into the trace).  A jax
+        array — the autotune live-threshold path, where thresholds are
+        DATA carried in the DecodeState so a controller push never
+        retraces — passes through as-is after a length check.
+        """
+        explicit = thresholds is not None
+        if explicit and not isinstance(thresholds, jax.Array):
+            thresholds = tuple(thresholds)
         ths = self.policy.resolve_thresholds(
-            self.thresholds if thresholds is None else tuple(thresholds),
-            explicit=thresholds is not None)
+            self.thresholds if thresholds is None else thresholds,
+            explicit=explicit)
         if ths is None:
             raise ValueError(
                 "no thresholds: configure them on the decider/config or "
                 "pass them per call")
+        if isinstance(ths, jax.Array):
+            if ths.shape[0] != n_components:
+                raise ValueError(f"{ths.shape[0]} thresholds for "
+                                 f"{n_components} cascade components")
+            return ths
         ths = tuple(float(t) for t in ths)
         if len(ths) != n_components:
             raise ValueError(f"{len(ths)} thresholds for {n_components} "
@@ -592,7 +746,7 @@ class ExitDecider:
         if self.measure.stateful:
             streak = (state if state is not None else jnp.zeros(
                 (n_components,) + confidence.shape, jnp.int32))
-        return {
+        carry = {
             "answered": jnp.zeros(confidence.shape, bool),
             "pred": jnp.zeros_like(prediction),
             "exit": jnp.zeros(confidence.shape, jnp.int32),
@@ -601,6 +755,16 @@ class ExitDecider:
             "ema": None,
             "act": None,
         }
+        if self.telemetry_bins:
+            # autotune telemetry rider: one packed
+            # prediction/confidence-bin code row per component
+            # (repro.autotune.telemetry.pack_rider).  Rows of skipped
+            # segments stay zeroed (the accumulator masks them out via
+            # the decision's exit index).  Riders never influence the
+            # decision — only repro.autotune.telemetry reads them.
+            carry["tcode"] = jnp.zeros(
+                (n_components,) + confidence.shape, jnp.int32)
+        return carry
 
     def scan_component(self, m: int, n_components: int,
                        prediction: jnp.ndarray, confidence: jnp.ndarray,
@@ -632,7 +796,7 @@ class ExitDecider:
             if m == n_components - 1:
                 gate = jnp.ones_like(gate)
         fresh = jnp.logical_and(gate, jnp.logical_not(carry["answered"]))
-        return {
+        out = {
             "answered": jnp.logical_or(carry["answered"], gate),
             "pred": jnp.where(fresh, prediction, carry["pred"]),
             "exit": jnp.where(fresh, jnp.int32(m), carry["exit"]),
@@ -641,6 +805,11 @@ class ExitDecider:
             "ema": carry.get("ema"),
             "act": carry.get("act"),
         }
+        if carry.get("tcode") is not None:
+            from repro.autotune.telemetry import pack_rider
+            out["tcode"] = carry["tcode"].at[m].set(
+                pack_rider(prediction, confidence, self.telemetry_bins))
+        return out
 
     def fold_ema(self, carry, decay: float):
         """Fold the final decision confidence into the carry's "ema" rider
@@ -692,37 +861,53 @@ class ExitDecider:
         ema = carry["ema"] if has_ema else jnp.zeros((B,), jnp.float32)
         act = (carry["act"] if carry.get("act") is not None
                else jnp.ones((B,), bool))
-        ans, pred, exi, conf, srow_n, ema_n = exit_update_fused(
+        # thresholds[m] is a static float (folded into the kernel body) or,
+        # on the autotune live-threshold path, a traced scalar the kernel
+        # reads as an operand — the wrapper picks the variant
+        th_m = (thresholds[m] if isinstance(thresholds, jax.Array)
+                else float(thresholds[m]))
+        outs = exit_update_fused(
             logits, carry["answered"], carry["pred"], carry["exit"],
             carry["conf"], srow, ema, act,
-            threshold=float(thresholds[m]), m=m, n_components=n_components,
+            threshold=th_m, m=m, n_components=n_components,
             patience_k=(self.measure.patience_k if self.measure.stateful
                         else 0),
             ema_decay=(float(ema_decay) if has_ema else 0.0),
+            tel_bins=self.telemetry_bins,
             interpret=self.kernel_interpret)
-        return {"answered": ans, "pred": pred, "exit": exi, "conf": conf,
-                "streak": (streak.at[m].set(srow_n) if streak is not None
-                           else None),
-                "ema": ema_n if has_ema else None,
-                "act": carry.get("act")}
+        ans, pred, exi, conf, srow_n, ema_n = outs[:6]
+        new = {"answered": ans, "pred": pred, "exit": exi, "conf": conf,
+               "streak": (streak.at[m].set(srow_n) if streak is not None
+                          else None),
+               "ema": ema_n if has_ema else None,
+               "act": carry.get("act")}
+        if carry.get("tcode") is not None:
+            new["tcode"] = carry["tcode"].at[m].set(outs[6])
+        return new
+
+    # carry keys laid out (n_components, batch, ...): slice/concat axis 1
+    _COMPONENT_MAJOR_KEYS = frozenset(("streak", "tcode"))
 
     def slice_carry(self, carry, lo: int, hi: int):
         """Batch-slice a decision-scan carry (cohort-split execution).
 
         Lives here, next to the carry layout :meth:`scan_component`
         defines: per-sample leaves are batch-leading; the stateful-measure
-        ``streak`` follows the :meth:`ConfidenceMeasure.init_state`
-        contract ``(n_exits, batch, ...)`` and slices axis 1.
+        ``streak`` and the telemetry rider rows follow the
+        :meth:`ConfidenceMeasure.init_state` contract
+        ``(n_exits, batch, ...)`` and slice axis 1.
         """
         return {k: (v if v is None
-                    else (v[:, lo:hi] if k == "streak" else v[lo:hi]))
+                    else (v[:, lo:hi] if k in self._COMPONENT_MAJOR_KEYS
+                          else v[lo:hi]))
                 for k, v in carry.items()}
 
     def concat_carry(self, parts):
         """Inverse of :meth:`slice_carry`: rejoin per-cohort carries."""
         return {k: (None if parts[0][k] is None
-                    else jnp.concatenate([p[k] for p in parts],
-                                         axis=1 if k == "streak" else 0))
+                    else jnp.concatenate(
+                        [p[k] for p in parts],
+                        axis=1 if k in self._COMPONENT_MAJOR_KEYS else 0))
                 for k in parts[0]}
 
     def should_skip(self, carry, active=None) -> jnp.ndarray:
@@ -737,6 +922,35 @@ class ExitDecider:
     def finish_scan(self, carry) -> ExitDecision:
         return ExitDecision(carry["pred"], carry["exit"], carry["conf"],
                             carry["streak"])
+
+    def decide_with_carry(self, logits_list: Sequence[jnp.ndarray],
+                          thresholds: Optional[Sequence[float]] = None,
+                          state=None, batch_uniform: bool = False,
+                          active=None):
+        """:meth:`decide`, additionally returning the finished scan carry
+        (the telemetry rider's home — ``StagedExecutor.prefill`` reads the
+        raw per-component rows out of it)."""
+        n_m = len(logits_list)
+        ths = self.resolved_thresholds(n_m, thresholds)
+        carry = None
+        for m, lg in enumerate(logits_list):
+            new = self.scan_logits(m, n_m, lg, ths, carry, state=state,
+                                   batch_uniform=batch_uniform)
+            if carry is None:
+                carry = new
+            else:
+                skip = self.should_skip(carry, active)
+                # decision/state leaves take the skip-masked update (the
+                # identity with staged cond_batch execution); telemetry
+                # rider rows always land — the logits were computed here
+                # regardless, and riders never feed back into decisions
+                carry = {
+                    k: (v if v is None or k in self._COMPONENT_TEL_KEYS
+                        else jnp.where(skip, carry[k], v))
+                    for k, v in new.items()}
+        return self.finish_scan(carry), carry
+
+    _COMPONENT_TEL_KEYS = frozenset(("tcode",))
 
     def decide(self, logits_list: Sequence[jnp.ndarray],
                thresholds: Optional[Sequence[float]] = None,
@@ -754,19 +968,9 @@ class ExitDecider:
         contribute no state updates here either — their streak rows stay
         put — so this fixed-graph path matches ``cond_batch`` exactly.
         """
-        n_m = len(logits_list)
-        ths = self.resolved_thresholds(n_m, thresholds)
-        carry = None
-        for m, lg in enumerate(logits_list):
-            new = self.scan_logits(m, n_m, lg, ths, carry, state=state,
-                                   batch_uniform=batch_uniform)
-            if carry is None:
-                carry = new
-            else:
-                skip = self.should_skip(carry, active)
-                carry = jax.tree_util.tree_map(
-                    lambda a, b: jnp.where(skip, a, b), carry, new)
-        return self.finish_scan(carry)
+        return self.decide_with_carry(logits_list, thresholds, state=state,
+                                      batch_uniform=batch_uniform,
+                                      active=active)[0]
 
     # -- precomputed-confidence path (evaluation sweep) ------------------
     def exit_indices(self, confidences: Sequence[np.ndarray],

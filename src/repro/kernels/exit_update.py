@@ -46,11 +46,17 @@ from repro.kernels.backend import resolve_interpret
 NEG = -1e30
 
 
-def _exit_update_kernel(x_ref, ans_ref, pred_ref, exit_ref, conf_ref,
-                        streak_ref, ema_ref, act_ref,
-                        ans_o, pred_o, exit_o, conf_o, streak_o, ema_o,
-                        m_s, l_s, a_s, *, n_vtiles, vt, threshold, m,
-                        n_components, patience_k, ema_decay):
+def _exit_update_kernel(*refs, n_vtiles, vt, threshold, m, n_components,
+                        patience_k, ema_decay, dynamic, tel_bins):
+    # ref layout: [th_ref?] x ans pred exit conf streak ema act |
+    #             ans pred exit conf streak ema [tel_code]? | scratch×3
+    refs = list(refs)
+    th_ref = refs.pop(0) if dynamic else None
+    (x_ref, ans_ref, pred_ref, exit_ref, conf_ref, streak_ref, ema_ref,
+     act_ref) = refs[:8]
+    outs = refs[8:-3]
+    ans_o, pred_o, exit_o, conf_o, streak_o, ema_o = outs[:6]
+    m_s, l_s, a_s = refs[-3:]
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -77,10 +83,11 @@ def _exit_update_kernel(x_ref, ans_ref, pred_ref, exit_ref, conf_ref,
         # the final component's gate is open BEFORE the patience rewrite
         # (its streak row always advances), exactly like the dense
         # ThresholdPolicy.component_gate + scan_component order
+        thr = th_ref[0] if dynamic else threshold
         if last:
             gate = jnp.ones_like(conf, bool)
         else:
-            gate = conf >= threshold
+            gate = conf >= thr
         if patience_k > 0:                          # patience@k rewrite
             row = jnp.where(gate, streak_ref[...] + 1, 0)
             streak_o[...] = row
@@ -103,36 +110,61 @@ def _exit_update_kernel(x_ref, ans_ref, pred_ref, exit_ref, conf_ref,
                 ema_ref[...])
         else:
             ema_o[...] = ema_ref[...]
+        if tel_bins:
+            # autotune telemetry rides the same streaming pass: the ONE
+            # packed prediction/confidence-bin code, O(Bt) extra work at
+            # the last vocab tile.  pack_rider is pure jnp, so calling it
+            # here keeps the kernel bit-locked to the dense path by
+            # construction, not by comment.
+            from repro.autotune.telemetry import pack_rider
+            code_o = outs[6]
+            code_o[...] = pack_rider(pred, conf, tel_bins)
 
 
 def exit_update(logits, answered, pred, exit_idx, conf, streak, ema, active,
-                *, threshold: float, m: int, n_components: int,
-                patience_k: int = 0, ema_decay: float = 0.0, bt: int = 8,
-                vt: int = 2048, interpret: "bool | None" = None):
+                *, threshold, m: int, n_components: int,
+                patience_k: int = 0, ema_decay: float = 0.0,
+                tel_bins: int = 0, bt: int = 8, vt: int = 2048,
+                interpret: "bool | None" = None):
     """One fused component step of the exit-decision scan.
 
     logits (B, V); answered/active (B,) bool; pred/exit_idx/streak (B,)
-    int32; conf/ema (B,) f32.  Static: ``threshold`` δ̂_m, component ``m``
-    of ``n_components``, ``patience_k`` (0 = stateless measure),
-    ``ema_decay`` (0 = no EMA fold; pass the final component's decay).
+    int32; conf/ema (B,) f32.  Static: component ``m`` of
+    ``n_components``, ``patience_k`` (0 = stateless measure), ``ema_decay``
+    (0 = no EMA fold; pass the final component's decay), ``tel_bins``
+    (> 0 additionally returns autotune telemetry computed in the same
+    streaming pass).  ``threshold`` δ̂_m is a float (folded into the
+    kernel body — the default) or a jax scalar (read as a kernel operand:
+    the autotune live-threshold path, where a controller pushes new
+    thresholds without retracing).
 
     Returns (answered', pred', exit', conf', streak', ema') with exactly
     :meth:`repro.core.policy.ExitDecider.scan_component` semantics (plus
-    the :class:`~repro.core.exec.DecodeState` EMA fold when asked).
+    the :class:`~repro.core.exec.DecodeState` EMA fold when asked); with
+    ``tel_bins`` one extra (B,) int32 output follows: the packed
+    telemetry code ``raw_pred * tel_bins + conf_bin``.
     """
-    return _exit_update(logits, answered, pred, exit_idx, conf, streak,
-                        ema, active, threshold=threshold, m=m,
-                        n_components=n_components, patience_k=patience_k,
-                        ema_decay=ema_decay, bt=bt, vt=vt,
+    dynamic = isinstance(threshold, jax.Array)
+    if dynamic:
+        th_arr = jnp.asarray(threshold, jnp.float32).reshape(1)
+        th_static = 0.0
+    else:
+        th_arr = jnp.zeros((1,), jnp.float32)
+        th_static = float(threshold)
+    return _exit_update(th_arr, logits, answered, pred, exit_idx, conf,
+                        streak, ema, active, threshold=th_static,
+                        dynamic=dynamic, m=m, n_components=n_components,
+                        patience_k=patience_k, ema_decay=ema_decay,
+                        tel_bins=int(tel_bins), bt=bt, vt=vt,
                         interpret=resolve_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "threshold", "m", "n_components", "patience_k", "ema_decay", "bt", "vt",
-    "interpret"))
-def _exit_update(logits, answered, pred, exit_idx, conf, streak, ema, active,
-                 *, threshold, m, n_components, patience_k, ema_decay, bt,
-                 vt, interpret):
+    "threshold", "dynamic", "m", "n_components", "patience_k", "ema_decay",
+    "tel_bins", "bt", "vt", "interpret"))
+def _exit_update(th_arr, logits, answered, pred, exit_idx, conf, streak,
+                 ema, active, *, threshold, dynamic, m, n_components,
+                 patience_k, ema_decay, tel_bins, bt, vt, interpret):
     B, V = logits.shape
     bt = min(bt, B)
     vt = min(vt, V)
@@ -154,25 +186,34 @@ def _exit_update(logits, answered, pred, exit_idx, conf, streak, ema, active,
     n_vtiles = Vp // vt
     kernel = functools.partial(
         _exit_update_kernel, n_vtiles=n_vtiles, vt=vt,
-        threshold=float(threshold), m=int(m),
+        threshold=threshold, m=int(m),
         n_components=int(n_components), patience_k=int(patience_k),
-        ema_decay=float(ema_decay))
+        ema_decay=float(ema_decay), dynamic=dynamic, tel_bins=tel_bins)
     vec_spec = pl.BlockSpec((bt,), lambda i, j: (i,))
+    in_specs = ([pl.BlockSpec((1,), lambda i, j: (0,))] if dynamic else [])
+    in_specs += [pl.BlockSpec((bt, vt), lambda i, j: (i, j))]
+    in_specs += [vec_spec] * 7
+    out_specs = [vec_spec] * (7 if tel_bins else 6)
+    out_shape = [jax.ShapeDtypeStruct((Bp,), jnp.int32),
+                 jax.ShapeDtypeStruct((Bp,), jnp.int32),
+                 jax.ShapeDtypeStruct((Bp,), jnp.int32),
+                 jax.ShapeDtypeStruct((Bp,), jnp.float32),
+                 jax.ShapeDtypeStruct((Bp,), jnp.int32),
+                 jax.ShapeDtypeStruct((Bp,), jnp.float32)]
+    if tel_bins:
+        out_shape += [jax.ShapeDtypeStruct((Bp,), jnp.int32)]
+    args = ([th_arr] if dynamic else []) + [x] + vecs
     outs = pl.pallas_call(
         kernel,
         grid=(Bp // bt, n_vtiles),
-        in_specs=[pl.BlockSpec((bt, vt), lambda i, j: (i, j))] + [vec_spec] * 7,
-        out_specs=[vec_spec] * 6,
-        out_shape=[jax.ShapeDtypeStruct((Bp,), jnp.int32),
-                   jax.ShapeDtypeStruct((Bp,), jnp.int32),
-                   jax.ShapeDtypeStruct((Bp,), jnp.int32),
-                   jax.ShapeDtypeStruct((Bp,), jnp.float32),
-                   jax.ShapeDtypeStruct((Bp,), jnp.int32),
-                   jax.ShapeDtypeStruct((Bp,), jnp.float32)],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bt,), jnp.float32),
                         pltpu.VMEM((bt,), jnp.float32),
                         pltpu.VMEM((bt,), jnp.int32)],
         interpret=interpret,
-    )(x, *vecs)
-    ans_n, pred_n, exit_n, conf_n, streak_n, ema_n = [o[:B] for o in outs]
-    return (ans_n.astype(bool), pred_n, exit_n, conf_n, streak_n, ema_n)
+    )(*args)
+    outs = [o[:B] for o in outs]
+    outs[0] = outs[0].astype(bool)
+    return tuple(outs)

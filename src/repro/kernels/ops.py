@@ -74,15 +74,19 @@ def decode_attention_cache(q, k_cache, v_cache, t, kpos, *, window=0,
 
 def exit_update_fused(logits, answered, pred, exit_idx, conf, streak, ema,
                       active, *, threshold, m, n_components, patience_k=0,
-                      ema_decay=0.0, interpret=None):
+                      ema_decay=0.0, tel_bins=0, interpret=None):
     """One fused component step of the exit-decision scan (see
     :mod:`repro.kernels.exit_update`): softmax-max confidence + threshold
     gate + patience streak + carry merge + optional DecodeState EMA fold,
     without materializing the softmax.  logits (B, V); all carry vectors
-    (B,).  Static ``threshold``/``m``/``n_components``/``patience_k``/
-    ``ema_decay`` fold into the kernel body."""
+    (B,).  Static ``m``/``n_components``/``patience_k``/``ema_decay``
+    fold into the kernel body; ``threshold`` folds too when a float, or
+    rides as an operand when a jax scalar (autotune live thresholds — a
+    push never retraces).  ``tel_bins > 0`` appends the packed telemetry
+    code (raw_pred * bins + conf_bin) computed in the same streaming
+    pass."""
     return _exit_update(logits, answered, pred, exit_idx, conf, streak, ema,
                         active, threshold=threshold, m=m,
                         n_components=n_components, patience_k=patience_k,
-                        ema_decay=ema_decay,
+                        ema_decay=ema_decay, tel_bins=tel_bins,
                         interpret=resolve_interpret(interpret))

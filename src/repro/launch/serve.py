@@ -43,6 +43,26 @@ def main():
     ap.add_argument("--lanes", type=int, default=2)
     ap.add_argument("--lane-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--autotune", action="store_true",
+                    help="enable online exit telemetry + a "
+                         "ThresholdController that periodically re-solves "
+                         "thresholds from live traffic and pushes them "
+                         "into the engine without retracing "
+                         "(repro.autotune)")
+    ap.add_argument("--epsilon", type=float, default=0.05,
+                    help="autotune target accuracy degradation ε: the "
+                         "solver picks per-component thresholds whose "
+                         "cascade agreement with the full-depth model "
+                         "stays within ε (ignored when --budget-macs "
+                         "is set)")
+    ap.add_argument("--budget-macs", type=float, default=0.0,
+                    help="autotune target average MACs/token: the solver "
+                         "maximizes accuracy subject to this budget "
+                         "(> 0 overrides --epsilon as the direction)")
+    ap.add_argument("--artifacts", default=None,
+                    help="autotune artifact directory: warm-start "
+                         "thresholds from a matching config-hash-keyed "
+                         "artifact and persist new resolutions there")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -54,14 +74,25 @@ def main():
                            n_cohorts=args.cohorts)
     if args.confidence:
         cfg = cfg.with_cascade(confidence=args.confidence)
+    if args.autotune:
+        cfg = cfg.with_autotune(enabled=True, epsilon=args.epsilon,
+                                mac_budget=args.budget_macs)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    controller = None
+    if args.autotune:
+        from repro.autotune import ThresholdController
+        from repro.core.macs import segment_macs_per_token
+        controller = ThresholdController(
+            cfg, segment_macs_per_token(cfg, args.cache_len),
+            artifact_dir=args.artifacts)
     engine = CascadeServingEngine(cfg, model, params,
                                   lane_batch=args.lane_batch,
                                   n_lanes=args.lanes,
                                   cache_len=args.cache_len,
                                   runtime=args.runtime,
-                                  chunk=args.chunk)
+                                  chunk=args.chunk,
+                                  autotune=controller)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(Request(
@@ -72,6 +103,9 @@ def main():
     engine.run()
     stats = engine.stats()
     log.info("stats: %s", json.dumps(stats, indent=2))
+    if args.autotune:
+        log.info("autotune: live thresholds %s, controller %s",
+                 engine.current_thresholds(), engine.controller.stats())
     if args.exit_mode == "cond_batch":
         log.info("real skip rate %.3f (opportunity %.3f), %.1f us/token "
                  "(%s runtime, compile %.2fs)",

@@ -185,8 +185,13 @@ def decode_state_spec(state, cfg, mesh, batch: int):
     Per-sequence leaves (``active``, ``ema_conf``: (B,), and the stateful
     measure carry ``policy``: (n_components, B)) shard their batch dim over
     (pod, data) exactly like the token batch; the scalar cursor ``t`` and
-    the per-segment counters ``segments_run`` replicate.  Divisibility
-    degrades to replication, mirroring every other rule here.
+    the per-segment counters ``segments_run`` replicate.  The autotune
+    riders — the live ``thresholds`` vector and every batch-free
+    :class:`~repro.autotune.telemetry.ExitTelemetry` counter (histograms,
+    exit/MAC/step counters) — replicate too: they are global accumulators,
+    and GSPMD folds the batch-sharded scatter-adds into them with the
+    appropriate reductions.  Divisibility degrades to replication,
+    mirroring every other rule here.
     """
     dp = batch_axes(mesh)
     dp_ax = dp if divisible(batch, axis_size(mesh, dp)) else None
@@ -205,6 +210,7 @@ def decode_state_spec(state, cfg, mesh, batch: int):
             return _spec(ndim, **{"0": dp_ax})
         if name == "policy":          # (n_components, B, ...)
             return _spec(ndim, **{"1": dp_ax})
+        # "thresholds" and the telemetry counters fall through: replicated
         return P()
     return jax.tree_util.tree_map_with_path(rule, state)
 

@@ -162,10 +162,20 @@ def make_decode_loop_step(model: CascadeModel, cfg: ModelConfig,
     return loop_step
 
 
-def make_decode_state(cfg: ModelConfig, batch: int, t: int = 0) -> DecodeState:
-    """A fresh DecodeState for ``batch`` lanes of this config."""
+def make_decode_state(cfg: ModelConfig, batch: int, t: int = 0,
+                      mac_weights=None) -> DecodeState:
+    """A fresh DecodeState for ``batch`` lanes of this config.  With
+    ``cfg.autotune.enabled`` the state carries zeroed exit-telemetry
+    counters and the config's thresholds as a live vector (see
+    :mod:`repro.autotune`)."""
+    telemetry = thresholds = None
+    if cfg.autotune.enabled:
+        from repro.autotune.telemetry import telemetry_for
+        telemetry = telemetry_for(cfg, mac_weights)
+        thresholds = cfg.cascade.thresholds
     return init_decode_state(ExitDecider.from_config(cfg), batch,
-                             cfg.cascade.n_components, t=t)
+                             cfg.cascade.n_components, t=t,
+                             telemetry=telemetry, thresholds=thresholds)
 
 
 def make_decode_state_struct(cfg: ModelConfig, batch: int):

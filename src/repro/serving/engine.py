@@ -86,7 +86,7 @@ class CascadeServingEngine:
     def __init__(self, cfg: ModelConfig, model: CascadeModel, params,
                  lane_batch: int = 4, n_lanes: int = 2,
                  cache_len: int = 256, runtime: str = "host",
-                 chunk: int = 8, mesh=None):
+                 chunk: int = 8, mesh=None, autotune=None):
         if runtime not in ("host", "device"):
             raise ValueError(
                 f"runtime must be 'host' or 'device', got {runtime!r}")
@@ -96,6 +96,12 @@ class CascadeServingEngine:
                 "the host per-token step runs unsharded — pass "
                 "runtime='device' (or drop mesh=) rather than silently "
                 "serving single-device")
+        if autotune is not None and autotune is not False \
+                and not cfg.autotune.enabled:
+            raise ValueError(
+                "autotune= needs telemetry in the decode graphs: build the "
+                "model/engine with cfg.with_autotune(enabled=True) (plus "
+                "epsilon= or mac_budget=) before passing a controller")
         self.cfg = cfg
         self.model = model
         self.params = params
@@ -118,16 +124,30 @@ class CascadeServingEngine:
         self.compactor = DepthCompactor(n_lanes, cfg.cascade.n_components)
         self.executor = StagedExecutor(model, cfg)
         self.decider = self.executor.decider
+        self.mac_prefix = segment_macs_per_token(cfg, cache_len)
         self.lanes = []
         for _ in range(n_lanes):
             self.lanes.append({
                 "cache": model.init_cache(lane_batch, cache_len),
                 "slots": [_Slot() for _ in range(lane_batch)],
-                "state": self.executor.init_state(lane_batch),
+                "state": self.executor.init_state(
+                    lane_batch, mac_weights=self.mac_prefix),
             })
         self.queue: List[Request] = []
         self.finished: Dict[int, dict] = {}
-        self.mac_prefix = segment_macs_per_token(cfg, cache_len)
+        # live thresholds (autotune): engine-wide vector pushed into every
+        # lane's DecodeState as plain data — None until a controller (or a
+        # caller) pushes one, in which case the config's static vector is
+        # what the carried state was seeded with anyway
+        self._live_thresholds = (tuple(cfg.cascade.thresholds)
+                                 if cfg.autotune.enabled else None)
+        # a ThresholdController (or True → build one from cfg.autotune)
+        self.controller = None
+        if autotune is True:
+            from repro.autotune.controller import ThresholdController
+            self.controller = ThresholdController(cfg, self.mac_prefix)
+        elif autotune:
+            self.controller = autotune
         # jit warm-up accounting: the first decode dispatch per runtime path
         # pays compilation and is reported as compile_seconds, never as
         # decode wall-clock (reset_metrics does NOT clear these — compile is
@@ -142,6 +162,8 @@ class CascadeServingEngine:
         self.loop = (DeviceDecodeLoop(model, cfg, chunk=chunk,
                                       cache_len=cache_len, mesh=mesh)
                      if runtime == "device" else None)
+        if self.controller is not None:
+            self.controller.attach(self)
 
     def reset_metrics(self):
         """Zero the MAC / wall-clock / skip-rate accounting.  The
@@ -251,9 +273,19 @@ class CascadeServingEngine:
         lane["cache"] = self.model.init_cache(self.lane_batch, self.cache_len)
         extra = self._extra(self.lane_batch)
         # re-prefill restarts the lane's DecodeState (streaks, EMA, cursors);
-        # the prefill decision itself counts as the streak's first step
-        state = self.executor.init_state(self.lane_batch,
-                                         active=self._live_mask(lane))
+        # the prefill decision itself counts as the streak's first step.
+        # Autotune telemetry and live thresholds are LANE-lifetime, not
+        # prefill-lifetime: carry them across the re-init (telemetry is
+        # passed INTO init_state so no zeroed counters are allocated just
+        # to be discarded).
+        old = lane.get("state")
+        state = self.executor.init_state(
+            self.lane_batch, active=self._live_mask(lane),
+            mac_weights=self.mac_prefix,
+            telemetry=(old.tel if old is not None
+                       else StagedExecutor._AUTO_TELEMETRY))
+        if old is not None and old.thresholds is not None:
+            state = state.replace(thresholds=old.thresholds)
         tok, exit_idx, _conf, cache, state = self._prefill(
             self.params, jnp.asarray(toks), lane["cache"], state, extra)
         lane["cache"] = cache
@@ -283,7 +315,9 @@ class CascadeServingEngine:
     def step(self):
         """One engine tick: admit, prefill dirty lanes, then decode — one
         token per lane (``runtime="host"``) or up to ``chunk`` tokens per
-        lane inside the device loop (``runtime="device"``)."""
+        lane inside the device loop (``runtime="device"``).  With a
+        ThresholdController attached, the tick ends with its (rarely
+        firing) telemetry → solver → threshold-push check."""
         self._admit()
         for lane_id, lane in enumerate(self.lanes):
             if all(s.done for s in lane["slots"]):
@@ -295,6 +329,48 @@ class CascadeServingEngine:
                 self._device_tick(lane, lane_id)
             else:
                 self._host_tick(lane, lane_id)
+        if self.controller is not None:
+            self.controller.maybe_update(self)
+
+    # -- autotune surface -------------------------------------------------
+    def lane_telemetry(self) -> List:
+        """The lanes' device-resident telemetry pytrees (lane order)."""
+        return [lane["state"].tel for lane in self.lanes
+                if lane["state"].tel is not None]
+
+    def current_thresholds(self):
+        """The live threshold vector lanes decode with, or None (static
+        config thresholds)."""
+        return self._live_thresholds
+
+    def push_thresholds(self, thresholds) -> None:
+        """Swap the live threshold vector in every lane's DecodeState.
+
+        Thresholds are carry DATA — the replacement array has the shape
+        and dtype of the one it replaces, so neither the host decode step
+        nor the device while_loop retraces (pinned by
+        ``tests/test_autotune.py``)."""
+        pushed = tuple(float(t) for t in thresholds)
+        ths = np.asarray(pushed, np.float32)
+        n_m = self.cfg.cascade.n_components
+        if ths.shape != (n_m,):
+            raise ValueError(f"threshold vector shape {ths.shape} != "
+                             f"({n_m},)")
+        if not self.cfg.autotune.enabled:
+            raise ValueError(
+                "live threshold pushes need autotune-enabled decode graphs "
+                "(cfg.with_autotune(enabled=True)); without them thresholds "
+                "are static trace constants")
+        for lane in self.lanes:
+            # one device array PER lane: lane states are donated to the
+            # jitted steps, so a buffer shared across lanes would be
+            # invalidated for lane k+1 the moment lane k dispatches
+            lane["state"] = lane["state"].replace(
+                thresholds=jnp.array(ths))
+        # report what the caller pushed, not its f32 quantization — the
+        # controller/artifact values (e.g. the 1.1 never-exit sentinel)
+        # must round-trip through current_thresholds() exactly
+        self._live_thresholds = pushed
 
     def _account(self, lane_id: int, depths: np.ndarray, n_tokens: int,
                  ran: np.ndarray, steps: int, max_depths):
@@ -465,4 +541,26 @@ class CascadeServingEngine:
             "lane_conf_ema": [
                 float(np.mean(np.asarray(lane["state"].ema_conf)))
                 for lane in self.lanes],
+            "autotune": self._autotune_stats(),
         }
+
+    def _autotune_stats(self):
+        if not self.cfg.autotune.enabled:
+            return None
+        from repro.autotune.telemetry import merge_telemetry
+        tels = self.lane_telemetry()
+        out = {
+            "thresholds": (list(self._live_thresholds)
+                           if self._live_thresholds is not None else None),
+            "controller": (self.controller.stats()
+                           if self.controller is not None else None),
+        }
+        if tels:
+            tel = merge_telemetry(tels)
+            out.update({
+                "steps": float(tel["steps"]),
+                "shadow_steps": float(tel["shadow_steps"]),
+                "exit_counts": [float(c) for c in tel["exit_counts"]],
+                "mac_spent": float(tel["mac_spent"]),
+            })
+        return out

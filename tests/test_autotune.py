@@ -1,0 +1,606 @@
+"""Online exit-telemetry + threshold autotuning (repro.autotune).
+
+Pins the subsystem's contracts: the histogram solver reproduces §5 exactly
+on bin-aligned data and its joint search dominates the independent one,
+the budget solver dominates the legacy shared quantile, device-accumulated
+telemetry bit-matches a host recompute, and a controller threshold push
+neither retraces the decode programs nor perturbs token streams.
+"""
+import json
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.policy as policy_mod
+from repro.autotune import (CalibrationArtifact, ExitHistogram,
+                            ThresholdController, config_key,
+                            edges_from_thresholds, load_artifact,
+                            merge_telemetry, save_artifact, solve_budget,
+                            solve_epsilon, thresholds_from_edges)
+from repro.autotune.solver import independent_epsilon_edges
+from repro.autotune.telemetry import (accumulate_prefill, init_telemetry,
+                                      pack_rider, telemetry_to_host)
+from repro.configs import get_config, reduced
+from repro.core.calibration import calibrate_thresholds, threshold_for_epsilon
+from repro.core.policy import BudgetPolicy, get_calibrator, get_policy
+from repro.models.model import build_model
+from repro.serving import CascadeServingEngine, Request
+
+BINS = 32
+
+
+def _tiny(**cascade):
+    cfg = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
+    return cfg.with_cascade(**cascade)
+
+
+def _tiny_autotune(**kw):
+    cascade = kw.pop("cascade", {})
+    at = dict(enabled=True, bins=16, shadow_every=4, min_shadow=8,
+              resolve_every=8)
+    at.update(kw)
+    return _tiny(**cascade).with_autotune(**at)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = _tiny()
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _drive(cfg, model, params, runtime, n_req=4, max_new=6, seed=3,
+           autotune=None, push_at=None, push=None):
+    eng = CascadeServingEngine(cfg, model, params, lane_batch=2, n_lanes=2,
+                               cache_len=32, runtime=runtime, chunk=4,
+                               autotune=autotune)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(n_req)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    if push_at is None:
+        eng.run(200)
+    else:
+        for tick in range(200):
+            if tick == push_at:
+                eng.push_thresholds(push)
+            if not eng.queue and all(s.done for ln in eng.lanes
+                                     for s in ln["slots"]):
+                break
+            eng.step()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# solver: §5 exactness, joint vs independent, budget vs shared quantile
+# ---------------------------------------------------------------------------
+
+def _edge_quantized(rng, n, lo=1, hi=BINS - 1):
+    """Confidences exactly on interior bin edges e/BINS — the §5 grid and
+    the histogram grid coincide, so the two solvers must agree exactly."""
+    return rng.integers(lo, hi + 1, n).astype(np.float64) / BINS
+
+
+def test_solver_recovers_paper_calibration_exactly():
+    """independent_epsilon_edges == core.calibration.calibrate_thresholds,
+    threshold for threshold, from ONE pass over the binned data."""
+    rng = np.random.default_rng(0)
+    N = 8000
+    mac_prefix = (1.0, 2.0, 3.0)
+    c0, c1 = _edge_quantized(rng, N), _edge_quantized(rng, N)
+    a0 = (rng.random(N) < c0).astype(np.float64)
+    a1 = (rng.random(N) < 0.4 + 0.5 * c1).astype(np.float64)
+    hist = ExitHistogram.from_samples(np.stack([c0, c1]),
+                                      np.stack([a0, a1]), mac_prefix, BINS)
+    for eps in (0.02, 0.05, 0.1, 0.3):
+        got = thresholds_from_edges(
+            independent_epsilon_edges(hist, eps), BINS)
+        want = calibrate_thresholds(
+            [c0, c1, np.ones(N)], [a0, a1, np.ones(N)], eps).thresholds
+        assert got == want, (eps, got, want)
+
+
+def test_joint_search_dominates_independent_at_equal_epsilon():
+    """The §5 rule tunes each component against its own α*_m; the joint
+    constraint is the cascade's.  On a cascade with a well-calibrated
+    early component the joint solver must spend strictly fewer MACs at
+    the same ε while staying feasible."""
+    rng = np.random.default_rng(1)
+    N = 20000
+    mac_prefix = (1.0, 5.0)
+    c0 = _edge_quantized(rng, N)
+    a0 = (c0 >= 0.5).astype(np.float64)     # deterministic: α*_0 = 1
+    hist = ExitHistogram.from_samples(c0[None], a0[None], mac_prefix, BINS)
+    eps = 0.1
+    ind = solve_epsilon(hist, eps, mode="independent")
+    joint = solve_epsilon(hist, eps, mode="joint")
+    base = hist.final_accuracy
+    assert ind.feasible and joint.feasible
+    assert ind.agreement >= base - eps - 1e-9
+    assert joint.agreement >= base - eps - 1e-9
+    # α*_0-relative tuning exits only where comp0 is perfect; the joint
+    # constraint tolerates cheap imperfect exits up to the cascade's ε
+    assert joint.avg_macs < ind.avg_macs
+
+
+def _heterogeneous_population(rng, n):
+    """Two routing components with very different reliability curves — an
+    allocation a shared exit quantile cannot express: component 0 is
+    informative (accuracy tracks confidence and BEATS the final model's
+    0.75 at high confidence), component 1's confidence is noise around a
+    flat 0.55.  The accuracy-optimal budget spend shifts exit mass toward
+    component 0; the shared quantile ties the components' exit fractions
+    together and cannot."""
+    mac_prefix = (1.0, 2.0, 3.0)
+    c0 = np.clip(rng.random(n), 1e-6, 1.0)
+    a0 = (rng.random(n) < 0.2 + 0.8 * c0).astype(np.float64)
+    c1 = np.clip(rng.random(n), 1e-6, 1.0)
+    a1 = (rng.random(n) < 0.55).astype(np.float64)
+    a2 = (rng.random(n) < 0.75).astype(np.float64)
+    confs = np.stack([c0, c1, np.ones(n)])
+    agrees = np.stack([a0, a1, a2])
+    return confs, agrees, mac_prefix
+
+
+def test_budget_solver_dominates_shared_quantile():
+    """At equal average MACs the per-component coordinate-descent solution
+    must be at least as accurate as the shared-quantile fit on every
+    budget — strictly better on this heterogeneous population."""
+    rng = np.random.default_rng(2)
+    confs, agrees, mac_prefix = _heterogeneous_population(rng, 40000)
+    hist = ExitHistogram.from_samples(confs, agrees, mac_prefix, 64)
+    for budget in (1.5, 2.0, 2.5):
+        shared = get_policy(f"budget@{budget}:shared")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            shared.fit([c for c in confs], mac_prefix)
+        edges = edges_from_thresholds(shared.thresholds, 64)
+        shared_macs, shared_acc = hist.evaluate(edges)
+        res = solve_budget(hist, max(budget, shared_macs),
+                           init_edges=edges)
+        assert res.avg_macs <= max(budget, shared_macs) + 1e-9
+        assert res.agreement > shared_acc, (budget, res, shared_acc)
+
+
+def test_budget_policy_fit_routes_through_solver_and_deprecates_shared():
+    """budget@<macs> + corrects= fits per-component thresholds via the
+    solver; the shared-quantile path (no corrects, or :shared) fires a
+    one-time DeprecationWarning."""
+    rng = np.random.default_rng(4)
+    confs, agrees, mac_prefix = _heterogeneous_population(rng, 8000)
+    conf_list = [c for c in confs]
+
+    policy_mod._SHARED_QUANTILE_WARNED = False
+    pol = get_policy("budget@2.0")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # solver path must not warn
+        ths = pol.fit(conf_list, mac_prefix, corrects=[a for a in agrees])
+    assert len(ths) == 3 and ths[-1] == 0.0
+    # per-component: the informative and noise components get distinct
+    # thresholds (a shared quantile in this population would not)
+    assert ths[0] != ths[1]
+
+    legacy = get_policy("budget@2.0:shared")
+    with pytest.warns(DeprecationWarning, match="shared-quantile"):
+        legacy.fit(conf_list, mac_prefix)
+    # one-time: a second shared fit stays quiet
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        get_policy("budget@2.0:shared").fit(conf_list, mac_prefix)
+    # solver must not allocate worse than the quantile at its own budget
+    hist = ExitHistogram.from_samples(confs, agrees, mac_prefix, 64)
+    _, acc_solver = hist.evaluate(edges_from_thresholds(ths, 64))
+    _, acc_shared = hist.evaluate(
+        edges_from_thresholds(legacy.thresholds, 64))
+    assert acc_solver >= acc_shared
+
+
+# ---------------------------------------------------------------------------
+# telemetry: joint-cell layout, device/host bit-match, stream invariance
+# ---------------------------------------------------------------------------
+
+def test_joint_cell_layout_matches_host_reference():
+    """Device-side cell flattening (accumulate_*'s C-order) must agree with
+    ExitHistogram.from_samples' np.ravel_multi_index layout bit for bit."""
+    rng = np.random.default_rng(0)
+    n_m, bins, B = 3, 8, 64
+    conf = rng.random((n_m, B))
+    pred = rng.integers(0, 5, (n_m, B)).astype(np.int32)
+    tel = init_telemetry(n_m, bins, mac_weights=(1.0, 2.0, 3.0))
+    tel = accumulate_prefill(tel, pack_rider(jnp.asarray(pred),
+                                             jnp.asarray(conf), bins),
+                             jnp.ones((B,), bool))
+    host = telemetry_to_host(tel)
+    agrees = (pred[:-1] == pred[-1]).astype(np.float64)
+    ref = ExitHistogram.from_samples(conf[:-1], agrees, (1.0, 2.0, 3.0),
+                                     bins)
+    np.testing.assert_array_equal(
+        host["shadow_count"].reshape(ref.counts.shape), ref.counts)
+    np.testing.assert_array_equal(
+        host["shadow_agree"].reshape(ref.agree.shape), ref.agree)
+    # merge: two lanes sum counters, carry mac_weights
+    merged = merge_telemetry([tel, tel])
+    np.testing.assert_array_equal(merged["shadow_count"],
+                                  2 * host["shadow_count"])
+    np.testing.assert_array_equal(merged["mac_weights"],
+                                  host["mac_weights"])
+
+
+def test_device_telemetry_bitmatches_host_recompute(tiny_model):
+    """The device while_loop accumulates telemetry inside its carry and
+    merges across lanes/chunks; the per-token host runtime is its step-by-
+    step recompute.  Same traffic → bit-identical counters, and the exit
+    counter must equal a numpy recompute from the decoded streams."""
+    model, params = tiny_model
+    cfg = _tiny_autotune(cascade=dict(thresholds=(0.02, 0.0),
+                                      exit_mode="cond_batch"))
+    h = _drive(cfg, model, params, "host")
+    d = _drive(cfg, model, params, "device")
+    th = merge_telemetry(h.lane_telemetry())
+    td = merge_telemetry(d.lane_telemetry())
+    for k in th:
+        np.testing.assert_array_equal(th[k], td[k])
+    assert th["steps"] > 0 and th["shadow_steps"] > 0
+    # exit_counts recompute: every decode-step exit of every request (the
+    # first recorded token per request is the prefill decision, which
+    # feeds only the shadow counters)
+    decode_exits = [e for r in h.finished.values()
+                    for e in r["exit_depths"][1:]]
+    np.testing.assert_array_equal(
+        th["exit_counts"], np.bincount(decode_exits, minlength=2))
+    # MAC counter prices those exits with the engine's prefix
+    np.testing.assert_allclose(
+        th["mac_spent"],
+        np.asarray(h.mac_prefix, np.float64)[decode_exits].sum(),
+        rtol=1e-6)
+
+
+def test_telemetry_leaves_token_streams_identical(tiny_model):
+    """Telemetry accumulation and the shadow full-depth pass change WHAT
+    EXECUTES, never what is produced: token streams with autotune on must
+    equal the plain engine's bit for bit."""
+    model, params = tiny_model
+    cascade = dict(thresholds=(0.02, 0.0), exit_mode="cond_batch")
+    on = _drive(_tiny_autotune(cascade=cascade), model, params, "device")
+    off = _drive(_tiny(**cascade), model, params, "device")
+    assert on.finished.keys() == off.finished.keys()
+    for rid in on.finished:
+        assert on.finished[rid]["tokens"] == off.finished[rid]["tokens"]
+        assert (on.finished[rid]["exit_depths"]
+                == off.finished[rid]["exit_depths"])
+
+
+@pytest.mark.parametrize("measure", ["softmax_max", "patience@2"])
+def test_shadow_pass_commits_nothing_at_mixed_exits(measure):
+    """The sharp version of stream invariance: a 3-component cascade at a
+    genuinely mixed-exit operating point with an aggressive shadow rate.
+    The shadow pass must OBSERVE the skipped depth (rider only), never
+    commit its KV writes or streak advances — a committed shadow run
+    diverges these streams within a few tokens."""
+    cfg = reduced(get_config("qwen2.5-3b"), n_layers=3).replace(
+        dtype="float32").with_cascade(
+        n_components=3, exit_boundaries=(1, 2), exit_mode="cond_batch",
+        thresholds=(0.021, 0.021, 0.0), confidence=measure)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    on_cfg = cfg.with_autotune(enabled=True, bins=16, shadow_every=3)
+    off = _drive(cfg, model, params, "host", max_new=20)
+    on = _drive(on_cfg, model, params, "host", max_new=20)
+    tel = merge_telemetry(on.lane_telemetry())
+    # the operating point must actually be mixed, or this test is vacuous
+    assert tel["exit_counts"][0] > 0 and tel["exit_counts"][1:].sum() > 0
+    assert tel["shadow_steps"] > 0
+    for rid in off.finished:
+        assert on.finished[rid]["tokens"] == off.finished[rid]["tokens"]
+        assert (on.finished[rid]["exit_depths"]
+                == off.finished[rid]["exit_depths"])
+
+
+def test_shadow_schedule_and_live_histogram(tiny_model):
+    """The shadow pass fires on the deterministic t-schedule and the live
+    confidence histogram rows cover exactly the samples still undecided
+    when each component ran."""
+    model, params = tiny_model
+    cfg = _tiny_autotune(cascade=dict(thresholds=(1.1, 0.0),
+                                      exit_mode="cond_batch"))
+    eng = _drive(cfg, model, params, "host", n_req=2, max_new=8)
+    tel = merge_telemetry(eng.lane_telemetry())
+    # threshold 1.1: nobody exits early -> everyone reaches both
+    # components every step
+    assert tel["conf_hist"][0].sum() == tel["steps"]
+    assert tel["conf_hist"][1].sum() == tel["steps"]
+    assert tel["exit_counts"][0] == 0
+    # shadow: every shadow_every-th decode position plus one per prefill
+    # slot; with threshold 1.1 shadow forcing changes nothing but must
+    # still record
+    assert tel["shadow_steps"] > 0
+    assert tel["shadow_count"].sum() == tel["shadow_steps"]
+
+
+def test_device_tick_adds_no_host_syncs(tiny_model, monkeypatch):
+    """Telemetry rides the device loop carry: a decode chunk still syncs
+    exactly once (the existing device_get), telemetry on or off."""
+    model, params = tiny_model
+
+    def count_syncs(cfg):
+        eng = CascadeServingEngine(cfg, model, params, lane_batch=2,
+                                   n_lanes=1, cache_len=32,
+                                   runtime="device", chunk=4)
+        rng = np.random.default_rng(0)
+        for i in range(2):
+            eng.submit(Request(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, 6).astype(np.int32), max_new_tokens=6))
+        calls = {"get": 0, "chunks": 0}
+        real_get = jax.device_get
+        real_run = eng.loop.run_chunk
+
+        def wrap_get(x):
+            calls["get"] += 1
+            return real_get(x)
+
+        def wrap_run(*a, **k):
+            calls["chunks"] += 1
+            return real_run(*a, **k)
+
+        monkeypatch.setattr(jax, "device_get", wrap_get)
+        monkeypatch.setattr(eng.loop, "run_chunk", wrap_run)
+        try:
+            eng.run(100)
+        finally:
+            monkeypatch.setattr(jax, "device_get", real_get)
+        assert calls["chunks"] > 0
+        return calls["get"], calls["chunks"]
+
+    cascade = dict(thresholds=(0.02, 0.0), exit_mode="cond_batch")
+    on = count_syncs(_tiny_autotune(cascade=cascade))
+    off = count_syncs(_tiny(**cascade))
+    assert on[0] == on[1]            # one device_get per chunk, exactly
+    assert off[0] == off[1]
+
+
+# ---------------------------------------------------------------------------
+# controller: zero retrace, deterministic streams, guards, end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("runtime", ["host", "device"])
+def test_threshold_push_causes_zero_new_traces(tiny_model, runtime):
+    """Thresholds are DecodeState data: a mid-run push must not grow any
+    jit cache, and a re-run with the same push must produce the same
+    streams (determinism for fixed telemetry)."""
+    model, params = tiny_model
+    cfg = _tiny_autotune(cascade=dict(thresholds=(0.02, 0.0),
+                                      exit_mode="cond_batch"))
+
+    def run():
+        eng = _drive(cfg, model, params, runtime, n_req=4, max_new=8,
+                     push_at=3, push=(0.7, 0.0))
+        return eng
+
+    eng = run()
+    jitted = (eng.loop._jitted if runtime == "device" else eng._decode)
+    assert jitted._cache_size() == 1
+    assert eng._prefill._cache_size() == 1
+    assert eng.current_thresholds() == pytest.approx((0.7, 0.0))
+    eng2 = run()
+    assert eng.finished.keys() == eng2.finished.keys()
+    for rid in eng.finished:
+        assert eng.finished[rid]["tokens"] == eng2.finished[rid]["tokens"]
+
+
+def test_push_requires_autotune_graphs(tiny_model):
+    model, params = tiny_model
+    eng = CascadeServingEngine(_tiny(), model, params, lane_batch=2,
+                               n_lanes=1, cache_len=32)
+    with pytest.raises(ValueError, match="autotune"):
+        eng.push_thresholds((0.5, 0.0))
+    with pytest.raises(ValueError, match="autotune"):
+        CascadeServingEngine(_tiny(), model, params, lane_batch=2,
+                             n_lanes=1, cache_len=32, autotune=True)
+
+
+def test_controller_end_to_end_with_engine(tiny_model, tmp_path):
+    """autotune=True wires a controller from cfg.autotune; it resolves
+    from live telemetry, pushes without retracing, persists an artifact,
+    and a fresh engine warm-starts from it."""
+    model, params = tiny_model
+    cfg = _tiny_autotune(mac_budget=1.0, resolve_every=4, min_shadow=4,
+                         hysteresis=0.0,
+                         cascade=dict(thresholds=(0.5, 0.0),
+                                      exit_mode="cond_batch"))
+    ctrl = ThresholdController(cfg, (1.0, 2.0), artifact_dir=str(tmp_path))
+    eng = _drive(cfg, model, params, "device", n_req=6, max_new=8,
+                 autotune=ctrl)
+    assert ctrl.resolves >= 1 and ctrl.pushes >= 1
+    st = eng.stats()["autotune"]
+    assert st["controller"]["resolves"] == ctrl.resolves
+    assert st["thresholds"] == list(eng.current_thresholds())
+    assert eng.loop._jitted._cache_size() == 1      # pushes never retrace
+    art = load_artifact(str(tmp_path), cfg)
+    assert art is not None
+    assert tuple(art.thresholds) == tuple(ctrl.thresholds)
+    # warm start: a new engine begins at the artifact's thresholds
+    ctrl2 = ThresholdController(cfg, (1.0, 2.0),
+                                artifact_dir=str(tmp_path))
+    eng2 = CascadeServingEngine(cfg, model, params, lane_batch=2,
+                                n_lanes=1, cache_len=32, autotune=ctrl2)
+    assert eng2.current_thresholds() == tuple(art.thresholds)
+
+
+def test_controller_min_sample_and_hysteresis_guards(tiny_model):
+    model, params = tiny_model
+    cfg = _tiny_autotune(cascade=dict(thresholds=(0.5, 0.0),
+                                      exit_mode="cond_batch"))
+
+    class FakeEngine:
+        def __init__(self, tel):
+            self._tel = tel
+            self.pushed = []
+
+        def lane_telemetry(self):
+            return [self._tel]
+
+        def current_thresholds(self):
+            return (0.5, 0.0)
+
+        def push_thresholds(self, ths):
+            self.pushed.append(tuple(ths))
+
+    # thin evidence: below min_shadow -> no resolve
+    tel = init_telemetry(2, cfg.autotune.bins, mac_weights=(1.0, 2.0))
+    ctrl = ThresholdController(cfg, (1.0, 2.0), min_shadow=10**6)
+    assert ctrl.update(FakeEngine(telemetry_to_host(tel))) is None
+    assert ctrl.resolves == 0
+    # hysteresis: a solve that lands where we already are is not pushed
+    rng = np.random.default_rng(0)
+    B = 512
+    conf = rng.random((2, B))
+    pred = np.zeros((2, B), np.int32)            # always agree
+    tel = accumulate_prefill(tel, pack_rider(jnp.asarray(pred),
+                                             jnp.asarray(conf),
+                                             cfg.autotune.bins),
+                             jnp.ones((B,), bool))
+    host = telemetry_to_host(tel)
+    ctrl = ThresholdController(cfg, (1.0, 2.0), min_shadow=1,
+                               hysteresis=10.0)   # nothing moves this far
+    fe = FakeEngine(host)
+    assert ctrl.update(fe) is None
+    assert ctrl.resolves == 1 and ctrl.skipped_small == 1 and not fe.pushed
+    # force bypasses hysteresis but not the evidence requirement
+    assert ctrl.update(fe, force=True) is not None
+    assert fe.pushed
+
+
+def test_controller_drift_reset_is_persistent():
+    """A detected distribution shift discards the pre-drift history from
+    that resolve AND all later ones — not just the one that noticed."""
+    cfg = _tiny_autotune(epsilon=0.05, mac_budget=0.0)
+    bins = cfg.autotune.bins
+
+    def window(conf_bin, agree_pairs):
+        """One telemetry window: live conf mass at ``conf_bin``, shadow
+        mass given as [(bin, count, agree_count), ...]."""
+        d = {"conf_hist": np.zeros((2, bins), np.float32),
+             "exit_counts": np.zeros(2, np.float32),
+             "mac_weights": np.asarray([1.0, 2.0], np.float32),
+             "steps": np.float32(0), "mac_spent": np.float32(0),
+             "shadow_count": np.zeros(bins, np.float32),
+             "shadow_agree": np.zeros((1, bins), np.float32),
+             "shadow_steps": np.float32(0)}
+        d["conf_hist"][:, conf_bin] = 100.0
+        for b, n, a in agree_pairs:
+            d["shadow_count"][b] += n
+            d["shadow_agree"][0, b] += a
+            d["shadow_steps"] += n
+        return d
+
+    def plus(a, b):
+        return {k: (a[k] if k == "mac_weights" else a[k] + b[k]) for k in a}
+
+    class FakeEngine:
+        cum = None
+
+        def lane_telemetry(self):
+            return [self.cum]
+
+        def current_thresholds(self):
+            return None
+
+        def push_thresholds(self, ths):
+            self.pushed = tuple(ths)
+
+    # distribution A: confident-and-right at bin 14.  distribution B:
+    # bin-14 confidence is now WRONG; the agreeing mass moved to bin 3
+    # but not enough of it to clear ε — B-only calibration must refuse
+    # early exits, while A-diluted data would still allow them.
+    A = window(14, [(14, 2000, 2000)])
+    B = window(3, [(14, 100, 0), (3, 900, 900)])
+    ctrl = ThresholdController(cfg, (1.0, 2.0), min_shadow=1,
+                               hysteresis=0.0)
+    eng = FakeEngine()
+    eng.cum = A
+    assert ctrl.update(eng) is not None          # resolve 1: A only
+    assert ctrl.thresholds[0] <= 14 / bins       # exits allowed
+    eng.cum = plus(A, B)
+    assert ctrl.update(eng) is not None          # resolve 2: drift -> B only
+    assert ctrl.drift_resets == 1
+    assert ctrl.thresholds[0] > 14 / bins        # exits refused
+    eng.cum = plus(plus(A, B), B)
+    ths3 = ctrl.update(eng)                      # resolve 3: still B only
+    assert ctrl.drift_resets == 1                # no new drift
+    assert ths3 is None or ths3[0] > 14 / bins   # stale A stays excluded
+    assert ctrl.thresholds[0] > 14 / bins
+
+
+# ---------------------------------------------------------------------------
+# artifacts, holdout calibrator
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip_and_key_guard(tmp_path):
+    cfg = _tiny_autotune()
+    art = CalibrationArtifact(
+        config_key=config_key(cfg), thresholds=(0.25, 0.0),
+        direction="epsilon", target=0.05, bins=16,
+        mac_prefix=(1.0, 2.0), agreement=0.97, avg_macs=1.4,
+        shadow_steps=128.0, edges=(4,))
+    path = save_artifact(str(tmp_path), art)
+    assert os.path.exists(path)
+    got = load_artifact(str(tmp_path), cfg)
+    assert got == art
+    with open(path) as f:
+        assert json.load(f)["version"] == 1
+    # a different cascade -> different key -> no artifact
+    other = cfg.with_cascade(thresholds=(0.9, 0.0), exit_mode="select")
+    assert config_key(other) == config_key(cfg)   # thresholds don't key
+    other = cfg.with_cascade(confidence="entropy")
+    assert load_artifact(str(tmp_path), other) is None
+    # tampered key refuses
+    with open(path) as f:
+        raw = json.load(f)
+    raw["config_key"] = "0" * 64
+    with open(path, "w") as f:
+        json.dump(raw, f)
+    with pytest.raises(ValueError, match="calibrated for"):
+        load_artifact(str(tmp_path), cfg)
+
+
+def test_threshold_for_epsilon_validation_split():
+    """α* comes from the stats arrays; the threshold is picked on the
+    validation curve — a validation set with worse tail accuracy forces a
+    higher threshold than the stats set alone would."""
+    conf = np.linspace(0.01, 1.0, 100)
+    correct = (conf >= 0.5).astype(np.float64)
+    th_self, a_star = threshold_for_epsilon(conf, correct, 0.0)
+    assert a_star == 1.0 and th_self == pytest.approx(0.5)
+    # validation says the 0.5-0.7 band is actually wrong
+    val_correct = (conf >= 0.7).astype(np.float64)
+    th_val, a_star2 = threshold_for_epsilon(conf, correct, 0.0,
+                                            val_conf=conf,
+                                            val_correct=val_correct)
+    assert a_star2 == 1.0                       # still from the stats set
+    assert th_val == pytest.approx(0.7)         # selected on validation
+    with pytest.raises(ValueError, match="val_correct"):
+        threshold_for_epsilon(conf, correct, 0.0, val_conf=conf)
+
+
+def test_holdout_calibrator_registry_and_split():
+    rng = np.random.default_rng(0)
+    N = 4000
+    conf = [rng.random(N), rng.random(N), np.ones(N)]
+    corr = [(rng.random(N) < 0.3 + 0.7 * c).astype(np.float64)
+            for c in conf[:-1]] + [np.ones(N)]
+    res = calibrate_thresholds(conf, corr, 0.05, relative_to="holdout")
+    assert len(res.thresholds) == 3 and res.thresholds[-1] == 0.0
+    # explicit validation split is honored without internal splitting
+    res2 = get_calibrator("holdout@0.3").calibrate(
+        conf, corr, 0.05, val_confidences=conf, val_corrects=corr)
+    assert len(res2.thresholds) == 3
+    # bad specs refuse
+    with pytest.raises(ValueError):
+        get_calibrator("holdout@1.5")
+    with pytest.raises(ValueError):
+        get_calibrator("holdout@0.5:bogus")

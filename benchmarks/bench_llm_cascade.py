@@ -21,7 +21,15 @@ The serving sweep is the skip-aware hot-path ablation (persisted to
 * kernels on vs off — the exit-masked decode-attention + fused exit-update
   Pallas fast path vs the plain jnp path (``kernel_speedup``; on CPU CI the
   kernels run interpreted, so this column is only meaningful on real
-  hardware — it is recorded, not gated).
+  hardware — it is recorded, not gated);
+* ``cache_layout=dense`` vs ``cache_layout=paged`` — bit-identity at
+  capacity (``paged_streams_identical``), then an EQUAL-MEMORY admission
+  burst: the paged engine runs twice the slots inside the dense slab's
+  byte budget (slots claim blocks only for their actual span), so its
+  admission wait (ticks from submit to admit — deterministic, not
+  wall-clock) and peak cache bytes must beat the dense layout
+  (``check_bench_serving.py`` gates both, plus the exit-reclamation
+  counters recorded per row).
 
 All exit decisions route through the one ExitDecider resolved from the
 config's registry strings; per-lane decode state (patience streaks
@@ -43,6 +51,8 @@ N_COHORTS = 2
 # layout delta (cache copies per segment per step) clears timer noise
 SERVE_LANE_BATCH = 4
 SERVE_CACHE_LEN = 256
+# paged-cache ablation shape: 16-position blocks over the 256-position ring
+PAGED_BLOCK = 16
 # the full threshold sweep persisted to BENCH_serving.json — at least 3
 # operating points so the perf trajectory tracks the cascade, not one row:
 # 0.0 exits everyone at component 0 (max skipping), 0.02 sits inside the
@@ -186,8 +196,81 @@ def run(quick: bool = False):
                 f"compile_s={st['compile_seconds']:.2f}"))
         return engines, stats
 
+    def paged_ablation(th, dense_host_eng):
+        """Dense vs paged KV layout at one threshold.
+
+        Two measurements: (i) bit-identity at capacity — a paged engine
+        with the SAME lane shape sees the same traffic as the ablation's
+        host engine and must produce identical token streams; (ii) an
+        equal-memory admission burst — the paged engine runs twice the
+        slots inside the dense slab's byte budget (its pool is capped at
+        the dense-equivalent block count), so queued requests admit
+        sooner (fewer ticks submit->admit) and the block pool's peak
+        occupancy stays below the always-resident dense slab.  Both burst
+        metrics are deterministic tick/byte counts, not wall-clock."""
+        base = scfg.replace(use_kernels=True).with_cascade(
+            thresholds=(th, th, 0.0), cohort_layout="major")
+        paged = base.with_paged_cache(layout="paged",
+                                      block_size=PAGED_BLOCK)
+        e_par = _drive(paged, smodel, sparams, n_req=rt_req,
+                       max_new=max_new, runtime="host",
+                       lane_batch=SERVE_LANE_BATCH,
+                       cache_len=SERVE_CACHE_LEN, waves=waves)
+        identical = _streams(dense_host_eng) == _streams(e_par)
+        # the paged parity engine auto-sized its pool to the dense
+        # equivalent of THIS lane shape (+ trash block) — reuse that as
+        # the equal-memory cap for the double-slot burst engine
+        pool_cap = e_par.pcache.pool.num_blocks
+        big = base.with_paged_cache(layout="paged", block_size=PAGED_BLOCK,
+                                    num_blocks=pool_cap)
+        burst = 3 * rt_req
+
+        def admission(cfg_, lane_batch):
+            eng = CascadeServingEngine(cfg_, smodel, sparams,
+                                       lane_batch=lane_batch, n_lanes=2,
+                                       cache_len=SERVE_CACHE_LEN,
+                                       runtime="host")
+            arng = np.random.default_rng(0)
+            for i in range(burst):
+                eng.submit(Request(
+                    rid=i,
+                    prompt=arng.integers(0, scfg.vocab_size,
+                                         8).astype(np.int32),
+                    max_new_tokens=max_new))
+            eng.run(600)
+            assert len(eng.finished) == burst
+            return eng.stats()
+
+        ad = admission(base, SERVE_LANE_BATCH)
+        ap = admission(big, 2 * SERVE_LANE_BATCH)
+        st_par = e_par.stats()
+        out = {
+            "paged_streams_identical": identical,
+            "paged_us_per_token": st_par["wallclock_us_per_token"],
+            "dense_peak_cache_bytes": ad["memory"]["peak_cache_bytes"],
+            "paged_peak_cache_bytes": ap["memory"]["peak_cache_bytes"],
+            "paged_pool_blocks": ap["memory"]["num_blocks"],
+            "paged_peak_blocks": ap["memory"]["peak_blocks_used"],
+            "paged_reclaimed_by_exit": ap["memory"]["reclaimed_by_exit"],
+            "paged_reclaimed_at_retire":
+                ap["memory"]["reclaimed_at_retire"],
+            "dense_admission_wait_mean": ad["admission_wait_mean"],
+            "paged_admission_wait_mean": ap["admission_wait_mean"],
+        }
+        rows.append((
+            f"llm_cascade/th={th:g}/cache_layout=paged",
+            st_par["wallclock_us_per_token"] or 0.0,
+            f"streams_identical={identical};"
+            f"admission_wait={out['paged_admission_wait_mean']:.2f}"
+            f"_vs_dense={out['dense_admission_wait_mean']:.2f};"
+            f"peak_bytes={out['paged_peak_cache_bytes']}"
+            f"_vs_dense={out['dense_peak_cache_bytes']};"
+            f"reclaimed_by_exit={out['paged_reclaimed_by_exit']}"))
+        return out
+
     for th in SERVE_THRESHOLDS:
         engines, stats = serve_ablation(th)
+        paged_row = paged_ablation(th, engines["host"])
         host_st, major_st = stats["host"], stats["major"]
         copy_st, off_st = stats["copy"], stats["nokernel"]
         identical = _streams(engines["major"]) == _streams(engines["copy"])
@@ -220,6 +303,7 @@ def run(quick: bool = False):
             "mac_speedup": major_st["analytic_speedup"],
             "compile_seconds_host": host_st["compile_seconds"],
             "compile_seconds_device": major_st["compile_seconds"],
+            **paged_row,
         })
     LAST_SERVING_SUMMARY = {
         "bench": "llm_cascade",
@@ -230,6 +314,7 @@ def run(quick: bool = False):
         "n_cohorts": N_COHORTS,
         "n_components": scfg.cascade.n_components,
         "use_kernels": True,
+        "paged_block_size": PAGED_BLOCK,
         "quick": bool(quick),
         "rows": serving_rows,
     }

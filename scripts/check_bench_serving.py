@@ -12,7 +12,15 @@ Validates EVERY row of the threshold sweep (written by
   threshold 0.0, where cohort skipping makes the copy path's per-segment
   cache concat pure overhead;
 * the device while_loop runtime is strictly faster than the host per-token
-  runtime at threshold 0.0 (the dispatch-amortization criterion).
+  runtime at threshold 0.0 (the dispatch-amortization criterion);
+* the paged KV layout on every row: ``paged_streams_identical`` (the
+  layout is an addressing scheme, not a semantics), peak cache bytes
+  STRICTLY below the dense slab at every threshold, and the equal-memory
+  admission wait (deterministic ticks submit->admit) STRICTLY better than
+  dense at threshold 0.02 (the mixed-exit operating point) and no worse
+  elsewhere with the same 0.90 noise headroom the layout gate uses —
+  though both admission numbers are tick counts, so in practice they
+  either win or tie exactly.
 
 When the summary carries an ``autotune`` section (written whenever
 ``benchmarks/bench_autotune.py`` runs), it is validated too:
@@ -104,6 +112,43 @@ def check_autotune(auto) -> bool:
     return ok
 
 
+def check_paged_row(r, th) -> bool:
+    """Paged-vs-dense gates for one threshold row (see module docstring)."""
+    ok = True
+    needed = ("paged_streams_identical", "dense_peak_cache_bytes",
+              "paged_peak_cache_bytes", "dense_admission_wait_mean",
+              "paged_admission_wait_mean")
+    missing = [k for k in needed if r.get(k) is None]
+    if missing:
+        print(f"th={th}: missing paged column(s) {missing}",
+              file=sys.stderr)
+        return False
+    if not r["paged_streams_identical"]:
+        print(f"th={th}: paged token streams diverged from the dense "
+              f"layout", file=sys.stderr)
+        ok = False
+    dense_b = float(r["dense_peak_cache_bytes"])
+    paged_b = float(r["paged_peak_cache_bytes"])
+    if not paged_b < dense_b:
+        print(f"th={th}: paged peak cache bytes not below the dense slab: "
+              f"{paged_b:.0f} vs {dense_b:.0f}", file=sys.stderr)
+        ok = False
+    dense_w = float(r["dense_admission_wait_mean"])
+    paged_w = float(r["paged_admission_wait_mean"])
+    if th == 0.02:
+        if not paged_w < dense_w:
+            print(f"th={th}: paged admission wait not strictly better "
+                  f"than dense: {paged_w:.2f} vs {dense_w:.2f} ticks",
+                  file=sys.stderr)
+            ok = False
+    elif paged_w > dense_w / LAYOUT_NOISE_TOL:
+        print(f"th={th}: paged admission wait worse than dense beyond "
+              f"headroom: {paged_w:.2f} vs {dense_w:.2f} ticks",
+              file=sys.stderr)
+        ok = False
+    return ok
+
+
 def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_serving.json"
     with open(path) as f:
@@ -144,12 +189,21 @@ def main() -> int:
                   f"tolerance: {layout:.3f}x < {LAYOUT_NOISE_TOL}",
                   file=sys.stderr)
             ok = False
+        ok = check_paged_row(r, th) and ok
     print("device_speedup:",
           [round(r.get("device_speedup", 0.0), 3) for r in rows])
     print("layout_speedup:",
           [round(r.get("layout_speedup", 0.0), 3) for r in rows])
     print("kernel_speedup:",
           [round(r.get("kernel_speedup", 0.0), 3) for r in rows])
+    print("paged admission wait (paged vs dense, ticks):",
+          [(round(r.get("paged_admission_wait_mean") or 0.0, 2),
+            round(r.get("dense_admission_wait_mean") or 0.0, 2))
+           for r in rows])
+    print("paged peak bytes / dense slab:",
+          [round(float(r.get("paged_peak_cache_bytes") or 0)
+                 / max(1.0, float(r.get("dense_peak_cache_bytes") or 1)), 3)
+           for r in rows])
     if s.get("autotune") is not None:
         ok = check_autotune(s["autotune"]) and ok
     return 0 if ok else 1

@@ -1,10 +1,10 @@
 from repro.configs.base import (AutotuneConfig, CascadeConfig, InputShape,
-                                INPUT_SHAPES, ModelConfig,
+                                INPUT_SHAPES, ModelConfig, PagedCacheConfig,
                                 default_exit_boundaries, get_config,
                                 list_configs, reduced, register)
 
 __all__ = [
     "AutotuneConfig", "CascadeConfig", "InputShape", "INPUT_SHAPES",
-    "ModelConfig", "default_exit_boundaries", "get_config", "list_configs",
-    "reduced", "register",
+    "ModelConfig", "PagedCacheConfig", "default_exit_boundaries",
+    "get_config", "list_configs", "reduced", "register",
 ]

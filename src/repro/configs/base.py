@@ -163,6 +163,45 @@ class AutotuneConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """KV-cache layout knobs for the serving engine (``repro.serving.paged``).
+
+    ``layout="dense"`` keeps the per-lane worst-case ``(B, cache_len)`` slab
+    (the bit-identity ablation baseline).  ``layout="paged"`` replaces the
+    slab's attention k/v leaves with shared block stores addressed through
+    per-(component, slot) block tables carried in ``DecodeState``: blocks are
+    allocated lazily as the ring cursor reaches them and return to the
+    :class:`repro.serving.paged.BlockPool` the moment a slot finishes — for
+    skipped deep components first — instead of at whole-lane re-prefill.
+
+    ``block_size`` is the number of ring positions per block and must divide
+    the engine's ``cache_len``.  ``num_blocks`` sizes the shared pool
+    (``0`` = auto: the dense-equivalent block count plus the reserved trash
+    block, i.e. the same bytes as the dense slabs).  Token/exit/confidence
+    streams are bit-identical between the two layouts (pinned by
+    ``tests/test_paged_cache.py``); layout is an execution strategy, never a
+    semantics.
+    """
+
+    layout: str = "dense"
+    block_size: int = 16
+    num_blocks: int = 0
+
+    def __post_init__(self):
+        if self.layout not in ("dense", "paged"):
+            raise ValueError(
+                f"cache layout must be 'dense' or 'paged', got "
+                f"{self.layout!r}")
+        if self.block_size < 1:
+            raise ValueError(
+                f"paged_cache.block_size must be >= 1, got {self.block_size}")
+        if self.num_blocks < 0:
+            raise ValueError(
+                f"paged_cache.num_blocks must be >= 0 (0 = auto), got "
+                f"{self.num_blocks}")
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelConfig:
     """One architecture.  Units follow each model card exactly."""
 
@@ -239,6 +278,8 @@ class ModelConfig:
     cascade: CascadeConfig = dataclasses.field(default_factory=CascadeConfig)
     autotune: AutotuneConfig = dataclasses.field(
         default_factory=AutotuneConfig)
+    paged_cache: PagedCacheConfig = dataclasses.field(
+        default_factory=PagedCacheConfig)
 
     # ------------------------------------------------------------------
     @property
@@ -268,6 +309,10 @@ class ModelConfig:
     def with_autotune(self, **kw) -> "ModelConfig":
         return dataclasses.replace(
             self, autotune=dataclasses.replace(self.autotune, **kw))
+
+    def with_paged_cache(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(
+            self, paged_cache=dataclasses.replace(self.paged_cache, **kw))
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

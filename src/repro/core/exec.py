@@ -105,8 +105,10 @@ def effective_cohorts(n_cohorts: int, batch: int, warn: bool = False) -> int:
 
 def _slice_ctx(ctx, lo, hi):
     """Batch-slice a decode context: ``cross`` (B, T, d) and the per-slot
-    exit mask ``live`` (B,) carry a batch dim; everything else (kpos ring,
-    scalars, shared params) is batch-free and passes through."""
+    exit mask ``live`` (B,) carry a batch dim; so do the paged-layout
+    block tables (K, B, nblk) and the per-slot kpos ring (B, W).
+    Everything else (dense lane-wide kpos, scalars, shared params) is
+    batch-free and passes through."""
     out = ctx
     cross = ctx.get("cross")
     if cross is not None:
@@ -114,6 +116,12 @@ def _slice_ctx(ctx, lo, hi):
     live = ctx.get("live")
     if live is not None:
         out = {**out, "live": live[lo:hi]}
+    bts = ctx.get("block_tables")
+    if bts is not None:
+        out = {**out, "block_tables": bts[:, lo:hi]}
+    kpos = ctx.get("kpos")
+    if kpos is not None and getattr(kpos, "ndim", 1) == 2:
+        out = {**out, "kpos": kpos[lo:hi]}
     return out
 
 
@@ -145,6 +153,12 @@ class DecodeState:
                                the config's static thresholds).  As carry
                                DATA, a ThresholdController push is a plain
                                array swap — no retrace.
+    block_tables  (n_components, B, W/block_size) int32 paged-cache block
+                               tables (``cache_layout="paged"``), or None
+                               (dense slab — the carry stays byte-identical
+                               to the pre-paging layout).  Carry DATA: the
+                               engine re-binding freed blocks between
+                               chunks is a plain array swap — no retrace.
     """
 
     t: jnp.ndarray
@@ -154,6 +168,7 @@ class DecodeState:
     segments_run: jnp.ndarray
     tel: Optional[object] = None
     thresholds: Optional[jnp.ndarray] = None
+    block_tables: Optional[jnp.ndarray] = None
 
     def replace(self, **kw) -> "DecodeState":
         return dataclasses.replace(self, **kw)
@@ -162,13 +177,13 @@ class DecodeState:
 jax.tree_util.register_dataclass(
     DecodeState,
     data_fields=("t", "active", "policy", "ema_conf", "segments_run",
-                 "tel", "thresholds"),
+                 "tel", "thresholds", "block_tables"),
     meta_fields=())
 
 
 def init_decode_state(decider: ExitDecider, batch: int, n_components: int,
                       t: int = 0, active=None, telemetry=None,
-                      thresholds=None) -> DecodeState:
+                      thresholds=None, block_tables=None) -> DecodeState:
     """Fresh decode carry for a lane of ``batch`` sequences."""
     return DecodeState(
         t=jnp.asarray(t, jnp.int32),
@@ -179,7 +194,9 @@ def init_decode_state(decider: ExitDecider, batch: int, n_components: int,
         segments_run=jnp.zeros((n_components,), jnp.int32),
         tel=telemetry,
         thresholds=(None if thresholds is None
-                    else jnp.asarray(thresholds, jnp.float32)))
+                    else jnp.asarray(thresholds, jnp.float32)),
+        block_tables=(None if block_tables is None
+                      else jnp.asarray(block_tables, jnp.int32)))
 
 
 class StagedExecutor:
@@ -215,13 +232,15 @@ class StagedExecutor:
     # ------------------------------------------------------------------
     def init_state(self, batch: int, t: int = 0, active=None,
                    mac_weights=None,
-                   telemetry=_AUTO_TELEMETRY) -> DecodeState:
+                   telemetry=_AUTO_TELEMETRY,
+                   block_tables=None) -> DecodeState:
         """Fresh carry.  With ``cfg.autotune.enabled`` the state also gets
         zeroed telemetry counters (``mac_weights`` prices exits for the MAC
         counter — the engine passes its cache-length-aware prefix) and a
         live threshold vector seeded from the config.  Pass ``telemetry=``
         to carry existing counters into the fresh state (lane re-prefill)
-        instead of allocating zeroed ones that would be thrown away."""
+        instead of allocating zeroed ones that would be thrown away.
+        ``block_tables`` (paged cache layout) ride the carry as data."""
         tel = thresholds = None
         if self.cfg.autotune.enabled:
             if telemetry is self._AUTO_TELEMETRY:
@@ -232,7 +251,8 @@ class StagedExecutor:
             thresholds = self.cfg.cascade.thresholds
         return init_decode_state(self.decider, batch, self.n_components,
                                  t=t, active=active, telemetry=tel,
-                                 thresholds=thresholds)
+                                 thresholds=thresholds,
+                                 block_tables=block_tables)
 
     def _carry_forward(self, state: DecodeState,
                        decision: ExitDecision) -> DecodeState:
@@ -257,7 +277,8 @@ class StagedExecutor:
         """
         if state is None:
             state = self.init_state(tokens.shape[0])
-        logits, cache = self.model.prefill(params, tokens, cache, extra)
+        logits, cache = self.model.prefill(params, tokens, cache, extra,
+                                           block_tables=state.block_tables)
         decision, carry = self.decider.decide_with_carry(
             logits, thresholds=state.thresholds, state=state.policy,
             active=state.active)
@@ -437,6 +458,11 @@ class StagedExecutor:
         # cells early-out (zero rows) — safe, because a retired slot's
         # outputs are never read and its lane re-prefills before reuse
         ctx = {**ctx, "live": state.active}
+        # paged layout: block tables ride the carry as data; the model
+        # injects per-segment rows into each segment's attention ctx
+        paged = state.block_tables is not None
+        if paged:
+            ctx = {**ctx, "block_tables": state.block_tables}
         segs = cache["segments"]
         new_segs = []
         ran = [jnp.asarray(C, jnp.int32)]
@@ -459,14 +485,19 @@ class StagedExecutor:
                 new_segs.append(nc)
                 ran.append(r)
         elif self.layout == "copy":
-            # ablation baseline: re-slice + re-concat per segment
+            # ablation baseline: re-slice + re-concat per segment.  Paged
+            # stores have no batch dim to slice — each cohort addresses the
+            # SHARED store through its own table rows (sliced via ctx), so
+            # the store CHAINS through the cohorts (disjoint writes) and
+            # the re-concat disappears.
             for si in range(1, n_m):
                 h_parts, nc_parts, sc_parts = [], [], []
                 hs_parts = [] if hs is not None else None
                 ran_si = jnp.zeros((), jnp.int32)
+                seg_cur = segs[si]
                 for c in range(C):
                     lo, hi = c * Bc, (c + 1) * Bc
-                    seg_c = jax.tree_util.tree_map(
+                    seg_c = seg_cur if paged else jax.tree_util.tree_map(
                         lambda x: x[:, lo:hi], segs[si])
                     h_c, nc_c, sc_c, r, hs_c = self._segment_step(
                         si, _slice_ctx(ctx, lo, hi), params, ths,
@@ -475,14 +506,17 @@ class StagedExecutor:
                         hs=None if hs is None else hs[lo:hi])
                     ran_si = ran_si + r
                     h_parts.append(h_c)
-                    nc_parts.append(nc_c)
+                    if paged:
+                        seg_cur = nc_c
+                    else:
+                        nc_parts.append(nc_c)
                     sc_parts.append(sc_c)
                     if hs_parts is not None:
                         hs_parts.append(hs_c)
                 h = jnp.concatenate(h_parts, axis=0)
                 if hs_parts is not None:
                     hs = jnp.concatenate(hs_parts, axis=0)
-                nc = jax.tree_util.tree_map(
+                nc = seg_cur if paged else jax.tree_util.tree_map(
                     lambda *xs: jnp.concatenate(xs, axis=1), *nc_parts)
                 sc = decider.concat_carry(sc_parts)
                 ran.append(ran_si)
@@ -529,15 +563,20 @@ class StagedExecutor:
                             jnp.zeros((), jnp.int32), hsp)
 
                 def _mixed(hp, seg, scp, hsp, _si=si):
-                    view = jax.tree_util.tree_map(
-                        lambda x: x.reshape((x.shape[0], C, Bc)
-                                            + x.shape[2:]), seg)
+                    # dense: zero-copy cohort-major view of the slab.
+                    # paged: no batch dim to view — the SHARED store chains
+                    # through the cohorts, each addressing it through its
+                    # own table rows (ctx_parts carry the sliced tables).
+                    if not paged:
+                        view = jax.tree_util.tree_map(
+                            lambda x: x.reshape((x.shape[0], C, Bc)
+                                                + x.shape[2:]), seg)
                     hp, scp = list(hp), list(scp)
                     hsp = None if hsp is None else list(hsp)
                     parts = []
                     r = jnp.zeros((), jnp.int32)
                     for c in range(C):
-                        seg_c = jax.tree_util.tree_map(
+                        seg_c = seg if paged else jax.tree_util.tree_map(
                             lambda x: x[:, c], view)
                         hp[c], nc_c, scp[c], rc, hs_c = self._segment_step(
                             _si, ctx_parts[c], params, ths, hp[c], seg_c,
@@ -545,9 +584,12 @@ class StagedExecutor:
                             hs=None if hsp is None else hsp[c])
                         if hsp is not None:
                             hsp[c] = hs_c
-                        parts.append(nc_c)
+                        if paged:
+                            seg = nc_c
+                        else:
+                            parts.append(nc_c)
                         r = r + rc
-                    nc = jax.tree_util.tree_map(
+                    nc = seg if paged else jax.tree_util.tree_map(
                         lambda *xs: jnp.concatenate(xs, axis=1), *parts)
                     return hp, nc, scp, r, hsp
 

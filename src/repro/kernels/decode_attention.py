@@ -17,8 +17,11 @@ as the dense value at a fraction of the cost).  Live rows are bit-identical
 to the unmasked kernel: decode attention is batch-separable, so masking one
 row cannot perturb another.
 
-Layout: q (B, KV, qpk, hd); k, v (B, KV, W, hd); kpos (W,) int32; t scalar;
-live (B,) int32.
+Layout: q (B, KV, qpk, hd); k, v (B, KV, W, hd); kpos (W,) int32 — or
+(B, W) for the paged cache layout's per-slot position rings (the lane-wide
+(W,) vector is broadcast; the masking arithmetic per row is unchanged, so
+dense calls are bit-identical to the 1-D operand); t scalar; live (B,)
+int32.
 """
 from __future__ import annotations
 
@@ -53,7 +56,7 @@ def _decode_kernel(t_ref, live_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)                # (qpk, hd)
         k = k_ref[0, 0].astype(jnp.float32)                # (Tk, hd)
         v = v_ref[0, 0].astype(jnp.float32)
-        kpos = kpos_ref[...]                               # (Tk,)
+        kpos = kpos_ref[0]                                 # (Tk,)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         mask = (kpos >= 0) & (kpos <= t)
@@ -81,7 +84,8 @@ def decode_attention(q, k_cache, v_cache, t, kpos, live=None, *,
                      window: int = 0, tk: int = 512,
                      interpret: "bool | None" = None):
     """q: (B, KV, qpk, hd); caches (B, KV, W, hd); t scalar int32;
-    kpos (W,) int32; live (B,) bool/int32 or None (all live)
+    kpos (W,) int32 — or (B, W) per-slot rings (paged layout); live (B,)
+    bool/int32 or None (all live)
     -> (B, KV, qpk, hd) with dead slots' rows zero-filled.
 
     ``interpret`` resolves OUTSIDE the jit boundary (env var / backend
@@ -98,10 +102,14 @@ def _decode_attention(q, k_cache, v_cache, t, kpos, live, *, window, tk,
     W = k_cache.shape[2]
     tk = min(tk, W)
     pad = (-W) % tk
+    # per-row position rings: the lane-wide (W,) vector broadcasts to
+    # (B, W) so every grid cell streams ITS slot's ring — same arithmetic,
+    # so dense (broadcast) calls are bit-identical to the 1-D operand
+    kpos = jnp.broadcast_to(kpos, (B, W))
     if pad:
         k_cache = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v_cache = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad)), constant_values=-1)
     Wp = W + pad
     n_ktiles = Wp // tk
     scale = 1.0 / math.sqrt(hd)
@@ -118,7 +126,7 @@ def _decode_attention(q, k_cache, v_cache, t, kpos, live, *, window, tk,
             pl.BlockSpec((1, 1, qpk, hd), lambda b, h, ik: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, tk, hd), lambda b, h, ik: (b, h, ik, 0)),
             pl.BlockSpec((1, 1, tk, hd), lambda b, h, ik: (b, h, ik, 0)),
-            pl.BlockSpec((tk,), lambda b, h, ik: (ik,)),
+            pl.BlockSpec((1, tk), lambda b, h, ik: (b, ik)),
         ],
         out_specs=pl.BlockSpec((1, 1, qpk, hd), lambda b, h, ik: (b, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, KV, qpk, hd), q.dtype),

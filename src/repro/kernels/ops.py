@@ -23,6 +23,7 @@ from repro.kernels.confidence import confidence as _confidence
 from repro.kernels.decode_attention import decode_attention as _decode_attn
 from repro.kernels.exit_update import exit_update as _exit_update
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_gather import paged_gather as _paged_gather
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 
 
@@ -70,6 +71,15 @@ def decode_attention_cache(q, k_cache, v_cache, t, kpos, *, window=0,
     out = _decode_attn(qg, kc, vc, t, kpos, live, window=window,
                        interpret=resolve_interpret(interpret))
     return out.reshape(B, 1, H, hd)
+
+
+def paged_gather(store, table, *, interpret=None):
+    """Paged-cache block gather: store (num_blocks, bs, kv, hd) through
+    table (B, nblk) -> the slot-logical (B, W, kv, hd) ring view the dense
+    decode-attention kernel consumes unchanged (see
+    :mod:`repro.kernels.paged_gather` for why attention is NOT re-tiled
+    to block granularity)."""
+    return _paged_gather(store, table, interpret=resolve_interpret(interpret))
 
 
 def exit_update_fused(logits, answered, pred, exit_idx, conf, streak, ema,

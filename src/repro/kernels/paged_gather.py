@@ -1,0 +1,67 @@
+"""Block-table gather Pallas kernel for the paged KV cache.
+
+The paged layout stores KV in a shared block store ``(num_blocks,
+block_size, kv, hd)``; a slot's logical ring view is the gather of its
+block-table row ``table[b]`` (``nblk`` physical block ids, trash block 0
+for ring ranges the slot doesn't own).  This kernel materializes that
+``(B, W, kv, hd)`` view so the EXISTING dense decode-attention kernel
+runs over it unchanged — deliberately so: re-tiling the attention to
+block granularity would change the online-softmax accumulation order and
+break the dense/paged bit-identity contract, while a gather is exact.
+
+The block table rides as a scalar-prefetch operand
+(:class:`pltpu.PrefetchScalarGridSpec`): the grid cell ``(b, j)`` DMAs
+physical block ``table[b, j]`` straight from the store — the index map
+reads the prefetched table, so the copy is one dynamic-source DMA per
+cell with no gather scatter-ops in the kernel body.  Trash-block cells
+copy garbage; the per-slot kpos ring masks those positions out of the
+attention (masking, not zeroing — DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_interpret
+
+
+def _gather_kernel(table_ref, x_ref, o_ref):
+    del table_ref  # consumed by the index map
+    o_ref[0] = x_ref[...]
+
+
+def paged_gather(store, table, *, interpret: "bool | None" = None):
+    """store (num_blocks, bs, kv, hd) gathered through table (B, nblk)
+    -> the slot-logical ring view (B, nblk * bs, kv, hd).
+
+    ``interpret`` resolves OUTSIDE the jit boundary (env var / backend
+    auto-detection re-consulted every call, not baked into the trace)."""
+    return _paged_gather(store, table,
+                         interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_gather(store, table, *, interpret):
+    _NB, bs, kv, hd = store.shape
+    B, nblk = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nblk),
+        in_specs=[
+            pl.BlockSpec((1, bs, kv, hd),
+                         lambda b, j, table: (table[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bs, kv, hd),
+                               lambda b, j, table: (b, j, 0, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nblk, bs, kv, hd), store.dtype),
+        interpret=interpret,
+    )(jnp.asarray(table, jnp.int32), store)
+    return out.reshape((B, nblk * bs, kv, hd))

@@ -43,6 +43,20 @@ def main():
     ap.add_argument("--lanes", type=int, default=2)
     ap.add_argument("--lane-batch", type=int, default=4)
     ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--cache-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="dense: per-lane worst-case KV slabs; paged: "
+                         "shared block pool + per-slot block tables with "
+                         "exit-triggered reclamation and continuous "
+                         "single-slot admission (repro.serving.paged)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged layout: ring positions per KV block (must "
+                         "divide the cache capacity)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged layout: total pool blocks; 0 sizes the "
+                         "pool to the dense-equivalent footprint (+1 "
+                         "trash block) — set lower to serve more slots "
+                         "than dense could in the same memory")
     ap.add_argument("--autotune", action="store_true",
                     help="enable online exit telemetry + a "
                          "ThresholdController that periodically re-solves "
@@ -77,6 +91,10 @@ def main():
     if args.autotune:
         cfg = cfg.with_autotune(enabled=True, epsilon=args.epsilon,
                                 mac_budget=args.budget_macs)
+    if args.cache_layout == "paged":
+        cfg = cfg.with_paged_cache(layout="paged",
+                                   block_size=args.block_size,
+                                   num_blocks=args.num_blocks)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     controller = None
@@ -113,6 +131,16 @@ def main():
                  stats["skip_opportunity_rate"],
                  stats["wallclock_us_per_token"] or 0.0,
                  stats["runtime"], stats["compile_seconds"])
+    if args.cache_layout == "paged":
+        mem = stats["memory"]
+        log.info("paged pool: peak %d/%d blocks (%.1f%% of the dense "
+                 "slab), reclaimed by exit %d / at retire %d, mean "
+                 "admission wait %.2f ticks",
+                 mem["peak_blocks_used"], mem["num_blocks"],
+                 100.0 * mem["peak_cache_bytes"]
+                 / max(1, mem["dense_slab_bytes"]),
+                 mem["reclaimed_by_exit"], mem["reclaimed_at_retire"],
+                 stats["admission_wait_mean"] or 0.0)
     assert stats["requests_finished"] == args.requests
 
 

@@ -140,11 +140,20 @@ def param_spec(params, cfg, mesh, fsdp: bool = True, mode: str = "default"):
 def cache_spec(cache, cfg, mesh, batch: int):
     """KV/state cache sharding.  batch > 1: shard batch over (pod,data);
     batch == 1 (long-context): shard the KV sequence dim over (pod,data)
-    — sequence-parallel decode — and replicate recurrent states."""
+    — sequence-parallel decode — and replicate recurrent states.
+
+    Paged layout (detected from the per-slot ``(B, W)`` kpos ring): the
+    shared k/v block stores are ``(L, num_blocks, bs, kv, hd)`` with NO
+    batch dim — blocks are fungible across slots — so the physical block
+    dim shards over (pod, data) instead (block-parallel store; GSPMD
+    routes each table-indexed gather to the owning shard), and the kpos
+    ring batch-shards like any per-slot leaf."""
     dp = batch_axes(mesh)
     dp_sz = axis_size(mesh, dp)
     batch_ok = divisible(batch, dp_sz)
     dp_ax = dp if batch_ok else None
+    paged = (isinstance(cache, dict)
+             and np.ndim(cache.get("kpos")) == 2)
 
     def rule(path, leaf):
         ndim = np.ndim(leaf)
@@ -155,10 +164,17 @@ def cache_spec(cache, cfg, mesh, batch: int):
             if isinstance(key, str):
                 name = key
                 break
-        if name == "kpos" or ndim <= 1:
+        if name == "kpos":
+            if paged and ndim == 2:                # per-slot (B, W) ring
+                return _spec(ndim, **{"0": dp_ax})
             return P()
-        if name in ("k", "v") and ndim == 5:       # (L, B, W, kv, hd)
-            if batch_ok:
+        if ndim <= 1:
+            return P()
+        if name in ("k", "v") and ndim == 5:
+            if paged:                              # (L, NB, bs, kv, hd)
+                return _spec(ndim, **{"1": dp if divisible(shape[1], dp_sz)
+                                      else None})
+            if batch_ok:                           # (L, B, W, kv, hd)
                 return _spec(ndim, **{"1": dp_ax})
             # sequence-parallel: shard the slot dim
             return _spec(ndim, **{"2": dp if divisible(shape[2], dp_sz)
@@ -209,6 +225,8 @@ def decode_state_spec(state, cfg, mesh, batch: int):
         if name in ("active", "ema_conf"):
             return _spec(ndim, **{"0": dp_ax})
         if name == "policy":          # (n_components, B, ...)
+            return _spec(ndim, **{"1": dp_ax})
+        if name == "block_tables":    # paged cache (n_components, B, nblk)
             return _spec(ndim, **{"1": dp_ax})
         # "thresholds" and the telemetry counters fall through: replicated
         return P()

@@ -76,6 +76,69 @@ def _write_decode(cache, k, v, slot):
     return {"k": ck, "v": cv}
 
 
+# ---------------------------------------------------------------------------
+# paged-layout variants (cache_layout="paged"): the per-layer cache leaf is a
+# SHARED block store (num_blocks, block_size, kv, hd) addressed through the
+# slot's block-table row ``table`` (B, nblk) — ring position p lives at
+# (table[b, p // bs], p % bs).  Dead/uncovered rows point at the trash block
+# 0: duplicate scatters there are nondeterministic but the per-slot kpos ring
+# masks those positions out of every read (masking, not zeroing, is the
+# coherence mechanism — see DESIGN.md).
+# ---------------------------------------------------------------------------
+
+def _write_decode_paged(cache, k, v, slot, table):
+    """One decode token through the block table.  slot = t % W (scalar);
+    k/v (B, 1, kv, hd)."""
+    bs = cache["k"].shape[1]
+    phys = jnp.take(table, slot // bs, axis=1)      # (B,) physical blocks
+    off = slot % bs
+    ck = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+    return {"k": ck, "v": cv}
+
+
+def _write_full_paged(cache, k, v, gather_idx, table):
+    """Prefill fill through the block table: gather the current logical
+    ring view, apply the same valid-masked merge as :func:`_write_full`,
+    scatter whole table rows back."""
+    if cache is None:
+        return None
+    B, nblk = table.shape
+    bs = cache["k"].shape[1]
+    valid = gather_idx >= 0
+    idx = jnp.maximum(gather_idx, 0)
+    sel = valid[None, :, None, None]
+
+    def merge(store, x):
+        cur = store[table].reshape((B, nblk * bs) + store.shape[2:])
+        new = jnp.where(sel, x[:, idx].astype(store.dtype), cur)
+        return store.at[table].set(
+            new.reshape((B, nblk, bs) + store.shape[2:]))
+
+    return {"k": merge(cache["k"], k), "v": merge(cache["v"], v)}
+
+
+def _paged_kv_view(cfg, cache, table):
+    """The slot-logical (B, W, kv, hd) ring view of a paged store — the
+    gather that makes the downstream attention (reference or Pallas
+    kernel) IDENTICAL to the dense layout's, and therefore bit-identical:
+    re-tiling attention to block granularity would change the online-
+    softmax accumulation order."""
+    if cfg.use_kernels:
+        from repro.kernels.ops import paged_gather
+        return (paged_gather(cache["k"], table,
+                             interpret=cfg.kernel_interpret),
+                paged_gather(cache["v"], table,
+                             interpret=cfg.kernel_interpret))
+    B, nblk = table.shape
+    bs = cache["k"].shape[1]
+
+    def view(store):
+        return store[table].reshape((B, nblk * bs) + store.shape[2:])
+
+    return view(cache["k"]), view(cache["v"])
+
+
 def _self_attention(cfg, params, h, ctx, cache):
     """Shared self-attention sublayer logic for full and decode modes."""
     x = norm_apply(params["norm"], cfg, h)
@@ -91,27 +154,40 @@ def _self_attention(cfg, params, h, ctx, cache):
             attend = pick_attend(cfg, S, S, differentiable=cache is None)
             out = attend(q, k, v, ctx["positions"], ctx["positions"],
                          window=cfg.attn_window, causal=True)
-        new_cache = (_write_full(cache, k, v, ctx["write_slots"])
-                     if cache is not None else None)
+        table = ctx.get("block_table")
+        if cache is None:
+            new_cache = None
+        elif table is not None:
+            new_cache = _write_full_paged(cache, k, v, ctx["write_slots"],
+                                          table)
+        else:
+            new_cache = _write_full(cache, k, v, ctx["write_slots"])
     else:
         t = ctx["t"]
         q, k, v = qkv_project(params, cfg, x,
                               rope_positions=jnp.full((1, 1), t))
         slot = ctx["slot"]
-        new_cache = _write_decode(cache, k, v, slot)
-        kpos = ctx["kpos"].at[slot].set(t)
+        table = ctx.get("block_table")
+        if table is not None:
+            new_cache = _write_decode_paged(cache, k, v, slot, table)
+            kv_k, kv_v = _paged_kv_view(cfg, new_cache, table)
+        else:
+            new_cache = _write_decode(cache, k, v, slot)
+            kv_k, kv_v = new_cache["k"], new_cache["v"]
+        # dense: lane-wide (W,) ring; paged: per-slot (B, W) ring
+        kpos = ctx["kpos"].at[..., slot].set(t)
         if cfg.use_kernels and q.shape[-1] % 8 == 0:
             from repro.kernels.ops import decode_attention_cache
             # ctx["live"] is the per-slot exit mask threaded down from the
             # carried DecodeState: dead slots' (b, h, ik) grid cells
             # early-out inside the kernel (zero-filled rows; live rows are
             # bit-identical — decode attention is batch-separable)
-            out = decode_attention_cache(q, new_cache["k"], new_cache["v"],
+            out = decode_attention_cache(q, kv_k, kv_v,
                                          t, kpos, window=cfg.attn_window,
                                          live=ctx.get("live"),
                                          interpret=cfg.kernel_interpret)
         else:
-            out = attend_decode(q, new_cache["k"], new_cache["v"], t, kpos,
+            out = attend_decode(q, kv_k, kv_v, t, kpos,
                                 window=cfg.attn_window)
     B, S = x.shape[0], x.shape[1]
     out = out.reshape(B, S, -1) @ params["wo"].astype(x.dtype)
@@ -129,12 +205,17 @@ def _attn_backfill(cfg, params, h, ctx, cache):
     B, S = x.shape[0], x.shape[1]
     k = k.reshape(B, S, cfg.n_kv_heads, hd)
     v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    table = ctx.get("block_table")
     if ctx["mode"] == "decode":
         from repro.models.layers import apply_rope
         k = apply_rope(k, jnp.full((1, 1), ctx["t"]), cfg.rope_theta)
+        if table is not None:
+            return _write_decode_paged(cache, k, v, ctx["slot"], table)
         return _write_decode(cache, k, v, ctx["slot"])
     from repro.models.layers import apply_rope
     k = apply_rope(k, ctx["positions"], cfg.rope_theta)
+    if table is not None:
+        return _write_full_paged(cache, k, v, ctx["write_slots"], table)
     return _write_full(cache, k, v, ctx["write_slots"])
 
 
@@ -254,7 +335,7 @@ def shared_attn_apply(cfg, params, h, ctx, cache):
         q = apply_rope(q, jnp.full((1, 1), t), cfg.rope_theta)
         k = apply_rope(k, jnp.full((1, 1), t), cfg.rope_theta)
         new_cache = _write_decode(cache, k, v, ctx["slot"])
-        kpos = ctx["kpos"].at[ctx["slot"]].set(t)
+        kpos = ctx["kpos"].at[..., ctx["slot"]].set(t)
         out = attend_decode(q, new_cache["k"], new_cache["v"], t, kpos)
     out = out.reshape(B, S, -1) @ attn_p["wo"].astype(x.dtype)
     h = h + out

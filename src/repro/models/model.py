@@ -172,6 +172,11 @@ class CascadeModel:
             return h, None, jnp.sum(auxs)
 
     def _run_segment(self, si, params, h, ctx, seg_cache, remat=False):
+        if ctx.get("block_tables") is not None:
+            # paged layout: each segment addresses the shared store through
+            # its OWN table row block (B, nblk) — exit depth m frees rows
+            # m+1.. while shallower components keep theirs
+            ctx = {**ctx, "block_table": ctx["block_tables"][si]}
         new_caches = []
         aux = jnp.zeros((), jnp.float32)
         for pi, (kind, n) in enumerate(self.segment_runs[si]):
@@ -185,6 +190,8 @@ class CascadeModel:
     def _backfill_segment(self, si, params, h, ctx, seg_cache):
         """Cheap path: update caches of segment si from the exit hidden state
         without computing the segment output (cascade state backfill)."""
+        if ctx.get("block_tables") is not None:
+            ctx = {**ctx, "block_table": ctx["block_tables"][si]}
         new_caches = []
         for pi, (kind, n) in enumerate(self.segment_runs[si]):
             block = BLOCKS[kind]
@@ -314,14 +321,17 @@ class CascadeModel:
     # ------------------------------------------------------------------
     # prefill
     # ------------------------------------------------------------------
-    def prefill(self, params, tokens, cache, extra=None):
+    def prefill(self, params, tokens, cache, extra=None, block_tables=None):
         """Full-sequence forward writing KV/state caches.
 
         Returns ([exit logits at last position (B,V)] * n_exits, new cache).
+        ``block_tables`` ((n_components, B, nblk) int32) switches the cache
+        writes to the paged layout; the returned ``kpos`` is then the
+        per-slot (B, W) ring instead of the lane-wide (W,).
         """
         cfg = self.cfg
         B, S = tokens.shape
-        W = cache["kpos"].shape[0]
+        W = cache["kpos"].shape[-1]
         positions = jnp.arange(S)
         # per-slot gather index == the absolute position held by the slot
         write_slots = jnp.asarray(_prefill_kpos(S, W))
@@ -330,6 +340,8 @@ class CascadeModel:
                "write_slots": write_slots,
                "cross": self._make_cross(params, extra or {}, "full"),
                "shared": params.get("shared"), "kpos": cache["kpos"]}
+        if block_tables is not None:
+            ctx["block_tables"] = jnp.asarray(block_tables, jnp.int32)
         logits = []
         new_segs = []
         for si in range(self.n_exits):
@@ -338,7 +350,38 @@ class CascadeModel:
             new_segs.append(nc)
             logits.append(self.exit_logits(params, si, h[:, -1:, :])[:, 0, :])
         kpos = jnp.asarray(_prefill_kpos(S, W))
+        if cache["kpos"].ndim == 2:
+            kpos = jnp.broadcast_to(kpos, (B, W))
         return logits, {"kpos": kpos, "segments": new_segs}
+
+    def prefill_into(self, params, tokens, cache, positions, write_slots,
+                     block_tables, extra=None):
+        """Single-request prefill at OFFSET positions into an occupied
+        paged lane (continuous-batching admission).
+
+        tokens: (1, S); ``positions`` (S,) the absolute positions the lane
+        cursor will have covered when the slot starts decoding;
+        ``write_slots`` (W,) the per-ring-slot absolute position to keep
+        (-1 = slot unwritten), computed by the engine; ``block_tables``
+        (n_components, 1, nblk) the admitted slot's table rows.  Writes go
+        through the slot's own blocks, so the rest of the lane's cache is
+        untouched.  Returns ([exit logits at last position (1, V)] *
+        n_exits, new segment stores).
+        """
+        positions = jnp.asarray(positions, jnp.int32)
+        h = self._embed(params, tokens, positions)
+        ctx = {"mode": "full", "positions": positions,
+               "write_slots": jnp.asarray(write_slots, jnp.int32),
+               "cross": self._make_cross(params, extra or {}, "full"),
+               "shared": params.get("shared"), "kpos": None,
+               "block_tables": jnp.asarray(block_tables, jnp.int32)}
+        logits, new_segs = [], []
+        for si in range(self.n_exits):
+            h, nc, _ = self._run_segment(si, params, h, ctx,
+                                         cache["segments"][si])
+            new_segs.append(nc)
+            logits.append(self.exit_logits(params, si, h[:, -1:, :])[:, 0, :])
+        return logits, new_segs
 
     # ------------------------------------------------------------------
     # decode
@@ -349,7 +392,7 @@ class CascadeModel:
         token: (B,1) int32; t: scalar int32 position.  Returns (h, ctx) for
         the segment primitives (``run_segment`` / ``backfill_segment``).
         """
-        W = cache["kpos"].shape[0]
+        W = cache["kpos"].shape[-1]
         slot = jnp.asarray(t, jnp.int32) % W
         h = self._embed(params, token,
                         jnp.asarray(t, jnp.int32)[None] if "pos_embed" in params
@@ -361,10 +404,13 @@ class CascadeModel:
         return h, ctx
 
     def commit_decode(self, cache, new_segs, t):
-        """Finish a decode step: record position t in the kpos ring."""
-        W = cache["kpos"].shape[0]
+        """Finish a decode step: record position t in the kpos ring (the
+        lane-wide (W,) ring, or every slot's row of the paged per-slot
+        (B, W) ring — dead slots' rows are masked by the kernels' live
+        mask and re-planned at admission, so the broadcast is safe)."""
+        W = cache["kpos"].shape[-1]
         slot = jnp.asarray(t, jnp.int32) % W
-        kpos = cache["kpos"].at[slot].set(jnp.asarray(t, jnp.int32))
+        kpos = cache["kpos"].at[..., slot].set(jnp.asarray(t, jnp.int32))
         return {"kpos": kpos, "segments": new_segs}
 
     def decode_step(self, params, token, t, cache, extra=None):

@@ -83,24 +83,46 @@ class DepthCompactor:
         return free_slots[int(np.argmin(dists))]
 
     # -- cohort placement (within-lane skip granularity) -----------------
-    def preferred_cohort(self, predicted_depth: float, n_cohorts: int) -> int:
+    def preferred_cohort(self, predicted_depth: float, n_cohorts: int,
+                         free_per_cohort: Optional[List[int]] = None) -> int:
         """Cohort band for a predicted exit depth: cohort c of C targets
         depths in [c, c+1) * n_components / C — shallow traffic lands in
         low cohorts, deep traffic in high ones, so per-cohort skip
-        predicates fire on homogeneous subgroups."""
+        predicates fire on homogeneous subgroups.
+
+        ``free_per_cohort`` (length ``n_cohorts``) is the paged-admission
+        fix: the count of slots each cohort can actually admit NOW (free
+        slot with block-pool coverage behind it).  Without it, the pure
+        depth-band answer could point continuous admission at a cohort
+        with no admissible slot, stalling the request a whole chunk even
+        while another cohort had both a slot and free blocks — worst-case
+        -slot thinking surviving into the paged layout.  With it, the
+        depth band only breaks ties among cohorts that CAN admit; if the
+        band cohort has capacity it wins unchanged."""
         if n_cohorts <= 1:
             return 0
         frac = predicted_depth / max(1, self.n_components - 1)
-        return int(np.clip(int(frac * n_cohorts), 0, n_cohorts - 1))
+        band = int(np.clip(int(frac * n_cohorts), 0, n_cohorts - 1))
+        if free_per_cohort is None:
+            return band
+        open_cohorts = [c for c in range(n_cohorts)
+                        if c < len(free_per_cohort) and free_per_cohort[c] > 0]
+        if not open_cohorts or band in open_cohorts:
+            return band
+        return min(open_cohorts, key=lambda c: (abs(c - band), c))
 
     def pick_slot(self, predicted_depth: float, free_slots: List[int],
-                  lane_batch: int, n_cohorts: int) -> int:
+                  lane_batch: int, n_cohorts: int,
+                  free_per_cohort: Optional[List[int]] = None) -> int:
         """Among a lane's free slots, pick the one whose cohort (contiguous
         ``lane_batch / n_cohorts`` slot ranges) best matches the request's
-        predicted depth.  n_cohorts == 1 degenerates to first-free."""
+        predicted depth.  n_cohorts == 1 degenerates to first-free;
+        ``free_per_cohort`` passes through to :meth:`preferred_cohort`
+        (admissibility-aware cohort choice for paged admission)."""
         if not free_slots:
             raise ValueError("no free slots")
-        pref = self.preferred_cohort(predicted_depth, n_cohorts)
+        pref = self.preferred_cohort(predicted_depth, n_cohorts,
+                                     free_per_cohort)
         return min(free_slots,
                    key=lambda s: (abs(s * n_cohorts // lane_batch - pref), s))
 

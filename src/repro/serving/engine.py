@@ -48,10 +48,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.exec import StagedExecutor, effective_cohorts
+from repro.core.exec import CONF_EMA_DECAY, StagedExecutor, effective_cohorts
 from repro.core.macs import segment_macs_per_token
 from repro.models.model import CascadeModel, extra_input_shapes
 from repro.serving.batching import DepthCompactor, cohort_capacity
+from repro.serving.paged import PagedCascadeCache
 from repro.serving.runtime import DeviceDecodeLoop
 from repro.utils import get_logger
 
@@ -125,16 +126,43 @@ class CascadeServingEngine:
         self.executor = StagedExecutor(model, cfg)
         self.decider = self.executor.decider
         self.mac_prefix = segment_macs_per_token(cfg, cache_len)
+        # paged KV layout: shared block stores + per-slot block tables.
+        # Admission claims pool blocks for exactly the positions a request
+        # will span; slot finish returns them at the next host sync (the
+        # dense layout's always-resident worst-case slab is the ablation).
+        self.paged = cfg.paged_cache.layout == "paged"
+        self.pcache = (PagedCascadeCache(model, cfg, lane_batch, n_lanes,
+                                         cache_len)
+                       if self.paged else None)
+        # dense-equivalent cache footprint (for the stats()/bench memory
+        # comparison, in both layouts)
+        tmpl = jax.eval_shape(
+            lambda: model.init_cache(lane_batch, cache_len))
+        self._dense_cache_bytes = n_lanes * int(sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree_util.tree_leaves(tmpl["segments"])))
         self.lanes = []
-        for _ in range(n_lanes):
-            self.lanes.append({
-                "cache": model.init_cache(lane_batch, cache_len),
+        for i in range(n_lanes):
+            lane = {
                 "slots": [_Slot() for _ in range(lane_batch)],
                 "state": self.executor.init_state(
-                    lane_batch, mac_weights=self.mac_prefix),
-            })
+                    lane_batch, mac_weights=self.mac_prefix,
+                    block_tables=(self.pcache.device_tables(i)
+                                  if self.paged else None)),
+            }
+            if self.paged:
+                lane["cache"] = None
+                lane["kpos"] = self.pcache.fresh_kpos()
+            else:
+                lane["cache"] = model.init_cache(lane_batch, cache_len)
+            self.lanes.append(lane)
         self.queue: List[Request] = []
         self.finished: Dict[int, dict] = {}
+        # admission-latency accounting (ticks between submit and admit) and
+        # lanes whose block tables changed since their state last synced
+        self._tick = 0
+        self._submit_tick: Dict[int, int] = {}
+        self._tables_stale: set = set()
         # live thresholds (autotune): engine-wide vector pushed into every
         # lane's DecodeState as plain data — None until a controller (or a
         # caller) pushes one, in which case the config's static vector is
@@ -159,6 +187,11 @@ class CascadeServingEngine:
         # buffers, and in-place updates keep decode wall-clock honest
         self._prefill = jax.jit(self._prefill_impl, donate_argnums=(2, 3))
         self._decode = jax.jit(self._decode_impl, donate_argnums=(2, 3))
+        # continuous (single-slot) admission prefill: only the shared block
+        # stores are donated — the lane's kpos buffer stays live on the
+        # host side, which is why this takes segments rather than a cache
+        self._slot_prefill = jax.jit(self._slot_prefill_impl,
+                                     donate_argnums=(2,))
         self.loop = (DeviceDecodeLoop(model, cfg, chunk=chunk,
                                       cache_len=cache_len, mesh=mesh)
                      if runtime == "device" else None)
@@ -188,6 +221,7 @@ class CascadeServingEngine:
         self._decode_steps = 0
         self._skip_opportunities = 0
         self._skip_opportunity_total = 0
+        self._admit_waits: List[int] = []
 
     # -- jitted cores ---------------------------------------------------
     def _prefill_impl(self, params, tokens, cache, state, extra):
@@ -200,8 +234,41 @@ class CascadeServingEngine:
                                                     state, extra)
         return d.prediction, d.exit_index, d.confidence, cache, state
 
+    def _slot_prefill_impl(self, params, tokens, segments, positions,
+                           write_slots, tables, extra):
+        return self.model.prefill_into(
+            params, tokens, {"segments": segments, "kpos": None},
+            positions, write_slots, tables, extra)
+
+    # -- cache layout plumbing -------------------------------------------
+    def _lane_cache(self, lane):
+        """The cache pytree a dispatch consumes: the lane's private slab
+        (dense) or its kpos ring composed over the shared block stores
+        (paged).  Lanes dispatch serially, so composing at dispatch time
+        always picks up the stores adopted back from the previous lane."""
+        if self.paged:
+            return self.pcache.lane_cache(lane["kpos"])
+        return lane["cache"]
+
+    def _take_cache(self, lane, cache):
+        """Adopt a dispatch's (donated-in, returned-out) cache."""
+        if self.paged:
+            lane["kpos"] = self.pcache.adopt(cache)
+        else:
+            lane["cache"] = cache
+
+    def _sync_tables(self, lane, lane_id: int):
+        """Push rebuilt block tables into the lane's DecodeState after
+        release/alloc changed its rows — a data swap (same (K, B, nblk)
+        int32 shape), never a retrace."""
+        if self.paged and lane_id in self._tables_stale:
+            lane["state"] = lane["state"].replace(
+                block_tables=self.pcache.device_tables(lane_id))
+            self._tables_stale.discard(lane_id)
+
     # -- public API -----------------------------------------------------
     def submit(self, req: Request):
+        self._submit_tick.setdefault(req.rid, self._tick)
         self.queue.append(req)
 
     def _predict_depth(self, req: Request) -> float:
@@ -212,7 +279,13 @@ class CascadeServingEngine:
         hint = (req.extra or {}).get("predicted_depth")
         return self.compactor.predict_depth(hint)
 
+    def _record_admit(self, req: Request):
+        sub = self._submit_tick.pop(req.rid, self._tick)
+        self._admit_waits.append(self._tick - sub)
+
     def _admit(self):
+        if self.paged:
+            return self._admit_paged()
         while self.queue:
             free = [i for i, lane in enumerate(self.lanes)
                     if any(s.done for s in lane["slots"])]
@@ -235,8 +308,189 @@ class CascadeServingEngine:
             # cache is shared per-lane, so we prefill the whole lane
             # when admission changes (simple + correct).
             lane["dirty"] = True
+            self._record_admit(req)
 
-    def _finish_if_done(self, s: _Slot, pos: int, lane_id: int):
+    # -- paged admission --------------------------------------------------
+    def _free_per_cohort(self, lane) -> List[int]:
+        per = self.lane_batch // self.cohorts
+        return [sum(1 for i in range(c * per, (c + 1) * per)
+                    if lane["slots"][i].done)
+                for c in range(self.cohorts)]
+
+    def _pad_prompt(self, n: int) -> int:
+        """Continuous-admission prompts pad to a power of two (>= 2) so the
+        B=1 slot-prefill jit compiles a bounded set of shapes."""
+        return max(2, 1 << max(0, int(n - 1).bit_length()))
+
+    def _continuous_feasible(self, lane_id: int, req: Request) -> bool:
+        """Can ``req`` join this LIVE lane between chunks?  Needs a free
+        slot, enough decoded history for the padded prompt's offset
+        positions (P_pad <= t), and pool coverage for exactly the
+        positions the slot will span."""
+        lane = self.lanes[lane_id]
+        if not any(s.done for s in lane["slots"]):
+            return False
+        t0 = int(np.asarray(lane["state"].t))
+        P_pad = self._pad_prompt(len(req.prompt))
+        if P_pad > t0:
+            return False
+        need = self.pcache.blocks_needed(t0 - P_pad,
+                                         t0 + req.max_new_tokens)
+        return self.pcache.can_admit(need)
+
+    def _lane_plan_fits(self, lane_id: int, req: Request) -> bool:
+        """Whole-lane path feasibility: would the lane's re-prefill plan
+        (every live slot + ``req``, padded to the common context length)
+        fit the pool once the lane's current reservations are released?
+        Allocation itself happens at prefill time, when the true common
+        length is known."""
+        lane = self.lanes[lane_id]
+        ctxs = [(len(s.request.prompt) + len(s.generated),
+                 max(1, s.request.max_new_tokens - len(s.generated)))
+                for s in lane["slots"] if not s.done]
+        ctxs.append((len(req.prompt), req.max_new_tokens))
+        S = max(2, max(c for c, _ in ctxs))
+        need = sum(self.pcache.blocks_needed(0, S + rem)
+                   for _, rem in ctxs)
+        have = self.pcache.pool.free_blocks + sum(
+            self.pcache.slot_blocks(lane_id, i)
+            for i in range(self.lane_batch))
+        return need <= have
+
+    def _admit_paged(self):
+        """Admission under the paged layout.  A request needs a free slot
+        AND block coverage for the positions it will actually span — not a
+        worst-case-length lane slot.  Two paths:
+
+        * live lane → CONTINUOUS single-slot admission: blocks for
+          ``[t - P_pad, t + budget)`` are claimed now and the prompt
+          prefills into them between decode dispatches, leaving sibling
+          streams untouched (no whole-lane re-prefill).
+        * empty/dirty lane → the dense whole-lane path (bit-identity with
+          the dense ablation for lanes admitted this way), feasibility-
+          checked against the pool.
+
+        Head-of-queue blocking: if the head fits nowhere the queue waits
+        (FIFO — keeps exit accounting comparable with the dense ablation).
+        Pool exhaustion therefore backpressures admission; it can never
+        corrupt resident slots, because alloc_slot is all-or-nothing."""
+        while self.queue:
+            req = self.queue[0]
+            if not self.pcache.fits_ever(
+                    0, max(2, len(req.prompt)) + req.max_new_tokens):
+                raise ValueError(
+                    f"request rid={req.rid} can never fit: prompt + "
+                    f"max_new_tokens spans more blocks than the pool owns; "
+                    f"raise paged_cache.num_blocks or shrink the request")
+            depth = self._predict_depth(req)
+            whole = [i for i, ln in enumerate(self.lanes)
+                     if (ln.get("dirty") or all(s.done for s in ln["slots"]))
+                     and any(s.done for s in ln["slots"])]
+            live = [i for i, ln in enumerate(self.lanes)
+                    if i not in whole and any(s.done for s in ln["slots"])]
+            cands = [i for i in live if self._continuous_feasible(i, req)]
+            if cands:
+                lane_id = self.compactor.assign(depth, cands)
+                self._admit_continuous(lane_id, req, depth)
+            else:
+                cands = [i for i in whole if self._lane_plan_fits(i, req)]
+                if not cands:
+                    break
+                lane_id = self.compactor.assign(depth, cands)
+                lane = self.lanes[lane_id]
+                free_slots = [i for i, s in enumerate(lane["slots"])
+                              if s.done]
+                slot = lane["slots"][self.compactor.pick_slot(
+                    depth, free_slots, self.lane_batch, self.cohorts,
+                    free_per_cohort=self._free_per_cohort(lane))]
+                slot.request = req
+                slot.generated = []
+                slot.exit_depths = []
+                slot.done = False
+                lane["dirty"] = True
+            self.queue.pop(0)
+            self._record_admit(req)
+
+    def _admit_continuous(self, lane_id: int, req: Request, depth: float):
+        """Prefill ``req`` into a single freed slot of a live lane.
+
+        The prompt left-pads to ``P_pad`` and runs a B=1 full-mode forward
+        at absolute positions ``[t - P_pad, t)`` writing ONLY through the
+        slot's freshly allocated blocks; its kpos row masks everything it
+        didn't write.  The sanctioned divergence from the dense ablation
+        (which must re-prefill the whole lane and restart sibling
+        alignment to a new common length): the admitted stream's history
+        starts at an offset, so its token stream is its own — sibling
+        streams are untouched, which is the point.  Telemetry shadow rows
+        for this prefill are skipped (one B=1 decision; the decode-time
+        telemetry picks the slot up on its first step)."""
+        lane = self.lanes[lane_id]
+        state = lane["state"]
+        t0 = int(np.asarray(state.t))
+        P = len(req.prompt)
+        P_pad = self._pad_prompt(P)
+        free_slots = [i for i, s in enumerate(lane["slots"]) if s.done]
+        slot_idx = self.compactor.pick_slot(
+            depth, free_slots, self.lane_batch, self.cohorts,
+            free_per_cohort=self._free_per_cohort(lane))
+        ok = self.pcache.alloc_slot(lane_id, slot_idx, t0 - P_pad,
+                                    t0 + req.max_new_tokens)
+        assert ok, "continuous admission raced the feasibility check"
+        start = t0 - P_pad
+        toks = np.zeros((1, P_pad), np.int32)
+        toks[0, P_pad - P:] = req.prompt
+        W = self.pcache.W
+        # ring slot -> (kept token index, kept absolute position): newest
+        # position wins on ring wrap, everything unwritten stays masked
+        write_slots = np.full((W,), -1, np.int32)
+        krow = np.full((W,), -1, np.int32)
+        for p in range(max(start, t0 - W), t0):
+            write_slots[p % W] = p - start
+            krow[p % W] = p
+        tables = self.pcache.device_tables(lane_id)[
+            :, slot_idx:slot_idx + 1, :]
+        logits, new_segs = self._slot_prefill(
+            self.params, jnp.asarray(toks), self.pcache.segments,
+            jnp.asarray(start + np.arange(P_pad, dtype=np.int32)),
+            jnp.asarray(write_slots), tables, self._extra(1))
+        self.pcache.segments = new_segs
+        d, _ = self.decider.decide_with_carry(
+            logits, thresholds=state.thresholds,
+            state=self.decider.measure.init_state(
+                self.cfg.cascade.n_components, 1),
+            active=jnp.ones((1,), bool))
+        # merge the B=1 prefill decision into the lane's carried state:
+        # the prefill decision seeds the stateful-measure streak exactly
+        # like whole-lane prefill does (exec._carry_forward)
+        policy = state.policy
+        if policy is not None and d.state is not None:
+            policy = jax.tree_util.tree_map(
+                lambda full, one: full.at[..., slot_idx].set(one[..., 0]),
+                policy, d.state)
+        conf = float(np.asarray(d.confidence)[0])
+        ema = state.ema_conf.at[slot_idx].set(
+            (1.0 - CONF_EMA_DECAY) * conf)
+        lane["kpos"] = lane["kpos"].at[slot_idx].set(jnp.asarray(krow))
+        s = lane["slots"][slot_idx]
+        s.request = req
+        s.generated = []
+        s.exit_depths = []
+        s.done = False
+        lane["state"] = state.replace(
+            active=jnp.asarray(self._live_mask(lane)),
+            policy=policy, ema_conf=ema,
+            block_tables=self.pcache.device_tables(lane_id))
+        self._tables_stale.discard(lane_id)
+        tok = int(np.asarray(d.prediction)[0])
+        exit_idx = int(np.asarray(d.exit_index)[0])
+        if not s.generated:
+            self.compactor.observe_prefill_exit(float(exit_idx))
+        s.generated.append(tok)
+        s.exit_depths.append(exit_idx)
+        self._finish_if_done(s, t0, lane_id, slot_idx)
+
+    def _finish_if_done(self, s: _Slot, pos: int, lane_id: int,
+                        slot_idx: int):
         if (len(s.generated) >= s.request.max_new_tokens
                 or pos >= self.cache_len - 1):
             s.done = True
@@ -249,6 +503,15 @@ class CascadeServingEngine:
             # population prior so the lane doesn't keep repelling traffic
             # that no longer matches its drained residents
             self.compactor.observe_retire(lane_id)
+            if self.paged:
+                # skip-aware reclamation at the first host sync after the
+                # slot finished (mid-chunk under the device runtime):
+                # components the cascade never answered from release as
+                # reclaimed_by_exit, the rest at retire (DESIGN.md)
+                md = max(s.exit_depths) if s.exit_depths else None
+                self.pcache.release_slot(lane_id, slot_idx,
+                                         max_exit_depth=md)
+                self._tables_stale.add(lane_id)
 
     def _live_mask(self, lane) -> np.ndarray:
         return np.array([not s.done for s in lane["slots"]])
@@ -270,7 +533,25 @@ class CascadeServingEngine:
         toks = np.zeros((self.lane_batch, S), np.int32)
         for i, p in enumerate(prompts):
             toks[i, -len(p):] = p          # left-pad (simplest alignment)
-        lane["cache"] = self.model.init_cache(self.lane_batch, self.cache_len)
+        if self.paged:
+            # whole-lane re-prefill restarts every resident at the common
+            # length: release ALL the lane's reservations (no slot keeps
+            # coverage planned for the previous alignment), then claim
+            # coverage for each live slot's full span at the new one.
+            # Admission feasibility (_lane_plan_fits) guaranteed this fits.
+            for i in range(self.lane_batch):
+                self.pcache.release_slot(lane_id, i)
+            for i, s in enumerate(slots):
+                if s.done:
+                    continue
+                rem = max(1, s.request.max_new_tokens - len(s.generated))
+                ok = self.pcache.alloc_slot(lane_id, i, 0, S + rem)
+                assert ok, "lane prefill outgrew its admission plan"
+            lane["kpos"] = self.pcache.fresh_kpos()
+            cache_in = self.pcache.lane_cache(lane["kpos"])
+            self._tables_stale.discard(lane_id)
+        else:
+            cache_in = self.model.init_cache(self.lane_batch, self.cache_len)
         extra = self._extra(self.lane_batch)
         # re-prefill restarts the lane's DecodeState (streaks, EMA, cursors);
         # the prefill decision itself counts as the streak's first step.
@@ -283,12 +564,14 @@ class CascadeServingEngine:
             self.lane_batch, active=self._live_mask(lane),
             mac_weights=self.mac_prefix,
             telemetry=(old.tel if old is not None
-                       else StagedExecutor._AUTO_TELEMETRY))
+                       else StagedExecutor._AUTO_TELEMETRY),
+            block_tables=(self.pcache.device_tables(lane_id)
+                          if self.paged else None))
         if old is not None and old.thresholds is not None:
             state = state.replace(thresholds=old.thresholds)
         tok, exit_idx, _conf, cache, state = self._prefill(
-            self.params, jnp.asarray(toks), lane["cache"], state, extra)
-        lane["cache"] = cache
+            self.params, jnp.asarray(toks), cache_in, state, extra)
+        self._take_cache(lane, cache)
         lane["state"] = state
         tok = np.asarray(tok)
         exit_idx = np.asarray(exit_idx)
@@ -303,7 +586,8 @@ class CascadeServingEngine:
                 s.exit_depths.append(int(exit_idx[i]))
                 # the prefill token counts toward max_new_tokens like any
                 # decode tick — an in-flight slot near its limit may finish
-                self._finish_if_done(s, S, lane_id)
+                self._finish_if_done(s, S, lane_id, i)
+        self._sync_tables(lane, lane_id)
         lane["dirty"] = False
 
     def _extra(self, batch):
@@ -318,6 +602,7 @@ class CascadeServingEngine:
         lane inside the device loop (``runtime="device"``).  With a
         ThresholdController attached, the tick ends with its (rarely
         firing) telemetry → solver → threshold-push check."""
+        self._tick += 1
         self._admit()
         for lane_id, lane in enumerate(self.lanes):
             if all(s.done for s in lane["slots"]):
@@ -407,9 +692,11 @@ class CascadeServingEngine:
         live = self._live_mask(lane)
         state = lane["state"].replace(active=jnp.asarray(live))
         run_before = np.asarray(state.segments_run)
+        if self.paged:
+            self.pcache.pool.begin_chunk()
         t0 = time.perf_counter()
         tok, exit_idx, conf, cache, state = self._decode(
-            self.params, token, lane["cache"], state,
+            self.params, token, self._lane_cache(lane), state,
             self._extra(self.lane_batch))
         tok = np.asarray(tok)              # forces device sync
         exit_idx = np.asarray(exit_idx)
@@ -422,7 +709,7 @@ class CascadeServingEngine:
         else:                              # first dispatch pays compilation
             self._compile_seconds += dt
             self._decode_warm = True
-        lane["cache"] = cache
+        self._take_cache(lane, cache)
         lane["state"] = state
         depths = exit_idx[live]
         ran = np.asarray(state.segments_run) - run_before
@@ -437,7 +724,10 @@ class CascadeServingEngine:
                 continue
             s.generated.append(int(tok[i]))
             s.exit_depths.append(int(exit_idx[i]))
-            self._finish_if_done(s, int(state.t), lane_id)
+            self._finish_if_done(s, int(state.t), lane_id, i)
+        self._sync_tables(lane, lane_id)
+        if self.paged:
+            self.pcache.pool.end_chunk()
 
     def _device_tick(self, lane, lane_id: int):
         """Decode up to ``chunk`` tokens for a lane inside the device
@@ -452,10 +742,12 @@ class CascadeServingEngine:
              for s in slots], np.int32)
         state = lane["state"].replace(active=jnp.asarray(live))
         run_before = np.asarray(state.segments_run)
+        if self.paged:
+            self.pcache.pool.begin_chunk()
         chunk, cache, state = self.loop.run_chunk(
-            self.params, token, lane["cache"], state, remaining,
+            self.params, token, self._lane_cache(lane), state, remaining,
             self._extra(self.lane_batch))
-        lane["cache"] = cache
+        self._take_cache(lane, cache)
         lane["state"] = state
         n = chunk.n_steps
         n_tok = int(chunk.live.sum())
@@ -465,6 +757,8 @@ class CascadeServingEngine:
             self._decode_seconds += chunk.seconds
             self._decode_tokens += n_tok
         if not n:
+            if self.paged:
+                self.pcache.pool.end_chunk()
             return
         if not chunk.compiled:
             # like the host tick: the compile chunk is excluded from every
@@ -484,7 +778,10 @@ class CascadeServingEngine:
                 if chunk.live[step, i]:
                     s.generated.append(int(chunk.tokens[step, i]))
                     s.exit_depths.append(int(chunk.exits[step, i]))
-            self._finish_if_done(s, pos, lane_id)
+            self._finish_if_done(s, pos, lane_id, i)
+        self._sync_tables(lane, lane_id)
+        if self.paged:
+            self.pcache.pool.end_chunk()
 
     def run(self, max_ticks: int = 1000):
         for _ in range(max_ticks):
@@ -536,6 +833,28 @@ class CascadeServingEngine:
             "use_kernels": self.cfg.use_kernels,
             "lane_batch": self.lane_batch,
             "chunk": self.chunk if self.runtime == "device" else 1,
+            "cache_layout": "paged" if self.paged else "dense",
+            # ticks a request waited between submit and admission (0 =
+            # admitted the same tick) — the continuous-batching win metric
+            "admission_wait_ticks": list(self._admit_waits),
+            "admission_wait_mean": (float(np.mean(self._admit_waits))
+                                    if self._admit_waits else None),
+            # block-pool occupancy (paged) vs the always-resident slab
+            # footprint (dense) — same keys so the bench gate can compare
+            "memory": (self.pcache.stats() if self.paged else {
+                "cache_layout": "dense",
+                "num_blocks": None,
+                "block_size": None,
+                "block_bytes": None,
+                "blocks_free": None,
+                "blocks_used": None,
+                "peak_blocks_used": None,
+                "reclaimed_by_exit": 0,
+                "reclaimed_at_retire": 0,
+                "blocks_reclaimed_per_chunk": [],
+                "peak_cache_bytes": self._dense_cache_bytes,
+                "dense_slab_bytes": self._dense_cache_bytes,
+            }),
             # per-lane mean of the carried confidence EMA (slot difficulty
             # telemetry from DecodeState)
             "lane_conf_ema": [

@@ -31,6 +31,16 @@ The serving sweep is the skip-aware hot-path ablation (persisted to
   (``check_bench_serving.py`` gates both, plus the exit-reclamation
   counters recorded per row).
 
+The cross-model escalation ablation (``repro.escalate``) rides in the same
+summary under an ``escalation`` section: a 2-stage tier (2-layer draft →
+4-layer target, same vocab) is pinned bit-identical to the standalone
+engines at both escalation corners (``never``/``always``), then a
+matched-accuracy operating point is solved on a labeled two-stage
+population priced with the REAL per-stage analytic MAC prefixes
+(``segment_macs_per_token``) composed by ``compose_mac_prefix`` — the gate
+requires the solved tier to spend strictly fewer average MACs than
+big-only at no accuracy loss (``check_bench_serving.py``).
+
 All exit decisions route through the one ExitDecider resolved from the
 config's registry strings; per-lane decode state (patience streaks
 included) rides in the carried DecodeState.
@@ -95,6 +105,169 @@ def _drive(cfg, model, params, n_req=6, max_new=8, runtime="host",
 
 def _streams(eng):
     return {rid: tuple(r["tokens"]) for rid, r in eng.finished.items()}
+
+
+def _escalation_ablation(rows, quick):
+    """Cross-model escalation tier (repro.escalate) ablation.
+
+    Two halves, both deterministic:
+
+    (i)  REAL tier parity corners — a 2-stage tier (2-layer draft,
+         4-layer target, shared vocab) run at escalation=0.0 must stream
+         bit-identical to the draft alone, and at escalation=1.1 with
+         the draft's intra thresholds at the 1.1 sentinel (every token
+         reaches the final component, then defers at token 0, so the
+         committed prefix is empty) bit-identical to the target alone.
+         A mid-threshold run (median of the draft's observed final
+         confidences) records the replay accounting: escalations,
+         replayed-prefix prefill positions, discarded draft tokens.
+
+    (ii) matched-accuracy MACs — the heterogeneous-cost solve on a
+         labeled synthetic two-stage population priced with the REAL
+         per-stage analytic prefixes (``segment_macs_per_token`` on the
+         two configs, chained by ``compose_mac_prefix`` with a replay
+         overhead).  The population encodes the regime escalation
+         exploits (the paper's §5 calibration: the draft is *right* when
+         it is *confident*, and there the cheap answer beats the target's
+         flat accuracy), so ``solve_epsilon(ε=0)`` must find thresholds
+         whose average MACs are strictly below always-running the target
+         at no accuracy loss — gated by ``check_bench_serving.py``.
+         Costs are normalized to target-final = 1.0.
+    """
+    from repro.autotune import (ExitHistogram, compose_mac_prefix,
+                                solve_epsilon, split_tier_thresholds)
+    from repro.core.macs import segment_macs_per_token
+    from repro.escalate import ModelCascadeTier
+
+    cfg_s = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
+    cfg_b = reduced(get_config("qwen2.5-3b"),
+                    n_layers=4).replace(dtype="float32")
+    m_s = build_model(cfg_s)
+    p_s = m_s.init(jax.random.PRNGKey(0))
+    m_b = build_model(cfg_b)
+    p_b = m_b.init(jax.random.PRNGKey(1))
+
+    n_req, max_new, cache_len, lane_batch = 4, 6, 32, 4
+    prng = np.random.default_rng(3)
+    prompts = [prng.integers(0, cfg_s.vocab_size, 6).astype(np.int32)
+               for _ in range(n_req)]
+
+    def alone(cfg, model, params):
+        eng = CascadeServingEngine(cfg, model, params,
+                                   lane_batch=lane_batch, n_lanes=1,
+                                   cache_len=cache_len)
+        for i in range(n_req):
+            eng.submit(Request(rid=i, prompt=prompts[i],
+                               max_new_tokens=max_new))
+        eng.run(300)
+        return eng
+
+    def tier_run(ths0, esc_th):
+        e0 = CascadeServingEngine(
+            cfg_s.with_cascade(thresholds=ths0)
+                 .with_escalation(enabled=True, threshold=esc_th),
+            m_s, p_s, lane_batch=lane_batch, n_lanes=1,
+            cache_len=cache_len)
+        e1 = CascadeServingEngine(
+            cfg_b.with_cascade(thresholds=(0.5, 0.0)),
+            m_b, p_b, lane_batch=lane_batch, n_lanes=1,
+            cache_len=cache_len)
+        tier = ModelCascadeTier([e0, e1])
+        for i in range(n_req):
+            tier.submit(Request(rid=i, prompt=prompts[i],
+                                max_new_tokens=max_new))
+        fin = tier.run(400)
+        return tier, {rid: tuple(r["tokens"]) for rid, r in fin.items()}
+
+    small = alone(cfg_s.with_cascade(thresholds=(0.5, 0.0)), m_s, p_s)
+    big = alone(cfg_b.with_cascade(thresholds=(0.5, 0.0)), m_b, p_b)
+    _, never_streams = tier_run((0.5, 0.0), 0.0)
+    _, always_streams = tier_run((1.1, 0.0), 1.1)
+    never_ok = _streams(small) == never_streams
+    always_ok = _streams(big) == always_streams
+    rows.append(("llm_cascade/escalation/parity", 0.0,
+                 f"never_identical={never_ok};"
+                 f"always_identical={always_ok}"))
+
+    # mid threshold: the median observed final confidence splits the
+    # draft's answers roughly in half between commit and defer
+    confs = [c for r in small.finished.values() for c in r["confs"]]
+    mid_th = float(np.median(confs))
+    mid_tier, _ = tier_run((0.5, 0.0), mid_th)
+    mst = mid_tier.stats()
+    esc1 = mst["stages"][1]["escalation"]
+    rows.append(("llm_cascade/escalation/mid", 0.0,
+                 f"th={mid_th:.4g};"
+                 f"escalations={mst['escalations_total']};"
+                 f"replayed_prefill={esc1['prefill_positions_replayed']};"
+                 f"discarded={mst['discarded_draft_tokens']}"))
+
+    # --- matched-accuracy solve on real per-stage MAC prefixes ---------
+    p0 = segment_macs_per_token(cfg_s, cache_len)
+    p1 = segment_macs_per_token(cfg_b, cache_len)
+    scale = p1[-1]
+    # replay overhead: re-prefilling the committed prefix into the target,
+    # amortized per escalated token — priced at 10% of the target's depth
+    overhead = 0.1 * p1[-1]
+    prefix = [x / scale
+              for x in compose_mac_prefix([p0, p1], [overhead])]
+    n_samples = 4096 if quick else 16384
+    srng = np.random.default_rng(7)
+    z = srng.uniform(size=n_samples)            # latent token difficulty
+
+    def noisy(base, slope, sd):
+        return np.clip(base - slope * z
+                       + srng.normal(0.0, sd, size=n_samples),
+                       0.0, 0.999)
+
+    c0i = noisy(0.90, 0.80, 0.08)               # draft intra confidence
+    c0f = noisy(1.05, 1.00, 0.05)               # escalation axis
+    c1i = noisy(1.00, 0.70, 0.08)               # target intra confidence
+    u = srng.uniform(size=(4, n_samples))
+    a0i = (u[0] < 0.35 + 0.55 * c0i).astype(np.float64)
+    a0f = (u[1] < 0.55 + 0.44 * c0f).astype(np.float64)  # calibrated draft
+    a1i = (u[2] < 0.50 + 0.42 * c1i).astype(np.float64)
+    a1f = (u[3] < 0.92 - 0.10 * z).astype(np.float64)    # flat-ish target
+    hist = ExitHistogram.from_samples(
+        confidences=[c0i, c0f, c1i],
+        agrees=[a0i, a0f, a1i, a1f],            # final row => labeled
+        mac_prefix=prefix, bins=32)
+    res = solve_epsilon(hist, 0.0)
+    tier_macs, tier_acc = hist.evaluate(res.edges)
+    ths0, esc_th, ths1 = split_tier_thresholds(res.thresholds, len(p0))
+    big_macs, big_acc = 1.0, float(a1f.mean())
+    small_macs, small_acc = p0[-1] / scale, float(a0f.mean())
+    rows.append(("llm_cascade/escalation/tier", 0.0,
+                 f"avg_macs={tier_macs:.3f};accuracy={tier_acc:.3f};"
+                 f"feasible={res.feasible}"))
+    rows.append(("llm_cascade/escalation/big_only", 0.0,
+                 f"avg_macs={big_macs:.3f};accuracy={big_acc:.3f}"))
+    rows.append(("llm_cascade/escalation/small_only", 0.0,
+                 f"avg_macs={small_macs:.3f};accuracy={small_acc:.3f}"))
+    return {
+        "draft_layers": cfg_s.n_layers,
+        "target_layers": cfg_b.n_layers,
+        "never_streams_identical": bool(never_ok),
+        "always_streams_identical": bool(always_ok),
+        "mid_threshold": mid_th,
+        "mid_escalations": mst["escalations_total"],
+        "mid_replayed_prefill": esc1["prefill_positions_replayed"],
+        "mid_discarded_draft_tokens": mst["discarded_draft_tokens"],
+        "epsilon": 0.0,
+        "feasible": bool(res.feasible),
+        "tier_avg_macs": float(tier_macs),
+        "tier_accuracy": float(tier_acc),
+        "big_avg_macs": float(big_macs),
+        "big_accuracy": float(big_acc),
+        "small_avg_macs": float(small_macs),
+        "small_accuracy": float(small_acc),
+        "thresholds_stage0": list(ths0),
+        "escalation_threshold": float(esc_th),
+        "thresholds_stage1": list(ths1),
+        "mac_prefix": list(prefix),
+        "n_samples": n_samples,
+        "bins": 32,
+    }
 
 
 def run(quick: bool = False):
@@ -305,6 +478,7 @@ def run(quick: bool = False):
             "compile_seconds_device": major_st["compile_seconds"],
             **paged_row,
         })
+    escalation = _escalation_ablation(rows, quick)
     LAST_SERVING_SUMMARY = {
         "bench": "llm_cascade",
         "arch": scfg.name,
@@ -317,5 +491,6 @@ def run(quick: bool = False):
         "paged_block_size": PAGED_BLOCK,
         "quick": bool(quick),
         "rows": serving_rows,
+        "escalation": escalation,
     }
     return rows

@@ -32,9 +32,22 @@ When the summary carries an ``autotune`` section (written whenever
   with ZERO additional host syncs per decode chunk (counted, not
   assumed) and bit-identical token streams.
 
+When the summary carries an ``escalation`` section (written whenever the
+llm_cascade bench runs), the cross-model tier is validated too:
+
+* both parity corners bit-identical — the tier at escalation=0.0 streams
+  exactly the draft engine's tokens, and at the 1.1 always-defer sentinel
+  exactly the target engine's (deterministic, no noise tolerance);
+* the matched-accuracy solve (ε=0 on the labeled population priced with
+  the real composed MAC prefixes) is feasible, spends STRICTLY fewer
+  average MACs than always running the target, and gives up no accuracy
+  doing it.
+
 Exit code 1 on violation so CI can retry once — the strict margins are
 real but finite (~5–10%), and a shared runner's scheduler noise can eat
-them in a single unlucky run.
+them in a single unlucky run.  (The escalation gates are deterministic
+tick/count/histogram quantities; if they fail, the retry will fail too —
+that is a real regression, not noise.)
 
     python scripts/check_bench_serving.py [path]
 """
@@ -109,6 +122,45 @@ def check_autotune(auto) -> bool:
            for b in budgets])
     print(f"autotune telemetry ratio: {ratio:.3f} "
           f"(extra syncs {tel.get('extra_host_syncs_per_chunk_on')})")
+    return ok
+
+
+def check_escalation(esc) -> bool:
+    ok = True
+    if not esc.get("never_streams_identical"):
+        print("escalation: tier at threshold 0.0 diverged from the draft "
+              "engine's streams", file=sys.stderr)
+        ok = False
+    if not esc.get("always_streams_identical"):
+        print("escalation: tier at the 1.1 sentinel diverged from the "
+              "target engine's streams", file=sys.stderr)
+        ok = False
+    if not esc.get("feasible"):
+        print("escalation: ε=0 solve infeasible — never-exit is always a "
+              "feasible corner, so the histogram is malformed",
+              file=sys.stderr)
+        ok = False
+    tier_macs = float(esc.get("tier_avg_macs") or 1e30)
+    tier_acc = float(esc.get("tier_accuracy") or 0.0)
+    big_macs = float(esc.get("big_avg_macs") or 0.0)
+    big_acc = float(esc.get("big_accuracy") or 1.0)
+    if not tier_macs < big_macs:
+        print(f"escalation: tier not strictly cheaper than target-only: "
+              f"{tier_macs:.4f} vs {big_macs:.4f} avg MACs",
+              file=sys.stderr)
+        ok = False
+    if tier_acc < big_acc - 1e-9:
+        print(f"escalation: tier gave up accuracy at ε=0: "
+              f"{tier_acc:.4f} vs {big_acc:.4f}", file=sys.stderr)
+        ok = False
+    print(f"escalation parity: never="
+          f"{bool(esc.get('never_streams_identical'))} always="
+          f"{bool(esc.get('always_streams_identical'))}")
+    print(f"escalation tier: {tier_macs:.3f} MACs @ {tier_acc:.4f} acc "
+          f"(target-only {big_macs:.3f} @ {big_acc:.4f}, draft-only "
+          f"{float(esc.get('small_avg_macs') or 0):.3f} @ "
+          f"{float(esc.get('small_accuracy') or 0):.4f}; "
+          f"esc threshold {esc.get('escalation_threshold')})")
     return ok
 
 
@@ -206,6 +258,8 @@ def main() -> int:
            for r in rows])
     if s.get("autotune") is not None:
         ok = check_autotune(s["autotune"]) and ok
+    if s.get("escalation") is not None:
+        ok = check_escalation(s["escalation"]) and ok
     return 0 if ok else 1
 
 

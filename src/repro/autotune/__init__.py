@@ -21,7 +21,9 @@ from repro.autotune.artifacts import (CalibrationArtifact, config_key,
                                       load_artifact, save_artifact)
 from repro.autotune.controller import ThresholdController
 from repro.autotune.solver import (ExitHistogram, SolveResult,
-                                   edges_from_thresholds, solve_budget,
+                                   compose_escalation, compose_mac_prefix,
+                                   edges_from_thresholds,
+                                   split_tier_thresholds, solve_budget,
                                    solve_epsilon, thresholds_from_edges)
 from repro.autotune.telemetry import (ExitTelemetry, conf_to_bin,
                                       init_telemetry, merge_telemetry,
@@ -31,8 +33,9 @@ from repro.autotune.telemetry import (ExitTelemetry, conf_to_bin,
 __all__ = [
     "CalibrationArtifact", "config_key", "load_artifact", "save_artifact",
     "ThresholdController",
-    "ExitHistogram", "SolveResult", "edges_from_thresholds", "solve_budget",
-    "solve_epsilon", "thresholds_from_edges",
+    "ExitHistogram", "SolveResult", "compose_escalation",
+    "compose_mac_prefix", "edges_from_thresholds", "split_tier_thresholds",
+    "solve_budget", "solve_epsilon", "thresholds_from_edges",
     "ExitTelemetry", "conf_to_bin", "init_telemetry", "merge_telemetry",
     "pack_rider", "telemetry_for", "telemetry_to_host",
 ]

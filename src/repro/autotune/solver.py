@@ -205,13 +205,27 @@ class ExitHistogram:
                        bins: Optional[int] = None) -> "ExitHistogram":
         """Build from accumulated telemetry (an ExitTelemetry pytree or the
         host counter dict from ``telemetry_to_host``/``merge_telemetry``).
-        ``mac_prefix`` defaults to the carried ``mac_weights``."""
+        ``mac_prefix`` defaults to the carried ``mac_weights``.
+
+        The routing-axis count is the telemetry's ``shadow_agree`` row
+        count: ``n_components - 1`` normally, ``n_components`` when the
+        telemetry was accumulated under ``autotune.route_final`` (the
+        final component's confidence is itself a routing axis — the
+        escalation tier's defer decision).  Route-final telemetry needs an
+        explicit ``mac_prefix`` of ``n_components + 1`` entries: the extra
+        final entry prices *deferring past* the final component (next
+        stage's cost), which no single engine can know."""
         if not isinstance(tel, dict):
             from repro.autotune.telemetry import telemetry_to_host
             tel = telemetry_to_host(tel)
         n_m = tel["exit_counts"].shape[0]
-        r = n_m - 1
+        r = tel["shadow_agree"].shape[0]
         if mac_prefix is None:
+            if r != n_m - 1:
+                raise ValueError(
+                    "route_final telemetry needs an explicit mac_prefix "
+                    f"of {r + 1} entries (the final entry prices the "
+                    "next escalation stage)")
             mac_prefix = tel["mac_weights"]
             if not np.any(np.asarray(mac_prefix)):
                 raise ValueError(
@@ -306,6 +320,149 @@ class ExitHistogram:
         macs_e = macs_other + self.mac_prefix[m] * suf_cnt + pre_mac
         agree_e = agree_other + suf_agr + pre_agr
         return macs_e, agree_e
+
+
+# ---------------------------------------------------------------------------
+# cross-model escalation: heterogeneous (stage, component) composition
+# ---------------------------------------------------------------------------
+
+def compose_mac_prefix(stage_prefixes: Sequence[Sequence[float]],
+                       replay_overheads: Optional[Sequence[float]] = None
+                       ) -> Tuple[float, ...]:
+    """MAC prefix of a multi-stage escalation tier, one entry per
+    (stage, component) in stage-major order.
+
+    ``stage_prefixes[s]`` is stage s's own per-component analytic prefix
+    (``repro.core.macs.segment_macs_per_token`` on *that stage's* config —
+    the per-stage heterogeneous costs).  Answering at stage s component j
+    costs everything spent getting there: the FULL depth of every earlier
+    stage (a deferred token was answered at the earlier stage's final
+    component before the tier rejected it) plus that stage's per-token
+    replay overhead (the escalated prefix is re-prefilled into the next
+    stage — ``replay_overheads[s]`` amortizes it per decoded token; 0
+    when prefix replay is free or disabled), plus ``stage_prefixes[s][j]``.
+    """
+    if not stage_prefixes:
+        raise ValueError("need at least one stage prefix")
+    over = list(replay_overheads) if replay_overheads is not None else \
+        [0.0] * (len(stage_prefixes) - 1)
+    if len(over) != len(stage_prefixes) - 1:
+        raise ValueError(
+            f"need {len(stage_prefixes) - 1} replay overheads for "
+            f"{len(stage_prefixes)} stages, got {len(over)}")
+    out, cum = [], 0.0
+    for s, prefix in enumerate(stage_prefixes):
+        prefix = [float(p) for p in prefix]
+        if not prefix:
+            raise ValueError(f"stage {s} has an empty mac prefix")
+        out.extend(cum + p for p in prefix)
+        cum += prefix[-1] + (over[s] if s < len(over) else 0.0)
+    return tuple(out)
+
+
+def compose_escalation(h0: ExitHistogram, h1: ExitHistogram, *,
+                       stage_agree: float = 1.0,
+                       mac_prefix=None) -> ExitHistogram:
+    """Compose a draft stage's route-final histogram with the next stage's
+    histogram into one joint tier histogram the unchanged
+    :func:`solve_epsilon` / :func:`solve_budget` can search.
+
+    ``h0`` must carry the stage's FINAL confidence as its last routing
+    axis (telemetry accumulated under ``autotune.route_final``): in the
+    tier, answering at stage 0's final component is itself a routed
+    decision, and the threshold the solver assigns to that axis IS the
+    escalation threshold.  ``h1`` is the next stage's ordinary histogram
+    (its final component is the tier's authority).
+
+    Two measurable quantities bridge the stages:
+
+    * stage independence — the joint cell distribution factorizes as
+      ``counts = c0 ⊗ (c1 / Σc1)``: which stage-1 confidence cell a token
+      lands in is taken as independent of its stage-0 cell.  When stage 1
+      has no shadow evidence yet the stage-1 factor degrades to uniform
+      with zero agreement mass, so the solver routes nothing into stage
+      1's intra exits until evidence arrives (deferral itself — the
+      stage-1 FINAL — stays the proxy-perfect authority).
+    * ``stage_agree`` — P(stage-0's answer == tier final answer at the
+      same context), measured online by the tier router from rejected
+      tokens vs their stage-1 regenerations.  Every stage-0 agree row is
+      chained through it (``P(m = tier) ≈ P(m = stage-0 final) ·
+      stage_agree`` — conditional-independence lower bound); the route-
+      final row is stage-0 final's self-agreement, so scaling it makes it
+      exactly the escalation axis's answer-here agreement.
+
+    ``mac_prefix`` (``h0.n_routing + h1.n_routing + 1`` entries — build it
+    with :func:`compose_mac_prefix`) replaces both stages' own prefixes.
+    """
+    if h0.bins != h1.bins:
+        raise ValueError(
+            f"stage histograms disagree on bins: {h0.bins} vs {h1.bins}")
+    if h0.final_agree is not None or h1.final_agree is not None:
+        raise ValueError(
+            "compose_escalation composes agreement-proxy histograms; "
+            "labeled final_agree stages are not composable (the label "
+            "would need the joint (stage0, stage1) sample)")
+    bins = h0.bins
+    r0, r1 = h0.n_routing, h1.n_routing
+    r = r0 + r1
+    from repro.autotune.telemetry import MAX_CELLS
+    if bins ** r > MAX_CELLS:
+        raise ValueError(
+            f"composed histogram would need {bins ** r} cells "
+            f"(bins={bins}, {r} routing axes); lower autotune.bins "
+            f"(cap {MAX_CELLS})")
+    if mac_prefix is None:
+        raise ValueError("compose_escalation needs the composed "
+                         "mac_prefix (see compose_mac_prefix)")
+    mac_prefix = np.asarray(mac_prefix, np.float64)
+    if mac_prefix.shape != (r + 1,):
+        raise ValueError(f"mac_prefix shape {mac_prefix.shape} != "
+                         f"({r + 1},)")
+    sa = float(stage_agree)
+    if not 0.0 <= sa <= 1.0:
+        raise ValueError(f"stage_agree must be in [0, 1], got {sa}")
+
+    c0 = h0.counts.reshape(-1)
+    c1 = h1.counts.reshape(-1)
+    s1 = float(c1.sum())
+    cells1 = c1.shape[0]
+    if s1 > 0:
+        p1 = c1 / s1
+        a1 = h1.agree.reshape(r1, -1) / s1
+    else:
+        p1 = np.full(cells1, 1.0 / cells1)
+        a1 = np.zeros((r1, cells1))
+
+    counts = np.outer(c0, p1)
+    agree = np.empty((r, c0.shape[0], cells1))
+    a0 = h0.agree.reshape(r0, -1) * sa
+    for m in range(r0):
+        agree[m] = np.outer(a0[m], p1)
+    for j in range(r1):
+        agree[r0 + j] = np.outer(c0, a1[j])
+    shape = (bins,) * r
+    return ExitHistogram(counts=counts.reshape(shape),
+                         agree=agree.reshape((r,) + shape),
+                         mac_prefix=mac_prefix, bins=bins)
+
+
+def split_tier_thresholds(thresholds: Sequence[float], n_components0: int
+                          ) -> Tuple[Tuple[float, ...], float,
+                                     Tuple[float, ...]]:
+    """Split a composed-tier solve's threshold vector back into deployable
+    pieces: (stage-0 intra thresholds, escalation threshold, stage-1
+    thresholds).  The solved vector has one entry per (stage, component)
+    routing axis plus the forced final 0.0; stage 0's final axis is the
+    escalation threshold, and its intra vector gets its final 0.0 back
+    (within stage 0 the final component always answers — whether that
+    answer *stands* is the escalation decision)."""
+    ths = tuple(float(t) for t in thresholds)
+    k0 = int(n_components0)
+    if len(ths) < k0 + 2:
+        raise ValueError(
+            f"composed threshold vector of {len(ths)} entries cannot "
+            f"split at n_components0={k0}")
+    return ths[:k0 - 1] + (0.0,), ths[k0 - 1], ths[k0:]
 
 
 # ---------------------------------------------------------------------------

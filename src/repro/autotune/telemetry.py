@@ -90,9 +90,14 @@ class ExitTelemetry:
                  rider: set at init by the engine, carried untouched).
     steps        ()          — live decode (slot, step) observations.
     shadow_count (cells,)    — joint binned routing-confidence counts from
-                 shadow full-depth observations (cells = bins^(n_m-1)).
-    shadow_agree (n_m-1, cells) — of those, how many of component m's
-                 predictions agreed with the final component's.
+                 shadow full-depth observations (cells = bins^r with
+                 r = n_m-1 routing axes, or n_m under
+                 ``autotune.route_final``).
+    shadow_agree (r, cells)  — of those, how many of component m's
+                 predictions agreed with the final component's (the
+                 route_final row is the final component's self-agreement,
+                 i.e. a copy of the counts — the escalation tier rescales
+                 it by the measured cross-stage agreement).
     shadow_steps ()          — shadow observations.
     """
 
@@ -115,23 +120,34 @@ jax.tree_util.register_dataclass(
     meta_fields=())
 
 
-def n_cells(n_components: int, bins: int) -> int:
-    cells = bins ** (n_components - 1)
+def n_cells(n_components: int, bins: int, route_final: bool = False) -> int:
+    cells = bins ** (n_components - 1 + bool(route_final))
     if cells > MAX_CELLS:
         raise ValueError(
             f"autotune joint histogram would need {cells} cells "
-            f"(bins={bins}, n_components={n_components}); lower "
-            f"autotune.bins (cap {MAX_CELLS})")
+            f"(bins={bins}, n_components={n_components}, "
+            f"route_final={route_final}); lower autotune.bins "
+            f"(cap {MAX_CELLS})")
     return cells
 
 
 def init_telemetry(n_components: int, bins: int,
-                   mac_weights=None) -> ExitTelemetry:
+                   mac_weights=None,
+                   route_final: bool = False) -> ExitTelemetry:
     """Zeroed telemetry for one lane.  ``mac_weights`` is the per-exit
     analytic MAC prefix (``repro.core.macs.segment_macs_per_token``);
     zeros when the caller has no cache length to price against (the
-    exit-count vector always allows a host-side re-pricing)."""
-    cells = n_cells(n_components, bins)
+    exit-count vector always allows a host-side re-pricing).
+
+    ``route_final`` widens the shadow joint histogram by the final
+    component's confidence axis (and its — trivially all-agreeing — agree
+    row), for the cross-model escalation tier where answering at the final
+    component is itself a routed decision.  The shadow fold infers the
+    routing-axis count from the ``shadow_agree`` row count, so the decode
+    program is shared between the two shapes.
+    """
+    r = n_components - 1 + bool(route_final)
+    cells = n_cells(n_components, bins, route_final)
     if mac_weights is None:
         mw = jnp.zeros((n_components,), jnp.float32)
     else:
@@ -145,7 +161,7 @@ def init_telemetry(n_components: int, bins: int,
         mac_weights=mw,
         steps=jnp.zeros((), jnp.float32),
         shadow_count=jnp.zeros((cells,), jnp.float32),
-        shadow_agree=jnp.zeros((n_components - 1, cells), jnp.float32),
+        shadow_agree=jnp.zeros((r, cells), jnp.float32),
         shadow_steps=jnp.zeros((), jnp.float32))
 
 
@@ -156,13 +172,14 @@ def telemetry_for(cfg, mac_weights=None) -> Optional[ExitTelemetry]:
     if not cfg.autotune.enabled:
         return None
     return init_telemetry(cfg.cascade.n_components, cfg.autotune.bins,
-                          mac_weights)
+                          mac_weights,
+                          route_final=cfg.autotune.route_final)
 
 
-def _shadow_cell(tbin: jnp.ndarray, bins: int) -> jnp.ndarray:
-    """Flat C-order joint cell index from (n_m, B) bin rows (routing
-    components only — row n_m-1 never routes)."""
-    r = tbin.shape[0] - 1
+def _shadow_cell(tbin: jnp.ndarray, bins: int, r: int) -> jnp.ndarray:
+    """Flat C-order joint cell index from the first ``r`` of the (n_m, B)
+    bin rows — the routing axes (r == n_m - 1 normally: the final row
+    never routes; r == n_m under ``route_final``)."""
     cell = jnp.zeros(tbin.shape[1:], jnp.int32)
     for m in range(r):
         cell = cell * bins + tbin[m]
@@ -173,15 +190,19 @@ def _fold_shadow(ops, tbin, tpred, f_live, bins: int):
     """THE shadow fold — one full-depth observation batch into the
     (shadow_count, shadow_agree, shadow_steps) triple.  Shared by the
     decode path (under its lax.cond shadow gate) and the prefill path so
-    the two sample sources can never drift apart."""
+    the two sample sources can never drift apart.  The routing-axis count
+    comes from the ``shadow_agree`` row count — with ``route_final`` the
+    final component contributes a cell axis and an (all-ones) agree row
+    of its own; the rider already carries every component's code either
+    way."""
     s_count, s_agree, s_steps = ops
-    n_m = tbin.shape[0]
-    cell = _shadow_cell(tbin, bins)
+    r = s_agree.shape[0]
+    cell = _shadow_cell(tbin, bins, r)
     s_count = s_count.at[cell].add(f_live)
-    agree = (tpred[:-1] == tpred[-1][None, :]).astype(jnp.float32)
+    agree = (tpred[:r] == tpred[-1][None, :]).astype(jnp.float32)
     cells = s_count.shape[0]
     arows = jnp.broadcast_to(
-        jnp.arange(n_m - 1, dtype=jnp.int32)[:, None], agree.shape)
+        jnp.arange(r, dtype=jnp.int32)[:, None], agree.shape)
     aidx = (arows * cells + cell[None, :]).reshape(-1)
     s_agree = s_agree.reshape(-1).at[aidx].add(
         (agree * f_live[None, :]).reshape(-1)).reshape(s_agree.shape)

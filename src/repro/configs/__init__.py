@@ -1,10 +1,12 @@
-from repro.configs.base import (AutotuneConfig, CascadeConfig, InputShape,
-                                INPUT_SHAPES, ModelConfig, PagedCacheConfig,
+from repro.configs.base import (AutotuneConfig, CascadeConfig,
+                                EscalationConfig, InputShape, INPUT_SHAPES,
+                                ModelConfig, PagedCacheConfig,
                                 default_exit_boundaries, get_config,
                                 list_configs, reduced, register)
 
 __all__ = [
-    "AutotuneConfig", "CascadeConfig", "InputShape", "INPUT_SHAPES",
-    "ModelConfig", "PagedCacheConfig", "default_exit_boundaries",
-    "get_config", "list_configs", "reduced", "register",
+    "AutotuneConfig", "CascadeConfig", "EscalationConfig", "InputShape",
+    "INPUT_SHAPES", "ModelConfig", "PagedCacheConfig",
+    "default_exit_boundaries", "get_config", "list_configs", "reduced",
+    "register",
 ]

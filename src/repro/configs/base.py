@@ -149,6 +149,14 @@ class AutotuneConfig:
     drift_tol: float = 0.25
     epsilon: float = 0.05
     mac_budget: float = 0.0
+    # Add the FINAL component's confidence as an extra routing axis of the
+    # shadow joint histogram.  Within one model the final component always
+    # answers and its confidence never routes; in a cross-model escalation
+    # tier (``repro.escalate``) answering at the final component is itself
+    # a routed decision — defer to the next stage when its confidence is
+    # below the escalation threshold — so the tier's joint solve needs the
+    # final axis observed.  Costs bins× cells; leave False outside a tier.
+    route_final: bool = False
 
     def __post_init__(self):
         if self.bins < 2:
@@ -199,6 +207,44 @@ class PagedCacheConfig:
             raise ValueError(
                 f"paged_cache.num_blocks must be >= 0 (0 = auto), got "
                 f"{self.num_blocks}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EscalationConfig:
+    """Cross-model escalation knobs for one stage of a
+    :class:`repro.escalate.ModelCascadeTier`.
+
+    The tier fronts an ordered pool of serving engines (small drafts,
+    large verifies).  A request decodes on its current stage; every token
+    that the intra-model cascade answers at the stage's FINAL component is
+    additionally gated by ``threshold`` — an IDK-style answer-or-defer
+    decision (Wang et al., 2017): when the final component's confidence is
+    below it, the request is cancelled at that token and re-submitted to
+    the next stage, replaying the already-committed prefix as prefill.
+
+    ``threshold`` uses the engine's confidence conventions: 0.0 never
+    defers (every final-component answer stands — the escalate-never
+    parity corner), the sentinel 1.1 always defers.  ``confidence`` names
+    the :class:`repro.core.policy.ConfidenceMeasure` registry entry the
+    defer decision reads; it must match the stage's own
+    ``cascade.confidence`` measure (the deferral reuses the confidence the
+    decision scan already computed for the answering token — a different
+    measure would need the logits, which the serving engine does not
+    retain), or be left "" to inherit it.  ``share_prefix`` gates prefix
+    replay into the next stage: ``None`` auto-detects (same vocab_size and
+    family ⇒ the committed tokens are valid next-stage input), ``False``
+    forces full regeneration from the original prompt.
+    """
+
+    enabled: bool = False
+    threshold: float = 0.0
+    confidence: str = ""
+    share_prefix: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.threshold < 0.0:
+            raise ValueError(
+                f"escalation.threshold must be >= 0, got {self.threshold}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -280,6 +326,8 @@ class ModelConfig:
         default_factory=AutotuneConfig)
     paged_cache: PagedCacheConfig = dataclasses.field(
         default_factory=PagedCacheConfig)
+    escalation: EscalationConfig = dataclasses.field(
+        default_factory=EscalationConfig)
 
     # ------------------------------------------------------------------
     @property
@@ -313,6 +361,10 @@ class ModelConfig:
     def with_paged_cache(self, **kw) -> "ModelConfig":
         return dataclasses.replace(
             self, paged_cache=dataclasses.replace(self.paged_cache, **kw))
+
+    def with_escalation(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(
+            self, escalation=dataclasses.replace(self.escalation, **kw))
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -317,14 +317,16 @@ class BudgetPolicy(ThresholdPolicy):
     the search that dominates a shared quantile at equal budget (the
     shared-quantile solution is one of its starting points).
 
-    ``budget@<avg_macs>:shared`` keeps the legacy parameterization for the
-    ablation: one exit quantile q shared across components,
-    δ̂_m = quantile(conf_cal[m], q), bisected on q until mean MACs lands on
-    the budget.  It is DEPRECATED as a default (a one-time warning fires
-    when it runs): it cannot shift exit mass toward the components that
-    earn it.  The solver path also falls back to it — with the same
-    warning — when :meth:`fit` is called without ``corrects``, since the
-    per-component search needs correctness to rank allocations.
+    ``budget@<avg_macs>:shared`` is the DEPRECATED legacy alias (one
+    shared exit quantile, bisected onto the budget — it cannot shift exit
+    mass toward the components that earn it).  It no longer selects a
+    different fit: when :meth:`fit` has ``corrects``, the alias warns once
+    and routes through the same solver as the default spelling (seeded
+    from the shared-quantile solution, so it provably fits no worse) —
+    identical thresholds to ``budget@<avg_macs>``.  Only a :meth:`fit`
+    call WITHOUT ``corrects`` still runs the legacy bisection itself
+    (with the same warning), since the per-component search needs
+    correctness to rank allocations.
 
     Unlike ThresholdPolicy this policy needs a calibration step: resolve it
     (``get_policy("budget@...")`` or via ``ExitDecider.from_config``), call
@@ -406,8 +408,10 @@ class BudgetPolicy(ThresholdPolicy):
             iters: int = 40, bins: int = 64) -> Tuple[float, ...]:
         """Calibrate thresholds so mean MACs <= mac_budget on
         ``confidences``.  With ``corrects`` (per-component correctness
-        arrays) the per-component solver allocates the budget; without, or
-        under ``:shared``, the legacy shared quantile runs (deprecated)."""
+        arrays) the per-component solver allocates the budget — including
+        under the deprecated ``:shared`` alias, which only adds its
+        one-time warning; without ``corrects`` the legacy shared quantile
+        runs (deprecated)."""
         budget = self.mac_budget if mac_budget is None else mac_budget
         if budget is None:
             raise ValueError("no MAC budget given (budget@<float> or fit())")
@@ -415,11 +419,19 @@ class BudgetPolicy(ThresholdPolicy):
         macs = np.asarray(mac_prefix, np.float64)
         budget = float(np.clip(budget, macs[0], macs[-1]))
 
-        if self.mode == "shared" or corrects is None:
+        if corrects is None:
+            # the per-component search needs correctness to rank
+            # allocations — the legacy bisection is the only fallback
             self._warn_shared()
             self.thresholds, self.fitted_avg_macs = self._fit_shared(
                 conf, macs, budget, iters)
             return self.thresholds
+        if self.mode == "shared":
+            # deprecated alias, NOT a separate fit anymore: it warns once
+            # and routes through the solver like the default spelling —
+            # seeded from the shared-quantile solution, so the result
+            # provably spends <= its MACs at >= its agreement
+            self._warn_shared()
 
         from repro.autotune.solver import (ExitHistogram,
                                            edges_from_thresholds,

@@ -1,0 +1,21 @@
+"""Cross-model escalation: a cascade OF cascades behind one ε-knob.
+
+The paper's intra-model cascade answers a token at the shallowest
+component whose softmax confidence clears its threshold.  This package
+adds the next level up (Streeter's model-pool cascades; IDK answer-or-
+defer): an ordered pool of serving engines where a stage's FINAL
+component may abstain — confidence below the stage's escalation
+threshold re-routes the request (committed prefix and all) to a bigger
+model.  The same calibration machinery that solves intra-model
+thresholds solves the escalation threshold too, over one composed joint
+histogram with heterogeneous per-stage MAC costs.
+"""
+from repro.escalate.replay import (build_replay, prefix_compatible,
+                                   resolve_share_prefix)
+from repro.escalate.router import EscalationRouter
+from repro.escalate.tier import ModelCascadeTier, TierThresholdController
+
+__all__ = [
+    "build_replay", "prefix_compatible", "resolve_share_prefix",
+    "EscalationRouter", "ModelCascadeTier", "TierThresholdController",
+]

@@ -77,6 +77,20 @@ def main():
                     help="autotune artifact directory: warm-start "
                          "thresholds from a matching config-hash-keyed "
                          "artifact and persist new resolutions there")
+    ap.add_argument("--escalate-layers", type=int, default=0,
+                    help="> 0 serves a 2-stage escalation tier "
+                         "(repro.escalate): stage 0 is --arch as "
+                         "configured, stage 1 the same arch with this "
+                         "many layers (same vocab/family, so committed "
+                         "prefixes replay as prefill)")
+    ap.add_argument("--escalate-arch", default=None,
+                    help="stage-1 arch id for the escalation tier "
+                         "(overrides the same-arch default; must share "
+                         "the prompt vocab)")
+    ap.add_argument("--escalate-threshold", type=float, default=0.5,
+                    help="stage-0 escalation threshold: final-component "
+                         "answers below it defer to stage 1 (0.0 never, "
+                         "1.1 always)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -88,13 +102,19 @@ def main():
                            n_cohorts=args.cohorts)
     if args.confidence:
         cfg = cfg.with_cascade(confidence=args.confidence)
+    escalate = bool(args.escalate_layers > 0 or args.escalate_arch)
     if args.autotune:
+        # under a tier the escalation threshold is solved over stage 0's
+        # final-component confidence axis — route_final telemetry
         cfg = cfg.with_autotune(enabled=True, epsilon=args.epsilon,
-                                mac_budget=args.budget_macs)
+                                mac_budget=args.budget_macs,
+                                route_final=escalate)
     if args.cache_layout == "paged":
         cfg = cfg.with_paged_cache(layout="paged",
                                    block_size=args.block_size,
                                    num_blocks=args.num_blocks)
+    if escalate:
+        return _serve_tier(args, cfg)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     controller = None
@@ -141,6 +161,88 @@ def main():
                  / max(1, mem["dense_slab_bytes"]),
                  mem["reclaimed_by_exit"], mem["reclaimed_at_retire"],
                  stats["admission_wait_mean"] or 0.0)
+    assert stats["requests_finished"] == args.requests
+
+
+def _serve_tier(args, cfg0):
+    """Two-stage cross-model escalation (repro.escalate)."""
+    from repro.escalate import ModelCascadeTier, TierThresholdController
+
+    cfg0 = cfg0.with_escalation(enabled=True,
+                                threshold=args.escalate_threshold)
+    if args.escalate_arch:
+        cfg1 = get_config(args.escalate_arch)
+        if args.smoke:
+            cfg1 = reduced(cfg1)
+        cfg1 = cfg1.replace(dtype=cfg0.dtype)
+        if args.escalate_layers > 0:
+            cfg1 = cfg1.replace(n_layers=args.escalate_layers)
+        cfg1 = cfg1.with_cascade(exit_mode=args.exit_mode,
+                                 n_cohorts=args.cohorts)
+        if args.confidence:
+            cfg1 = cfg1.with_cascade(confidence=args.confidence)
+    else:
+        cfg1 = cfg0.replace(n_layers=args.escalate_layers) \
+            .with_escalation(enabled=False)
+    n1 = cfg1.cascade.n_components
+    cfg1 = cfg1.with_cascade(
+        thresholds=tuple([args.threshold] * (n1 - 1) + [0.0]))
+    if args.autotune:
+        # stage 1 carries ordinary telemetry; only stage 0 routes on its
+        # final confidence (the escalation axis)
+        cfg1 = cfg1.with_autotune(enabled=True, epsilon=args.epsilon,
+                                  mac_budget=args.budget_macs,
+                                  route_final=False)
+    if args.cache_layout == "paged":
+        cfg1 = cfg1.with_paged_cache(layout="paged",
+                                     block_size=args.block_size,
+                                     num_blocks=args.num_blocks)
+
+    engines = []
+    for s, cfg in enumerate((cfg0, cfg1)):
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(s))
+        engines.append(CascadeServingEngine(
+            cfg, model, params, lane_batch=args.lane_batch,
+            n_lanes=args.lanes, cache_len=args.cache_len,
+            runtime=args.runtime, chunk=args.chunk))
+    controller = None
+    if args.autotune:
+        controller = TierThresholdController(
+            epsilon=None if args.budget_macs > 0 else args.epsilon,
+            mac_budget=args.budget_macs if args.budget_macs > 0 else None,
+            # smoke runs are dozens of ticks — solve early so the lane
+            # exercises the full solve-split-push path
+            interval=8 if args.smoke else 64,
+            min_shadow=4.0 if args.smoke else 64.0,
+            min_escalations=2 if args.smoke else 8)
+    tier = ModelCascadeTier(engines, controller=controller)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        tier.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg0.vocab_size,
+                                args.prompt_len).astype(np.int32),
+            max_new_tokens=args.max_new))
+    tier.run()
+    stats = tier.stats()
+    log.info("tier: %d finished, %d escalations, final-stage histogram "
+             "%s, %d draft tokens discarded",
+             stats["requests_finished"], stats["escalations_total"],
+             stats["final_stage_histogram"],
+             stats["discarded_draft_tokens"])
+    log.info("router: %s", json.dumps(stats["router"]))
+    for s, es in enumerate(stats["stages"]):
+        esc = es["escalation"]
+        log.info("stage %d: speedup %.2fx, %d replayed / %d fresh "
+                 "prefill positions, %d escalated admissions",
+                 s, es["analytic_speedup"],
+                 esc["prefill_positions_replayed"],
+                 esc["prefill_positions_fresh"],
+                 esc["escalated_requests_admitted"])
+    if args.autotune:
+        log.info("tier controller: %s",
+                 json.dumps(stats["controller"], default=str))
     assert stats["requests_finished"] == args.requests
 
 

@@ -72,8 +72,21 @@ class _Slot:
     request: Optional[Request] = None
     generated: Optional[List[int]] = None
     exit_depths: Optional[List[int]] = None
+    confs: Optional[List[float]] = None
     pos: int = 0
     done: bool = True
+
+
+def _escalation_extra(req: Request) -> Optional[dict]:
+    """The tier's re-submission tag, set by ``repro.escalate`` when a
+    deferred request is replayed into this engine (None for fresh
+    traffic).  Carries ``replayed`` — how many of the prompt's trailing
+    tokens are a prefix another stage already decoded — so the accounting
+    can attribute that prefill to the escalated request instead of
+    counting it as fresh traffic."""
+    extra = req.extra or {}
+    esc = extra.get("escalation")
+    return esc if isinstance(esc, dict) else None
 
 
 class CascadeServingEngine:
@@ -211,7 +224,12 @@ class CascadeServingEngine:
         work, not a measurement window.  The warm-up dispatch (host: first
         step; device: first chunk) is excluded from EVERY window metric —
         MAC, skip, opportunity, wallclock — so they always describe the
-        same steps."""
+        same steps.  Escalation accounting (replayed-prefix prefill
+        tokens/MACs/seconds) is window accounting and resets with the
+        rest; the paged pool's PEAK occupancy and lifetime reclaim
+        counters survive (they describe high-water capacity, the same
+        split that keeps ``compile_seconds`` out of the decode window) —
+        only its per-chunk reclaim window clears."""
         self.compactor.reset_skip_counters()
         self._macs_spent = 0.0
         self._macs_dense = 0.0
@@ -222,6 +240,16 @@ class CascadeServingEngine:
         self._skip_opportunities = 0
         self._skip_opportunity_total = 0
         self._admit_waits: List[int] = []
+        # escalation window: replayed-prefix prefill attributed to the
+        # escalated requests that caused it, never to fresh traffic
+        self._prefill_positions_fresh = 0
+        self._prefill_positions_replayed = 0
+        self._replay_prefill_macs = 0.0
+        self._replay_prefill_seconds = 0.0
+        self._escalated_admitted = 0
+        self._cancelled_for_escalation = 0
+        if getattr(self, "paged", False) and self.pcache is not None:
+            self.pcache.pool.reset_window()
 
     # -- jitted cores ---------------------------------------------------
     def _prefill_impl(self, params, tokens, cache, state, extra):
@@ -282,6 +310,37 @@ class CascadeServingEngine:
     def _record_admit(self, req: Request):
         sub = self._submit_tick.pop(req.rid, self._tick)
         self._admit_waits.append(self._tick - sub)
+        if _escalation_extra(req) is not None:
+            self._escalated_admitted += 1
+
+    def _replayed_len(self, req: Request) -> int:
+        """Trailing prompt tokens another stage already decoded (0 for
+        fresh traffic) — the prefill positions escalation accounting
+        attributes to the escalated request."""
+        esc = _escalation_extra(req)
+        if esc is None:
+            return 0
+        return max(0, min(int(esc.get("replayed", 0)), len(req.prompt)))
+
+    def _account_prefill(self, req: Request, seconds: float,
+                         padded_positions: int):
+        """Attribute one newly admitted request's prefill: its prompt
+        positions split into fresh traffic vs a replayed prefix an earlier
+        escalation stage already decoded.  Replayed positions are priced
+        at the full-depth per-token MAC cost (prefill computes every
+        component) and charged to the escalation window — NOT to the
+        fresh prefill counter and never to the decode window, so
+        ``wallclock_us_per_token`` keeps its decode-only meaning and the
+        tier can account replay cost against the escalated request.
+        ``seconds`` of a shared dispatch are attributed by the request's
+        replayed share of the padded positions it rode in."""
+        replayed = self._replayed_len(req)
+        self._prefill_positions_fresh += len(req.prompt) - replayed
+        self._prefill_positions_replayed += replayed
+        if replayed:
+            self._replay_prefill_macs += replayed * float(self.mac_prefix[-1])
+            self._replay_prefill_seconds += seconds * (
+                replayed / max(1, padded_positions))
 
     def _admit(self):
         if self.paged:
@@ -304,6 +363,7 @@ class CascadeServingEngine:
             slot.request = req
             slot.generated = []
             slot.exit_depths = []
+            slot.confs = []
             slot.done = False
             # cache is shared per-lane, so we prefill the whole lane
             # when admission changes (simple + correct).
@@ -406,6 +466,7 @@ class CascadeServingEngine:
                 slot.request = req
                 slot.generated = []
                 slot.exit_depths = []
+                slot.confs = []
                 slot.done = False
                 lane["dirty"] = True
             self.queue.pop(0)
@@ -449,11 +510,15 @@ class CascadeServingEngine:
             krow[p % W] = p
         tables = self.pcache.device_tables(lane_id)[
             :, slot_idx:slot_idx + 1, :]
+        t_pre = time.perf_counter()
         logits, new_segs = self._slot_prefill(
             self.params, jnp.asarray(toks), self.pcache.segments,
             jnp.asarray(start + np.arange(P_pad, dtype=np.int32)),
             jnp.asarray(write_slots), tables, self._extra(1))
+        jax.block_until_ready(logits)
+        dt_pre = time.perf_counter() - t_pre
         self.pcache.segments = new_segs
+        self._account_prefill(req, dt_pre, P_pad)
         d, _ = self.decider.decide_with_carry(
             logits, thresholds=state.thresholds,
             state=self.decider.measure.init_state(
@@ -475,6 +540,7 @@ class CascadeServingEngine:
         s.request = req
         s.generated = []
         s.exit_depths = []
+        s.confs = []
         s.done = False
         lane["state"] = state.replace(
             active=jnp.asarray(self._live_mask(lane)),
@@ -487,31 +553,69 @@ class CascadeServingEngine:
             self.compactor.observe_prefill_exit(float(exit_idx))
         s.generated.append(tok)
         s.exit_depths.append(exit_idx)
+        s.confs.append(conf)
         self._finish_if_done(s, t0, lane_id, slot_idx)
 
     def _finish_if_done(self, s: _Slot, pos: int, lane_id: int,
                         slot_idx: int):
         if (len(s.generated) >= s.request.max_new_tokens
                 or pos >= self.cache_len - 1):
-            s.done = True
-            self.finished[s.request.rid] = {
-                "tokens": list(s.generated),
-                "exit_depths": list(s.exit_depths),
-                "lane": lane_id,
-            }
-            # retiring traffic decays the lane's depth EMA toward the
-            # population prior so the lane doesn't keep repelling traffic
-            # that no longer matches its drained residents
-            self.compactor.observe_retire(lane_id)
-            if self.paged:
-                # skip-aware reclamation at the first host sync after the
-                # slot finished (mid-chunk under the device runtime):
-                # components the cascade never answered from release as
-                # reclaimed_by_exit, the rest at retire (DESIGN.md)
-                md = max(s.exit_depths) if s.exit_depths else None
-                self.pcache.release_slot(lane_id, slot_idx,
-                                         max_exit_depth=md)
-                self._tables_stale.add(lane_id)
+            self._retire(s, lane_id, slot_idx)
+
+    def _retire(self, s: _Slot, lane_id: int, slot_idx: int,
+                escalated: bool = False):
+        s.done = True
+        self.finished[s.request.rid] = {
+            "tokens": list(s.generated),
+            "exit_depths": list(s.exit_depths),
+            "confs": list(s.confs),
+            "lane": lane_id,
+            "escalated": escalated,
+        }
+        # retiring traffic decays the lane's depth EMA toward the
+        # population prior so the lane doesn't keep repelling traffic
+        # that no longer matches its drained residents
+        self.compactor.observe_retire(lane_id)
+        if self.paged:
+            # skip-aware reclamation at the first host sync after the
+            # slot finished (mid-chunk under the device runtime):
+            # components the cascade never answered from release as
+            # reclaimed_by_exit, the rest at retire (DESIGN.md)
+            md = max(s.exit_depths) if s.exit_depths else None
+            self.pcache.release_slot(lane_id, slot_idx,
+                                     max_exit_depth=md)
+            self._tables_stale.add(lane_id)
+
+    def cancel(self, rid: int, keep: Optional[int] = None) -> Optional[dict]:
+        """Escalation re-admission hook: retire a live request early,
+        keeping only its first ``keep`` generated tokens (None = all).
+
+        The tier calls this between engine ticks when a token finishes at
+        the final component below the escalation threshold: the committed
+        prefix stands, everything from the deferred token on is discarded
+        (tokens past the defer point were decoded from a context the next
+        stage re-answers — their compute is already in the MAC window,
+        which is honest: it was spent).  Returns the finished record (its
+        ``escalated`` flag set) or None if ``rid`` is not live.  Queued
+        requests are not cancellable — nothing was decoded, so there is
+        nothing to defer on; re-route them before submission instead.
+
+        Safe between ticks in both runtimes: the slot's ``done`` flag
+        drops it from the next dispatch's active mask, and the paged
+        release path is the ordinary retire path (host-side bookkeeping
+        only)."""
+        for lane_id, lane in enumerate(self.lanes):
+            for slot_idx, s in enumerate(lane["slots"]):
+                if s.done or s.request is None or s.request.rid != rid:
+                    continue
+                if keep is not None:
+                    s.generated = s.generated[:keep]
+                    s.exit_depths = s.exit_depths[:keep]
+                    s.confs = s.confs[:keep]
+                self._cancelled_for_escalation += 1
+                self._retire(s, lane_id, slot_idx, escalated=True)
+                return self.finished[rid]
+        return None
 
     def _live_mask(self, lane) -> np.ndarray:
         return np.array([not s.done for s in lane["slots"]])
@@ -569,12 +673,20 @@ class CascadeServingEngine:
                           if self.paged else None))
         if old is not None and old.thresholds is not None:
             state = state.replace(thresholds=old.thresholds)
-        tok, exit_idx, _conf, cache, state = self._prefill(
+        fresh_admits = [s for s in slots if not s.done and not s.generated]
+        t_pre = time.perf_counter()
+        tok, exit_idx, conf, cache, state = self._prefill(
             self.params, jnp.asarray(toks), cache_in, state, extra)
         self._take_cache(lane, cache)
         lane["state"] = state
         tok = np.asarray(tok)
+        dt_pre = time.perf_counter() - t_pre
         exit_idx = np.asarray(exit_idx)
+        conf = np.asarray(conf)
+        # attribute this shared dispatch's replayed-prefix share to the
+        # newly admitted escalated requests riding in it (if any)
+        for s in fresh_admits:
+            self._account_prefill(s.request, dt_pre, self.lane_batch * S)
         for i, s in enumerate(slots):
             if not s.done:
                 if not s.generated:
@@ -584,6 +696,7 @@ class CascadeServingEngine:
                     self.compactor.observe_prefill_exit(float(exit_idx[i]))
                 s.generated.append(int(tok[i]))
                 s.exit_depths.append(int(exit_idx[i]))
+                s.confs.append(float(conf[i]))
                 # the prefill token counts toward max_new_tokens like any
                 # decode tick — an in-flight slot near its limit may finish
                 self._finish_if_done(s, S, lane_id, i)
@@ -700,6 +813,7 @@ class CascadeServingEngine:
             self._extra(self.lane_batch))
         tok = np.asarray(tok)              # forces device sync
         exit_idx = np.asarray(exit_idx)
+        conf = np.asarray(conf)
         dt = time.perf_counter() - t0
         n_live = int(live.sum())
         warm = self._decode_warm
@@ -724,6 +838,7 @@ class CascadeServingEngine:
                 continue
             s.generated.append(int(tok[i]))
             s.exit_depths.append(int(exit_idx[i]))
+            s.confs.append(float(conf[i]))
             self._finish_if_done(s, int(state.t), lane_id, i)
         self._sync_tables(lane, lane_id)
         if self.paged:
@@ -778,6 +893,7 @@ class CascadeServingEngine:
                 if chunk.live[step, i]:
                     s.generated.append(int(chunk.tokens[step, i]))
                     s.exit_depths.append(int(chunk.exits[step, i]))
+                    s.confs.append(float(chunk.confs[step, i]))
             self._finish_if_done(s, pos, lane_id, i)
         self._sync_tables(lane, lane_id)
         if self.paged:
@@ -861,6 +977,18 @@ class CascadeServingEngine:
                 float(np.mean(np.asarray(lane["state"].ema_conf)))
                 for lane in self.lanes],
             "autotune": self._autotune_stats(),
+            # cross-model escalation accounting: replayed-prefix prefill is
+            # attributed to the escalated request (fresh vs replayed
+            # position split) so the tier's MAC window never double-counts
+            # the committed prefix as new traffic
+            "escalation": {
+                "escalated_requests_admitted": self._escalated_admitted,
+                "cancelled_for_escalation": self._cancelled_for_escalation,
+                "prefill_positions_fresh": self._prefill_positions_fresh,
+                "prefill_positions_replayed": self._prefill_positions_replayed,
+                "replay_prefill_macs": self._replay_prefill_macs,
+                "replay_prefill_seconds": self._replay_prefill_seconds,
+            },
         }
 
     def _autotune_stats(self):

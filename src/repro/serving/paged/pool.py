@@ -47,6 +47,13 @@ class BlockPool:
         self.peak_used = 0
         self.reclaimed_by_exit = 0
         self.reclaimed_at_retire = 0
+        # soft admission cap for cross-engine block donation: a tier can
+        # lower one pool's cap and raise another's without moving physical
+        # stores (they can't move — each engine's device buffers are its
+        # own).  None = the physical limit.  Only ADMISSION honors the
+        # cap; blocks already allocated above a newly lowered cap stay
+        # valid and drain naturally at retire.
+        self.soft_cap: Optional[int] = None
         # per-chunk reclamation window (engine calls begin_chunk per
         # dispatch; end_chunk returns blocks freed since)
         self._chunk_mark = 0
@@ -57,14 +64,33 @@ class BlockPool:
     def free_blocks(self) -> int:
         return len(self._free)
 
+    def _cap_free(self) -> int:
+        """Blocks an allocation may still claim under the soft cap."""
+        if self.soft_cap is None:
+            return len(self._free)
+        return min(len(self._free), max(0, self.soft_cap - self.used))
+
+    def set_soft_cap(self, cap: Optional[int]):
+        """Donate/reclaim capacity: cap usable blocks at ``cap`` (None
+        lifts the cap).  The trash block is outside the budget; caps above
+        the physical allocatable count are clamped, never an error —
+        donation is advisory, the free list stays authoritative."""
+        if cap is None:
+            self.soft_cap = None
+            return
+        cap = int(cap)
+        if cap < 0:
+            raise ValueError(f"soft_cap must be >= 0, got {cap}")
+        self.soft_cap = min(cap, self.num_blocks - 1)
+
     def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+        return n <= self._cap_free()
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Claim ``n`` blocks, or None (no partial grants — the caller
         backpressures admission instead of corrupting a half-covered
         slot)."""
-        if n > len(self._free):
+        if n > self._cap_free():
             return None
         ids = [self._free.pop() for _ in range(n)]
         self.used += n
@@ -92,6 +118,14 @@ class BlockPool:
         self.chunk_reclaims.append(freed)
         return freed
 
+    def reset_window(self):
+        """Clear the per-chunk reclaim window (engine ``reset_metrics``).
+        ``peak_used`` and the lifetime reclaim counters survive: peak
+        occupancy is high-water capacity accounting, the same split that
+        keeps ``compile_seconds`` out of the decode window."""
+        self.chunk_reclaims.clear()
+        self._chunk_mark = self.reclaimed_by_exit + self.reclaimed_at_retire
+
     # ------------------------------------------------------------------
     def stats(self) -> dict:
         return {
@@ -101,6 +135,7 @@ class BlockPool:
             "blocks_free": self.free_blocks,
             "blocks_used": self.used,
             "peak_blocks_used": self.peak_used,
+            "soft_cap": self.soft_cap,
             "reclaimed_by_exit": self.reclaimed_by_exit,
             "reclaimed_at_retire": self.reclaimed_at_retire,
             "blocks_reclaimed_per_chunk": list(self.chunk_reclaims[-32:]),

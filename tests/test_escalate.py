@@ -1,0 +1,594 @@
+"""Cross-model escalation tier (repro.escalate): parity corners against the
+single-engine baselines, the composed heterogeneous-cost solver, prefix
+replay + accounting, soft-cap block donation, and the ``budget@:shared``
+deprecation routing.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.policy as policy_mod
+from repro.autotune.solver import (ExitHistogram, compose_escalation,
+                                   compose_mac_prefix,
+                                   edges_from_thresholds, solve_epsilon,
+                                   split_tier_thresholds,
+                                   thresholds_from_edges)
+from repro.autotune.telemetry import init_telemetry, n_cells
+from repro.configs import get_config, reduced
+from repro.core.policy import get_policy
+from repro.escalate import (EscalationRouter, ModelCascadeTier,
+                            TierThresholdController, build_replay,
+                            prefix_compatible, resolve_share_prefix)
+from repro.models.model import build_model
+from repro.serving import CascadeServingEngine, Request
+from repro.serving.paged.pool import BlockPool
+
+
+@pytest.fixture(scope="module")
+def stack():
+    """Two real reduced models sharing vocab + family: a 2-layer draft and
+    a 4-layer authority (committed prefixes replay between them)."""
+    cfg_s = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
+    cfg_b = reduced(get_config("qwen2.5-3b"),
+                    n_layers=4).replace(dtype="float32")
+    m_s = build_model(cfg_s)
+    p_s = m_s.init(jax.random.PRNGKey(0))
+    m_b = build_model(cfg_b)
+    p_b = m_b.init(jax.random.PRNGKey(1))
+    return cfg_s, m_s, p_s, cfg_b, m_b, p_b
+
+
+def _prompts(cfg, n=3, length=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, length).astype(np.int32)
+            for _ in range(n)]
+
+
+def _reqs(prompts, max_new=4):
+    return [Request(rid=i, prompt=p.copy(), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+
+
+def _engine(cfg, model, params, runtime="host", **kw):
+    kw.setdefault("lane_batch", 4)
+    kw.setdefault("n_lanes", 1)
+    kw.setdefault("cache_len", 32)
+    kw.setdefault("chunk", 4)
+    return CascadeServingEngine(cfg, model, params, runtime=runtime, **kw)
+
+
+def _paged(cfg):
+    return cfg.with_paged_cache(layout="paged", block_size=8)
+
+
+# ---------------------------------------------------------------------------
+# parity corners: the tier collapses bit-identically onto either engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("runtime,layout", [
+    ("host", "dense"), ("host", "paged"),
+    ("device", "dense"), ("device", "paged")])
+def test_escalate_never_is_small_engine(stack, runtime, layout):
+    cfg_s, m_s, p_s, cfg_b, m_b, p_b = stack
+    if layout == "paged":
+        cfg_s, cfg_b = _paged(cfg_s), _paged(cfg_b)
+    prompts = _prompts(cfg_s)
+
+    small = _engine(cfg_s, m_s, p_s, runtime)
+    for r in _reqs(prompts):
+        small.submit(r)
+    small.run(100)
+
+    tier = ModelCascadeTier([
+        _engine(cfg_s.with_escalation(enabled=True, threshold=0.0),
+                m_s, p_s, runtime),
+        _engine(cfg_b, m_b, p_b, runtime)])
+    for r in _reqs(prompts):
+        tier.submit(r)
+    fin = tier.run(100)
+
+    assert len(fin) == len(prompts)
+    for i in range(len(prompts)):
+        assert fin[i]["tokens"] == small.finished[i]["tokens"]
+        assert fin[i]["exit_depths"] == small.finished[i]["exit_depths"]
+        assert fin[i]["confs"] == small.finished[i]["confs"]
+        assert fin[i]["escalations"] == 0
+        assert fin[i]["final_stage"] == 0
+    assert tier.stats()["escalations_total"] == 0
+
+
+@pytest.mark.parametrize("runtime,layout", [
+    ("host", "dense"), ("host", "paged"),
+    ("device", "dense"), ("device", "paged")])
+def test_escalate_always_is_big_engine(stack, runtime, layout):
+    """Escalation threshold 1.1 + stage-0 intra thresholds at the 1.1
+    never-exit sentinel: every request defers at its FIRST token (empty
+    committed prefix), so stage 1 sees the exact original workload."""
+    cfg_s, m_s, p_s, cfg_b, m_b, p_b = stack
+    if layout == "paged":
+        cfg_s, cfg_b = _paged(cfg_s), _paged(cfg_b)
+    prompts = _prompts(cfg_s)
+
+    big = _engine(cfg_b, m_b, p_b, runtime)
+    for r in _reqs(prompts):
+        big.submit(r)
+    big.run(100)
+
+    cfg_s1 = cfg_s.with_cascade(thresholds=(1.1, 0.0)).with_escalation(
+        enabled=True, threshold=1.1)
+    tier = ModelCascadeTier([_engine(cfg_s1, m_s, p_s, runtime),
+                             _engine(cfg_b, m_b, p_b, runtime)])
+    for r in _reqs(prompts):
+        tier.submit(r)
+    fin = tier.run(100)
+
+    assert len(fin) == len(prompts)
+    for i in range(len(prompts)):
+        assert fin[i]["tokens"] == big.finished[i]["tokens"]
+        assert fin[i]["exit_depths"] == big.finished[i]["exit_depths"]
+        assert fin[i]["confs"] == big.finished[i]["confs"]
+        assert fin[i]["escalations"] == 1
+        assert fin[i]["final_stage"] == 1
+    st_ = tier.stats()
+    assert st_["escalations_total"] == len(prompts)
+    esc1 = st_["stages"][1]["escalation"]
+    assert esc1["escalated_requests_admitted"] == len(prompts)
+    # empty committed prefix: nothing replayed
+    assert esc1["prefill_positions_replayed"] == 0
+
+
+def test_mid_threshold_defers_are_predictable(stack):
+    """At an intermediate escalation threshold the tier's committed
+    prefixes are exactly what the defer rule says on the small engine's
+    standalone streams, and the replayed prefill positions land in the
+    escalation accounting (not the fresh counter)."""
+    cfg_s, m_s, p_s, cfg_b, m_b, p_b = stack
+    prompts = _prompts(cfg_s, n=4)
+    max_new = 6
+
+    small = _engine(cfg_s, m_s, p_s)
+    for r in _reqs(prompts, max_new):
+        small.submit(r)
+    small.run(100)
+
+    # pick a threshold that splits the observed final-component
+    # confidences so at least one request defers at a token > 0 and at
+    # least one never defers
+    n_m = cfg_s.cascade.n_components
+    final_confs = sorted(
+        c for rec in small.finished.values()
+        for d, c in zip(rec["exit_depths"], rec["confs"]) if d == n_m - 1)
+    assert final_confs, "stage 0 never answered at its final component"
+    esc_th = final_confs[len(final_confs) // 2]
+
+    def expected_defer(rec):
+        for i, (d, c) in enumerate(zip(rec["exit_depths"], rec["confs"])):
+            if d == n_m - 1 and c < esc_th:
+                return i
+        return None
+
+    tier = ModelCascadeTier([
+        _engine(cfg_s.with_escalation(enabled=True, threshold=esc_th),
+                m_s, p_s),
+        _engine(cfg_b, m_b, p_b)])
+    for r in _reqs(prompts, max_new):
+        tier.submit(r)
+    fin = tier.run(200)
+
+    n_deferred, replayed_total = 0, 0
+    for i in range(len(prompts)):
+        rec, d = small.finished[i], expected_defer(small.finished[i])
+        assert len(fin[i]["tokens"]) == max_new
+        if d is None:
+            assert fin[i]["escalations"] == 0
+            assert fin[i]["tokens"] == rec["tokens"]
+        else:
+            n_deferred += 1
+            replayed_total += d
+            assert fin[i]["escalations"] == 1
+            assert fin[i]["final_stage"] == 1
+            # committed prefix = the small engine's stream up to the defer
+            assert fin[i]["tokens"][:d] == rec["tokens"][:d]
+            assert fin[i]["confs"][:d] == rec["confs"][:d]
+            assert fin[i]["spans"][0] == {"stage": 0, "n_tokens": d,
+                                          "kept": True}
+    assert n_deferred >= 1, "threshold deferred nothing — corner, not mid"
+    esc1 = tier.stats()["stages"][1]["escalation"]
+    assert esc1["prefill_positions_replayed"] == replayed_total
+    assert esc1["escalated_requests_admitted"] == n_deferred
+    if replayed_total:
+        assert esc1["replay_prefill_macs"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# replay + router units
+# ---------------------------------------------------------------------------
+
+def test_prefix_compatibility_and_share_resolution(stack):
+    cfg_s, _, _, cfg_b, _, _ = stack
+    assert prefix_compatible(cfg_s, cfg_b)
+    other = cfg_b.replace(family="moe")
+    assert not prefix_compatible(cfg_s, other)
+    assert resolve_share_prefix(cfg_s, cfg_b)
+    assert not resolve_share_prefix(
+        cfg_s.with_escalation(share_prefix=False), cfg_b)
+    with pytest.raises(ValueError):
+        resolve_share_prefix(
+            cfg_s.with_escalation(share_prefix=True), other)
+
+
+def test_build_replay():
+    prompt = np.arange(5, dtype=np.int32)
+    p, new, rep = build_replay(prompt, [7, 8], 6, share_prefix=True)
+    assert p.tolist() == [0, 1, 2, 3, 4, 7, 8]
+    assert (new, rep) == (4, 2)
+    p, new, rep = build_replay(prompt, [7, 8], 6, share_prefix=False)
+    assert p.tolist() == list(range(5)) and (new, rep) == (6, 0)
+    with pytest.raises(ValueError):
+        build_replay(prompt, [1] * 6, 6, share_prefix=True)
+
+
+def test_router_defer_rule(stack):
+    cfg_s, _, _, cfg_b, _, _ = stack
+    router = EscalationRouter([
+        cfg_s.with_escalation(enabled=True, threshold=0.6), cfg_b])
+    n_m = cfg_s.cascade.n_components
+    assert router.should_defer(0, n_m - 1, 0.5)
+    assert not router.should_defer(0, n_m - 1, 0.7)
+    assert not router.should_defer(0, 0, 0.1)     # early exits stand
+    assert not router.should_defer(1, 99, 0.0)    # last stage: authority
+    assert router.first_defer(0, [0, n_m - 1, n_m - 1],
+                              [0.1, 0.9, 0.2]) == 2
+    router.observe_regeneration(5, 5)
+    router.observe_regeneration(5, 6)
+    assert router.stage_agree(min_observations=2) == 0.5
+    assert router.stage_agree(prior=0.9, min_observations=3) == 0.9
+
+
+def test_router_rejects_mismatched_measure(stack):
+    cfg_s, _, _, cfg_b, _, _ = stack
+    bad = cfg_s.with_escalation(enabled=True, confidence="entropy")
+    with pytest.raises(ValueError, match="decision-time confidence"):
+        EscalationRouter([bad, cfg_b])
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-cost composition + solver
+# ---------------------------------------------------------------------------
+
+def test_compose_mac_prefix():
+    got = compose_mac_prefix([[1.0, 3.0], [10.0, 40.0]], [2.0])
+    # stage 1 entries carry stage 0's full depth + its replay overhead
+    assert got == (1.0, 3.0, 15.0, 45.0)
+    with pytest.raises(ValueError):
+        compose_mac_prefix([[1.0], [2.0]], [0.5, 0.5])
+
+
+def test_split_tier_thresholds():
+    ths = (0.3, 0.7, 0.5, 0.0)
+    s0, esc, s1 = split_tier_thresholds(ths, n_components0=2)
+    assert s0 == (0.3, 0.0)
+    assert esc == 0.7
+    assert s1 == (0.5, 0.0)
+    with pytest.raises(ValueError):
+        split_tier_thresholds((0.3, 0.0), 2)
+
+
+def _route_final_hist(bins, n0, rng, n=4000, agree_p=0.9):
+    """A draft histogram with its final confidence as a routing axis:
+    from_samples with an (n0, N) confidence matrix against an
+    (n0 + 1)-entry mac prefix treats all n0 rows as routing axes."""
+    conf = rng.random((n0, n))
+    agr = (rng.random((n0, n)) < agree_p).astype(np.float64)
+    macs = [float(2 ** i) for i in range(n0 + 1)]
+    return ExitHistogram.from_samples(conf, agr, macs, bins)
+
+
+def test_compose_escalation_marginals():
+    rng = np.random.default_rng(7)
+    bins, n0, n1 = 4, 2, 3
+    h0 = _route_final_hist(bins, n0, rng)
+    c1 = rng.random((n1 - 1, 5000))
+    a1 = (rng.random((n1 - 1, 5000)) < 0.8).astype(np.float64)
+    h1 = ExitHistogram.from_samples(c1, a1, [1.0, 2.0, 4.0], bins)
+    sa = 0.7
+    # per-stage prefixes are each stage's OWN K entries (the route-final
+    # extra entry belongs to h0's standalone prefix, not the composition)
+    mp = compose_mac_prefix([[1.0, 2.0], [10.0, 20.0, 40.0]])
+    joint = compose_escalation(h0, h1, stage_agree=sa, mac_prefix=mp)
+
+    r0, r1 = h0.n_routing, h1.n_routing
+    assert joint.n_routing == r0 + r1
+    assert joint.total == pytest.approx(h0.total)
+    jc = joint.counts.reshape((bins,) * (r0 + r1))
+    # stage-0 marginal: summing out the stage-1 axes recovers h0
+    np.testing.assert_allclose(
+        jc.sum(axis=tuple(range(r0, r0 + r1))), h0.counts)
+    # stage-1 marginal: h1's distribution scaled to h0's mass
+    np.testing.assert_allclose(
+        jc.sum(axis=tuple(range(r0))),
+        h0.total * h1.counts / h1.total)
+    # stage-0 agree rows chain through stage_agree
+    ja = joint.agree.reshape((r0 + r1,) + (bins,) * (r0 + r1))
+    for m in range(r0):
+        np.testing.assert_allclose(
+            ja[m].sum(axis=tuple(range(r0, r0 + r1))),
+            sa * h0.agree[m])
+    # stage-1 agree rows: h1's agreement through h0's cell mass
+    for j in range(r1):
+        np.testing.assert_allclose(
+            ja[r0 + j].sum(axis=tuple(range(r0))),
+            h0.counts.sum() * h1.agree[j] / h1.total,
+            rtol=1e-9)
+
+
+def test_compose_escalation_solver_corners():
+    """stage_agree=0 forces the solver off the draft entirely; a perfectly
+    agreeing cheap draft absorbs everything."""
+    rng = np.random.default_rng(3)
+    bins, n0 = 4, 2
+    c1 = rng.random((1, 4000))
+    a1 = np.ones((1, 4000))
+    h1 = ExitHistogram.from_samples(c1, a1, [100.0, 200.0], bins)
+
+    h0_good = _route_final_hist(bins, n0, rng, agree_p=1.0)
+    joint = compose_escalation(
+        h0_good, h1, stage_agree=1.0,
+        mac_prefix=compose_mac_prefix([[1.0, 2.0], [100.0, 200.0]]))
+    res = solve_epsilon(joint, 0.05)
+    assert res.feasible
+    # a perfect draft answers everything at its first component
+    assert res.avg_macs == pytest.approx(1.0)
+
+    h0_bad = _route_final_hist(bins, n0, rng, agree_p=0.5)
+    joint = compose_escalation(
+        h0_bad, h1, stage_agree=0.0,
+        mac_prefix=compose_mac_prefix([[1.0, 2.0], [100.0, 200.0]]))
+    res = solve_epsilon(joint, 0.05)
+    s0, esc, s1 = split_tier_thresholds(res.thresholds, n0)
+    # nothing may answer on the draft: every draft gate at the sentinel
+    assert all(t > 1.0 for t in s0[:-1])
+    assert esc > 1.0
+    assert res.avg_macs >= 100.0
+
+
+def test_compose_escalation_starved_next_stage():
+    """No stage-1 evidence: its factor degrades to uniform with zero
+    intra agreement, so the solver leans on deferral (the proxy-perfect
+    final), never on unobserved stage-1 intra exits."""
+    rng = np.random.default_rng(5)
+    bins, n0 = 4, 2
+    h0 = _route_final_hist(bins, n0, rng)
+    empty = ExitHistogram(
+        counts=np.zeros((bins,)), agree=np.zeros((1, bins)),
+        mac_prefix=np.asarray([10.0, 20.0]), bins=bins)
+    joint = compose_escalation(
+        h0, empty, stage_agree=0.9,
+        mac_prefix=compose_mac_prefix([[1.0, 2.0], [10.0, 20.0]]))
+    assert joint.total == pytest.approx(h0.total)
+    ja = joint.agree.reshape((joint.n_routing,) + (bins,) * joint.n_routing)
+    assert float(np.abs(ja[-1]).sum()) == 0.0
+
+
+def test_route_final_telemetry_shapes():
+    cfg = reduced(get_config("qwen2.5-3b")).with_autotune(
+        enabled=True, epsilon=0.1, bins=8)
+    n_m = cfg.cascade.n_components
+    assert n_cells(n_m, 8) == 8 ** (n_m - 1)
+    assert n_cells(n_m, 8, route_final=True) == 8 ** n_m
+    tel = init_telemetry(n_m, 8, [1.0] * n_m)
+    assert tel.shadow_agree.shape == (n_m - 1, 8 ** (n_m - 1))
+    tel_rf = init_telemetry(n_m, 8, [1.0] * n_m, route_final=True)
+    assert tel_rf.shadow_agree.shape == (n_m, 8 ** n_m)
+    assert tel_rf.shadow_count.shape == (8 ** n_m,)
+
+
+def test_route_final_streams_unchanged(stack):
+    """route_final only widens telemetry — token/exit/conf streams are
+    identical with it on and off."""
+    cfg_s, m_s, p_s, *_ = stack
+    prompts = _prompts(cfg_s)
+    runs = {}
+    for rf in (False, True):
+        cfg = cfg_s.with_autotune(enabled=True, epsilon=0.1, bins=8,
+                                  shadow_every=2, route_final=rf)
+        eng = _engine(cfg, build_model(cfg), p_s)
+        for r in _reqs(prompts):
+            eng.submit(r)
+        eng.run(100)
+        runs[rf] = eng
+    for i in range(len(prompts)):
+        assert runs[True].finished[i]["tokens"] == \
+            runs[False].finished[i]["tokens"]
+        assert runs[True].finished[i]["confs"] == \
+            runs[False].finished[i]["confs"]
+
+
+def test_tier_controller_pushes_solved_thresholds(stack):
+    cfg_s, _, p_s, cfg_b, _, p_b = stack
+    cfg0 = cfg_s.with_autotune(enabled=True, epsilon=0.2, bins=8,
+                               shadow_every=2, route_final=True) \
+        .with_escalation(enabled=True, threshold=0.5)
+    cfg1 = cfg_b.with_autotune(enabled=True, epsilon=0.2, bins=8,
+                               shadow_every=2)
+    e0 = _engine(cfg0, build_model(cfg0), p_s)
+    e1 = _engine(cfg1, build_model(cfg1), p_b)
+    ctl = TierThresholdController(epsilon=0.2, interval=8, min_shadow=4.0,
+                                  min_escalations=2)
+    tier = ModelCascadeTier([e0, e1], controller=ctl)
+    prompts = _prompts(cfg_s, n=6)
+    for r in _reqs(prompts, max_new=10):
+        tier.submit(r)
+    tier.run(400)
+    assert ctl.solves >= 1
+    ths0, esc, ths1 = ctl.last_thresholds
+    assert e0.current_thresholds() == ths0
+    assert e1.current_thresholds() == ths1
+    assert tier.router.thresholds[0] == esc
+    assert ths0[-1] == 0.0 and ths1[-1] == 0.0
+
+
+def test_tier_controller_requires_route_final(stack):
+    cfg_s, _, p_s, cfg_b, _, p_b = stack
+    cfg0 = cfg_s.with_autotune(enabled=True, epsilon=0.2)
+    cfg1 = cfg_b.with_autotune(enabled=True, epsilon=0.2)
+    e0 = _engine(cfg0, build_model(cfg0), p_s)
+    e1 = _engine(cfg1, build_model(cfg1), p_b)
+    with pytest.raises(ValueError, match="route_final"):
+        ModelCascadeTier([e0, e1],
+                         controller=TierThresholdController(epsilon=0.2))
+
+
+# ---------------------------------------------------------------------------
+# soft-cap donation + metrics-window semantics
+# ---------------------------------------------------------------------------
+
+def test_block_pool_soft_cap():
+    pool = BlockPool(num_blocks=9, block_size=4, block_bytes=128)
+    assert pool.can_alloc(8)
+    pool.set_soft_cap(3)
+    assert not pool.can_alloc(4)
+    ids = pool.alloc(3)
+    assert len(ids) == 3
+    assert pool.alloc(1) is None           # cap-bound, not free-list-bound
+    pool.set_soft_cap(None)
+    assert pool.can_alloc(5)
+    assert pool.stats()["soft_cap"] is None
+    pool.set_soft_cap(100)                 # clamps to physical (8)
+    assert pool.soft_cap == 8
+    with pytest.raises(ValueError):
+        pool.set_soft_cap(-1)
+
+
+def test_block_pool_reset_window_preserves_peak():
+    pool = BlockPool(num_blocks=9, block_size=4)
+    ids = pool.alloc(5)
+    pool.free(ids[:3], by_exit=True)
+    pool.begin_chunk()
+    pool.free(ids[3:])
+    pool.end_chunk()
+    assert pool.chunk_reclaims == [2]
+    pool.reset_window()
+    assert pool.chunk_reclaims == []
+    assert pool.peak_used == 5
+    assert pool.reclaimed_by_exit == 3
+    assert pool.reclaimed_at_retire == 2
+
+
+def test_engine_reset_metrics_preserves_pool_peak(stack):
+    cfg_s, m_s, p_s, *_ = stack
+    eng = _engine(_paged(cfg_s), m_s, p_s)
+    for r in _reqs(_prompts(cfg_s)):
+        eng.submit(r)
+    eng.run(100)
+    peak = eng.pcache.pool.peak_used
+    assert peak > 0
+    assert eng.pcache.pool.chunk_reclaims
+    eng.reset_metrics()
+    assert eng.pcache.pool.peak_used == peak
+    assert eng.pcache.pool.chunk_reclaims == []
+    esc = eng.stats()["escalation"]
+    assert esc["prefill_positions_fresh"] == 0
+    assert esc["replay_prefill_macs"] == 0.0
+
+
+def test_tier_block_donation(stack):
+    cfg_s, m_s, p_s, cfg_b, m_b, p_b = stack
+    e0 = _engine(_paged(cfg_s), m_s, p_s)
+    e1 = _engine(_paged(cfg_b), m_b, p_b)
+    tier = ModelCascadeTier([e0, e1])
+    with pytest.raises(ValueError, match="soft caps"):
+        tier.donate_blocks(0, 1, 2)
+    p0, p1 = e0.pcache.pool, e1.pcache.pool
+    p0.set_soft_cap(6)
+    p1.set_soft_cap(6)
+    cap0, cap1 = p0.soft_cap, p1.soft_cap
+    gained = tier.donate_blocks(0, 1, 4)
+    # byte-priced: the big stage's blocks cost more, so it gains at most
+    # the byte-equivalent of 4 draft blocks (and the budget never grows)
+    assert gained == (4 * p0.block_bytes) // p1.block_bytes
+    assert p1.soft_cap == cap1 + gained
+    charged = cap0 - p0.soft_cap
+    assert 0 < charged <= 4
+    assert charged * p0.block_bytes >= gained * p1.block_bytes
+    assert tier.stats()["blocks_donated"] == gained
+
+
+def test_donation_requires_matching_geometry(stack):
+    cfg_s, m_s, p_s, cfg_b, m_b, p_b = stack
+    e0 = _engine(_paged(cfg_s), m_s, p_s)
+    e1 = _engine(cfg_b, m_b, p_b)             # dense: nothing to donate
+    tier = ModelCascadeTier([e0, e1])
+    with pytest.raises(ValueError, match="paged"):
+        tier.donate_blocks(0, 1, 1)
+
+
+# ---------------------------------------------------------------------------
+# satellite: budget@macs:shared deprecation routing
+# ---------------------------------------------------------------------------
+
+def _budget_fixture():
+    rng = np.random.default_rng(11)
+    confs = [rng.random(3000) for _ in range(3)]
+    corrects = [(rng.random(3000) < p).astype(np.float64)
+                for p in (0.7, 0.8, 0.95)]
+    return confs, corrects, [1.0, 2.0, 4.0]
+
+
+def test_shared_alias_routes_through_solver():
+    """budget@X:shared with correctness warns once and lands on the SAME
+    thresholds as the solver spelling."""
+    confs, corrects, macs = _budget_fixture()
+    solver_pol = get_policy("budget@2.0")
+    solver_pol.fit(confs, macs, corrects=corrects)
+
+    policy_mod._SHARED_QUANTILE_WARNED = False
+    shared_pol = get_policy("budget@2.0:shared")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        shared_pol.fit(confs, macs, corrects=corrects)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert shared_pol.thresholds == solver_pol.thresholds
+    assert shared_pol.fitted_avg_macs == solver_pol.fitted_avg_macs
+
+    # the warning is one-time: a second fit stays silent
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        get_policy("budget@2.0:shared").fit(confs, macs,
+                                            corrects=corrects)
+    assert not [x for x in w2
+                if issubclass(x.category, DeprecationWarning)]
+    policy_mod._SHARED_QUANTILE_WARNED = False
+
+
+def test_budget_without_corrects_keeps_legacy_bisection():
+    confs, _, macs = _budget_fixture()
+    policy_mod._SHARED_QUANTILE_WARNED = False
+    pol = get_policy("budget@2.0")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        pol.fit(confs, macs)
+    assert [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert pol.thresholds is not None
+    policy_mod._SHARED_QUANTILE_WARNED = False
+
+
+# ---------------------------------------------------------------------------
+# threshold <-> edge round-trip (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 4), st.integers(0, 10 ** 9))
+def test_edges_thresholds_roundtrip(bins, n_routing, seed):
+    rng = np.random.default_rng(seed)
+    edges = tuple(int(rng.integers(0, bins + 1)) for _ in range(n_routing))
+    ths = thresholds_from_edges(edges, bins)
+    assert len(ths) == n_routing + 1 and ths[-1] == 0.0
+    assert edges_from_thresholds(ths, bins) == edges
+    # and a full double round-trip is a fixed point
+    assert thresholds_from_edges(
+        edges_from_thresholds(ths, bins), bins) == ths

@@ -1,0 +1,246 @@
+"""Fleet-tier benchmark: merged-telemetry solve + drain/migration.
+
+Four measurements, persisted to ``BENCH_serving.json`` (under ``fleet``)
+by ``benchmarks/run.py`` and gated by ``scripts/check_bench_serving.py``:
+
+* **merged solve == pooled solve** — per-engine fixed-bin histograms
+  merged with :func:`repro.autotune.merge_histograms` must reproduce the
+  pooled-sample histogram and its epsilon/budget solves EXACTLY (bin
+  counts sum — ``bincount(a ++ b) == bincount(a) + bincount(b)``); the
+  gate is equality, not tolerance.
+
+* **warm-up** — a 4-engine fleet under one
+  :class:`repro.fleet.TelemetryAggregator` reaches its first stable
+  threshold push when each member has contributed only ~1/4 of the
+  ``min_shadow`` evidence window; a single engine solving alone needs the
+  whole window itself.  Gate: the busiest member's shadow evidence at the
+  fleet's first push is <= 1/3 of what the single engine needed — the
+  acceptance criterion's "1/3 the shadow samples of any single engine
+  solving alone".
+
+* **streams identical after push** — once thresholds match, an engine
+  that received them through the fleet's ``push_thresholds`` fan-out
+  decodes bit-identical streams to an engine pushed directly (the fleet
+  adds routing, never semantics).
+
+* **drain** — draining one member of the 4-engine fleet mid-decode
+  (``mode="migrate"``) finishes every submitted request with zero drops
+  and zero lost tokens: committed prefixes replay into siblings through
+  PR 7's ``build_replay`` and every final stream starts with the exact
+  tokens the drained member had already committed.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.fleet import FleetScheduler, TelemetryAggregator
+from repro.models.model import build_model
+from repro.serving import CascadeServingEngine, Request
+
+N_ENGINES = 4
+BINS = 16
+MAC_PREFIX = (1.0, 2.0, 3.0)
+
+# set by run(): machine-readable summary merged into BENCH_serving.json
+LAST_FLEET_SUMMARY = None
+
+
+def _cfg(autotune: bool, min_shadow: int = 0):
+    cfg = (reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
+           .with_cascade(thresholds=(0.5, 0.0), exit_mode="cond_batch"))
+    if autotune:
+        cfg = cfg.with_autotune(enabled=True, bins=BINS, shadow_every=2,
+                                min_shadow=min_shadow, resolve_every=4)
+    return cfg.with_fleet(n_engines=N_ENGINES, drain_mode="migrate")
+
+
+def _engine(cfg, model, params, **kw):
+    kw.setdefault("lane_batch", 2)
+    kw.setdefault("n_lanes", 1)
+    kw.setdefault("cache_len", 64)
+    return CascadeServingEngine(cfg, model, params, **kw)
+
+
+def _requests(cfg, n, max_new, seed=7):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 6).astype(
+                        np.int32),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _merged_vs_pooled() -> bool:
+    """Per-engine histograms merged vs the pooled-sample histogram:
+    exact count equality AND exact solve equality, both directions."""
+    from repro.autotune import (ExitHistogram, merge_histograms,
+                                solve_budget, solve_epsilon)
+    rng = np.random.default_rng(0)
+    shards, confs, agrees = [], [], []
+    for _ in range(N_ENGINES):
+        c = rng.random((2, 4000))
+        a = (rng.random((2, 4000)) < 0.25 + 0.7 * c).astype(np.float64)
+        shards.append(ExitHistogram.from_samples(c, a, MAC_PREFIX, BINS))
+        confs.append(c)
+        agrees.append(a)
+    merged = merge_histograms(shards)
+    pooled = ExitHistogram.from_samples(np.concatenate(confs, axis=1),
+                                        np.concatenate(agrees, axis=1),
+                                        MAC_PREFIX, BINS)
+    ok = (np.array_equal(merged.counts, pooled.counts)
+          and np.array_equal(merged.agree, pooled.agree))
+    for eps in (0.02, 0.05, 0.1):
+        ok = ok and (solve_epsilon(merged, eps).edges
+                     == solve_epsilon(pooled, eps).edges)
+    for budget in (1.8, 2.2):
+        ok = ok and (solve_budget(merged, budget).edges
+                     == solve_budget(pooled, budget).edges)
+    return ok
+
+
+def _drive_until_push(stepper, pushed, max_ticks=600):
+    """Step until ``pushed()`` reports a push; ticks spent, or -1."""
+    for tick in range(max_ticks):
+        stepper()
+        if pushed():
+            return tick + 1
+    return -1
+
+
+def _warmup(model, params, min_shadow: int) -> dict:
+    """Fleet-of-4 vs single-engine shadow evidence at the first push."""
+    from repro.autotune import ThresholdController, merge_telemetry
+    cfg = _cfg(autotune=True, min_shadow=min_shadow)
+
+    members = [_engine(cfg, model, params) for _ in range(N_ENGINES)]
+    agg = TelemetryAggregator(cfg, members[0].mac_prefix,
+                              resolve_every=4, min_shadow=min_shadow,
+                              hysteresis=0.0)
+    fleet = FleetScheduler(members, aggregator=agg)
+    for req in _requests(cfg, 4 * N_ENGINES, max_new=40):
+        fleet.submit(req)
+    fleet_ticks = _drive_until_push(fleet.step, lambda: agg.pushes > 0)
+    per_member = agg.per_member_shadow(fleet)
+    fleet_shadow = max(per_member) if per_member else 0.0
+
+    ctrl = ThresholdController(cfg, members[0].mac_prefix,
+                               resolve_every=4, min_shadow=min_shadow,
+                               hysteresis=0.0)
+    single = _engine(cfg, model, params, autotune=ctrl)
+    for req in _requests(cfg, 8, max_new=40):
+        single.submit(req)
+    single_ticks = _drive_until_push(single.step,
+                                     lambda: ctrl.pushes > 0)
+    tels = single.lane_telemetry()
+    single_shadow = (float(merge_telemetry(tels)["shadow_steps"])
+                     if tels else 0.0)
+
+    ratio = fleet_shadow / single_shadow if single_shadow else float("inf")
+    return {
+        "min_shadow": min_shadow,
+        "fleet_ticks_to_first_push": fleet_ticks,
+        "single_ticks_to_first_push": single_ticks,
+        "fleet_max_member_shadow_at_first_push": fleet_shadow,
+        "single_shadow_at_first_push": single_shadow,
+        "warmup_ratio": ratio,
+        "fleet_pushes": agg.pushes,
+        "thresholds": (list(agg.thresholds)
+                       if agg.thresholds is not None else None),
+    }
+
+
+def _streams_after_push(model, params, thresholds) -> bool:
+    """Fan-out push vs direct push: identical streams on identical
+    traffic (deterministic host runtime, same params)."""
+    cfg = _cfg(autotune=True)
+    direct = _engine(cfg, model, params)
+    direct.push_thresholds(thresholds)
+    for req in _requests(cfg, 6, max_new=8, seed=11):
+        direct.submit(req)
+    direct.run(300)
+
+    member = _engine(cfg, model, params)
+    fleet = FleetScheduler([member])
+    fleet.push_thresholds(thresholds)
+    for req in _requests(cfg, 6, max_new=8, seed=11):
+        fleet.submit(req)
+    fleet.run(300)
+    return all(fleet.finished[rid]["tokens"] == direct.finished[rid]
+               ["tokens"] for rid in direct.finished)
+
+
+def _drain(model, params, n_requests: int) -> dict:
+    """Drain one member of a 4-engine fleet mid-decode; zero drops, zero
+    lost tokens (committed prefixes preserved verbatim)."""
+    cfg = _cfg(autotune=False)
+    fleet = FleetScheduler([_engine(cfg, model, params)
+                            for _ in range(N_ENGINES)])
+    max_new = 10
+    for req in _requests(cfg, n_requests, max_new=max_new):
+        fleet.submit(req)
+    for _ in range(3):
+        fleet.step()
+    committed = {}
+    for ln in fleet.members[0].lanes:
+        for s in ln["slots"]:
+            if not s.done and s.request is not None:
+                committed[s.request.rid] = list(s.generated)
+    summary = fleet.drain(0, mode="migrate")
+    fleet.run(600)
+    st = fleet.stats()
+    preserved = all(
+        fleet.finished[rid]["tokens"][:len(pre)] == pre
+        and len(fleet.finished[rid]["tokens"]) == max_new
+        for rid, pre in committed.items())
+    return {
+        "submitted": n_requests,
+        "finished": st["requests_finished"],
+        "dropped": n_requests - st["requests_finished"],
+        "requeued": len(summary["requeued"]),
+        "migrated": len(summary["migrated"]),
+        "completed_at_drain": len(summary["completed"]),
+        "prefix_preserved": bool(preserved),
+        "discarded_tokens": st["discarded_tokens"],
+        "drained": 0 in fleet.drained,
+    }
+
+
+def run(quick: bool = False):
+    global LAST_FLEET_SUMMARY
+    rows = []
+    cfg = _cfg(autotune=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    t0 = time.perf_counter()
+    exact = _merged_vs_pooled()
+    rows.append(("fleet/merged_solve", (time.perf_counter() - t0) * 1e6,
+                 f"matches_pooled={exact}"))
+
+    t0 = time.perf_counter()
+    warm = _warmup(model, params, min_shadow=24 if quick else 48)
+    rows.append(("fleet/warmup", (time.perf_counter() - t0) * 1e6,
+                 f"ratio={warm['warmup_ratio']:.3f}"))
+
+    t0 = time.perf_counter()
+    streams = (_streams_after_push(model, params, warm["thresholds"])
+               if warm["thresholds"] is not None else False)
+    rows.append(("fleet/streams_after_push",
+                 (time.perf_counter() - t0) * 1e6,
+                 f"identical={streams}"))
+
+    t0 = time.perf_counter()
+    drain = _drain(model, params, n_requests=8 if quick else 12)
+    rows.append(("fleet/drain", (time.perf_counter() - t0) * 1e6,
+                 f"dropped={drain['dropped']},"
+                 f"migrated={drain['migrated']}"))
+
+    LAST_FLEET_SUMMARY = {
+        "n_engines": N_ENGINES,
+        "merged_solve_matches_pooled": bool(exact),
+        "warmup": warm,
+        "streams_identical_after_push": bool(streams),
+        "drain": drain,
+    }
+    return rows

@@ -34,11 +34,11 @@ def main() -> None:
 
     from benchmarks import (bench_table2, bench_fig3, bench_fig4,
                             bench_llm_cascade, bench_kernels,
-                            bench_ablation, bench_autotune)
+                            bench_ablation, bench_autotune, bench_fleet)
     mods = [("table2", bench_table2), ("fig3", bench_fig3),
             ("fig4", bench_fig4), ("ablation", bench_ablation),
             ("llm_cascade", bench_llm_cascade), ("kernels", bench_kernels),
-            ("autotune", bench_autotune)]
+            ("autotune", bench_autotune), ("fleet", bench_fleet)]
     if args.only:
         wanted = {w.strip() for w in args.only.split(",") if w.strip()}
         unknown = wanted - {n for n, _ in mods}
@@ -65,7 +65,8 @@ def main() -> None:
             f.write(out + "\n")
     summary = getattr(bench_llm_cascade, "LAST_SERVING_SUMMARY", None)
     autotune = getattr(bench_autotune, "LAST_AUTOTUNE_SUMMARY", None)
-    if summary is not None or autotune is not None:
+    fleet = getattr(bench_fleet, "LAST_FLEET_SUMMARY", None)
+    if summary is not None or autotune is not None or fleet is not None:
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         path = os.path.join(root, "BENCH_serving.json")
         # partial runs (--only) update their section and keep the rest
@@ -75,11 +76,16 @@ def main() -> None:
                 data = json.load(f)
         if summary is not None:
             autotune_keep = data.get("autotune")
+            fleet_keep = data.get("fleet")
             data = dict(summary)
             if autotune_keep is not None:
                 data["autotune"] = autotune_keep
+            if fleet_keep is not None:
+                data["fleet"] = fleet_keep
         if autotune is not None:
             data["autotune"] = autotune
+        if fleet is not None:
+            data["fleet"] = fleet
         with open(path, "w") as f:
             json.dump(data, f, indent=2)
             f.write("\n")

@@ -66,6 +66,10 @@ MIN_THRESHOLDS = 3
 MIN_BUDGETS = 3
 # the acceptance bar: telemetry accumulation may cost at most 3% tokens/s
 TELEMETRY_RATIO_MIN = 0.97
+# fleet gates: a 4-engine fleet must reach its first merged-solve push on
+# <= 1/3 the per-member shadow evidence a lone engine needs
+MIN_FLEET_ENGINES = 4
+WARMUP_RATIO_MAX = 1.0 / 3.0
 # realized-MAC slack for the equal-budget comparison: the solver fits on
 # a BINS-bin histogram and is evaluated on raw samples, so its realized
 # spend can quantize a hair past the shared fit's
@@ -161,6 +165,73 @@ def check_escalation(esc) -> bool:
           f"{float(esc.get('small_avg_macs') or 0):.3f} @ "
           f"{float(esc.get('small_accuracy') or 0):.4f}; "
           f"esc threshold {esc.get('escalation_threshold')})")
+    return ok
+
+
+def check_fleet(fl) -> bool:
+    """Fleet-tier gates (written by ``benchmarks/bench_fleet.py``):
+    the merged-telemetry solve is EXACTLY the pooled solve, the fleet
+    warm-up beats a lone engine by >= 3x in per-member shadow evidence,
+    threshold fan-out preserves streams bit-for-bit, and a mid-decode
+    drain drops zero requests and loses zero committed tokens."""
+    ok = True
+    if int(fl.get("n_engines") or 0) < MIN_FLEET_ENGINES:
+        print(f"fleet: bench ran {fl.get('n_engines')} engines; the "
+              f"acceptance row needs >= {MIN_FLEET_ENGINES}",
+              file=sys.stderr)
+        ok = False
+    if not fl.get("merged_solve_matches_pooled"):
+        print("fleet: merged-histogram solve diverged from the pooled-"
+              "sample solve — fixed-bin merge must be exact",
+              file=sys.stderr)
+        ok = False
+    warm = fl.get("warmup") or {}
+    ratio = float(warm.get("warmup_ratio") or 1e30)
+    if ratio > WARMUP_RATIO_MAX + 1e-9:
+        print(f"fleet: warm-up ratio {ratio:.3f} > {WARMUP_RATIO_MAX:.3f}"
+              f" — the busiest member's shadow at first push must be <= "
+              f"1/3 of a lone engine's", file=sys.stderr)
+        ok = False
+    if int(warm.get("fleet_pushes") or 0) < 1:
+        print("fleet: aggregator never pushed thresholds",
+              file=sys.stderr)
+        ok = False
+    if not fl.get("streams_identical_after_push"):
+        print("fleet: fan-out-pushed engine diverged from a directly-"
+              "pushed engine once thresholds matched", file=sys.stderr)
+        ok = False
+    drain = fl.get("drain") or {}
+    if int(drain.get("dropped", 1)) != 0 or (
+            int(drain.get("finished") or 0)
+            != int(drain.get("submitted") or -1)):
+        print(f"fleet: drain dropped requests: submitted="
+              f"{drain.get('submitted')} finished={drain.get('finished')}",
+              file=sys.stderr)
+        ok = False
+    if not drain.get("prefix_preserved"):
+        print("fleet: a migrated request's committed prefix was not "
+              "preserved verbatim", file=sys.stderr)
+        ok = False
+    if int(drain.get("migrated", 0)) < 1:
+        print("fleet: drain migrated no in-flight requests — the bench "
+              "must exercise the replay path", file=sys.stderr)
+        ok = False
+    if int(drain.get("discarded_tokens", 1)) != 0:
+        print(f"fleet: {drain.get('discarded_tokens')} committed tokens "
+              "discarded — same-config migration must replay, never "
+              "discard", file=sys.stderr)
+        ok = False
+    if not drain.get("drained"):
+        print("fleet: the drained member never reported empty",
+              file=sys.stderr)
+        ok = False
+    print(f"fleet warmup: member shadow {warm.get('fleet_max_member_shadow_at_first_push')} "
+          f"vs lone {warm.get('single_shadow_at_first_push')} "
+          f"(ratio {ratio:.3f})")
+    print(f"fleet drain: {drain.get('finished')}/{drain.get('submitted')} "
+          f"finished, {drain.get('migrated')} migrated, "
+          f"{drain.get('requeued')} requeued, "
+          f"{drain.get('discarded_tokens')} tokens discarded")
     return ok
 
 
@@ -260,6 +331,8 @@ def main() -> int:
         ok = check_autotune(s["autotune"]) and ok
     if s.get("escalation") is not None:
         ok = check_escalation(s["escalation"]) and ok
+    if s.get("fleet") is not None:
+        ok = check_fleet(s["fleet"]) and ok
     return 0 if ok else 1
 
 

@@ -22,7 +22,7 @@ from repro.autotune.artifacts import (CalibrationArtifact, config_key,
 from repro.autotune.controller import ThresholdController
 from repro.autotune.solver import (ExitHistogram, SolveResult,
                                    compose_escalation, compose_mac_prefix,
-                                   edges_from_thresholds,
+                                   edges_from_thresholds, merge_histograms,
                                    split_tier_thresholds, solve_budget,
                                    solve_epsilon, thresholds_from_edges)
 from repro.autotune.telemetry import (ExitTelemetry, conf_to_bin,
@@ -34,8 +34,9 @@ __all__ = [
     "CalibrationArtifact", "config_key", "load_artifact", "save_artifact",
     "ThresholdController",
     "ExitHistogram", "SolveResult", "compose_escalation",
-    "compose_mac_prefix", "edges_from_thresholds", "split_tier_thresholds",
-    "solve_budget", "solve_epsilon", "thresholds_from_edges",
+    "compose_mac_prefix", "edges_from_thresholds", "merge_histograms",
+    "split_tier_thresholds", "solve_budget", "solve_epsilon",
+    "thresholds_from_edges",
     "ExitTelemetry", "conf_to_bin", "init_telemetry", "merge_telemetry",
     "pack_rider", "telemetry_for", "telemetry_to_host",
 ]

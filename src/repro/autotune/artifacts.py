@@ -58,6 +58,11 @@ class CalibrationArtifact:
     avg_macs: float                   # solver's expected avg MACs/sample
     shadow_steps: float               # evidence size behind the solve
     edges: Tuple[int, ...] = ()
+    # provenance: "engine" = one engine's controller solved this;
+    # "fleet" = a TelemetryAggregator solved it on merged fleet telemetry
+    # (larger evidence window per wall-clock second — preferred seed for
+    # fresh engines).  Absent in pre-fleet artifact files → "engine".
+    source: str = "engine"
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)

@@ -52,7 +52,17 @@ class ThresholdController:
     defaults come from ``cfg.autotune``.  ``mac_budget > 0`` selects the
     budget direction, else the ε direction.  The engine calls
     :meth:`maybe_update` once per tick; everything else is internal.
+
+    The "engine" the controller drives only needs the three-method surface
+    ``lane_telemetry()`` / ``current_thresholds()`` / ``push_thresholds()``
+    — :class:`repro.fleet.TelemetryAggregator` subclasses this controller
+    and attaches it to a whole :class:`~repro.fleet.FleetScheduler`
+    through exactly that surface (``source`` marks the artifacts it
+    writes).
     """
+
+    # artifact provenance tag; the fleet aggregator overrides with "fleet"
+    source = "engine"
 
     def __init__(self, cfg, mac_prefix, *, epsilon: Optional[float] = None,
                  mac_budget: Optional[float] = None,
@@ -84,6 +94,7 @@ class ThresholdController:
         self.skipped_small = 0
         self.drift_resets = 0
         self.last_result = None
+        self.last_shadow = 0.0         # shadow evidence behind the last push
         self.thresholds: Optional[Tuple[float, ...]] = None
         self.warm_artifact = None
         if artifact_dir:
@@ -188,6 +199,7 @@ class ThresholdController:
         engine.push_thresholds(res.thresholds)
         self.pushes += 1
         self.thresholds = res.thresholds
+        self.last_shadow = float(base["shadow_steps"])
         log.info("pushed thresholds %s (%s=%s, agreement %.4f, avg MACs "
                  "%.3g, %d shadow obs)", res.thresholds, self.direction,
                  self.mac_budget or self.epsilon, res.agreement,
@@ -211,7 +223,8 @@ class ThresholdController:
             agreement=float(res.agreement),
             avg_macs=float(res.avg_macs),
             shadow_steps=float(shadow_steps),
-            edges=tuple(res.edges))
+            edges=tuple(res.edges),
+            source=self.source)
         return save_artifact(self.artifact_dir, art)
 
     def stats(self) -> dict:
@@ -222,6 +235,8 @@ class ThresholdController:
             "pushes": self.pushes,
             "skipped_small": self.skipped_small,
             "drift_resets": self.drift_resets,
+            "last_shadow_steps": float(self.last_shadow),
+            "source": self.source,
             "thresholds": ([float(t) for t in self.thresholds]
                            if self.thresholds is not None else None),
             "agreement": (float(self.last_result.agreement)

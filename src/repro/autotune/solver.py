@@ -323,6 +323,56 @@ class ExitHistogram:
 
 
 # ---------------------------------------------------------------------------
+# fleet: merging per-engine histograms
+# ---------------------------------------------------------------------------
+
+def merge_histograms(hists: Sequence[ExitHistogram]) -> ExitHistogram:
+    """Merge per-engine histograms into one fleet histogram.
+
+    Fixed-bin joint histograms over the SAME grid merge by elementwise
+    addition — ``bincount(a ++ b) == bincount(a) + bincount(b)`` — so the
+    merged histogram is *exactly* the histogram of the pooled samples, and
+    a solve on it is exactly the pooled-sample solve (no approximation;
+    `tests/test_fleet.py` and the fleet bench pin equality, not
+    tolerance).  This is what makes one fleet-wide resolve K-fold faster
+    to warm up than K per-engine resolves: the min_shadow evidence window
+    fills from every engine's shadow sampler at once.
+
+    Requires identical bins / routing-axis count / mac_prefix across
+    members (homogeneous fleet — same model config, which the
+    TelemetryAggregator enforces via ``config_key`` equality).
+    ``final_agree`` must be set on all members or none; mixing a labeled
+    member with proxy members would silently blend two different accuracy
+    definitions.
+    """
+    if not hists:
+        raise ValueError("merge_histograms needs at least one histogram")
+    h0 = hists[0]
+    for i, h in enumerate(hists[1:], start=1):
+        if h.bins != h0.bins or h.n_routing != h0.n_routing:
+            raise ValueError(
+                f"histogram {i} has grid (bins={h.bins}, "
+                f"n_routing={h.n_routing}) != member 0's (bins={h0.bins}, "
+                f"n_routing={h0.n_routing}); fleet merge needs one grid")
+        if not np.allclose(h.mac_prefix, h0.mac_prefix):
+            raise ValueError(
+                f"histogram {i} has mac_prefix {h.mac_prefix.tolist()} != "
+                f"member 0's {h0.mac_prefix.tolist()}; a fleet merge is "
+                "only meaningful across engines paying the same costs")
+        if (h.final_agree is None) != (h0.final_agree is None):
+            raise ValueError(
+                "final_agree set on some members but not others — labeled "
+                "and proxy accuracy definitions cannot merge")
+    return ExitHistogram(
+        counts=np.sum([h.counts for h in hists], axis=0),
+        agree=np.sum([h.agree for h in hists], axis=0),
+        mac_prefix=h0.mac_prefix.copy(),
+        bins=h0.bins,
+        final_agree=(None if h0.final_agree is None else
+                     np.sum([h.final_agree for h in hists], axis=0)))
+
+
+# ---------------------------------------------------------------------------
 # cross-model escalation: heterogeneous (stage, component) composition
 # ---------------------------------------------------------------------------
 

@@ -248,6 +248,73 @@ class EscalationConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Cross-engine fleet knobs (``repro.fleet``).
+
+    A :class:`repro.fleet.FleetScheduler` fronts ``n_engines`` serving
+    engines (or escalation tiers) and places each incoming request by a
+    weighted score over three signals: the distance between the member's
+    observed exit-depth EMA and the request's predicted depth
+    (``depth_weight`` — the same DepthCompactor prior the engines use for
+    lane assignment, lifted one level up), the member's occupancy
+    (``load_weight`` — live slots plus queued requests over capacity),
+    and, for paged members, block-pool pressure (``block_weight`` — the
+    used fraction of the shared KV pool).  Weights are relative; zeroing
+    one disables that signal.
+
+    Health tracking probes each member's ``stats()`` every
+    ``heartbeat_every`` scheduler ticks.  A failed probe backs off
+    exponentially (``backoff_base ** consecutive_failures`` ticks,
+    bounded by ``backoff_cap``) before re-probing; ``max_failures``
+    consecutive failures mark the member unhealthy — excluded from
+    placement, stepping and telemetry until a later probe succeeds.
+
+    ``drain_mode`` picks the default :meth:`~repro.fleet.FleetScheduler.
+    drain` semantics: ``"finish"`` lets in-flight slots run to exit or
+    budget on the draining member while its queued requests requeue to
+    siblings; ``"migrate"`` additionally cancels in-flight slots and
+    replays their committed prefixes into siblings (PR 7's replay path —
+    zero committed tokens lost between prefix-compatible members).
+    """
+
+    n_engines: int = 1
+    depth_weight: float = 1.0
+    load_weight: float = 1.0
+    block_weight: float = 0.5
+    heartbeat_every: int = 4
+    max_failures: int = 3
+    backoff_base: int = 2
+    backoff_cap: int = 64
+    drain_mode: str = "finish"
+
+    def __post_init__(self):
+        if self.n_engines < 1:
+            raise ValueError(
+                f"fleet.n_engines must be >= 1, got {self.n_engines}")
+        for knob in ("depth_weight", "load_weight", "block_weight"):
+            if getattr(self, knob) < 0.0:
+                raise ValueError(
+                    f"fleet.{knob} must be >= 0, got {getattr(self, knob)}")
+        if self.heartbeat_every < 1:
+            raise ValueError(
+                f"fleet.heartbeat_every must be >= 1, got "
+                f"{self.heartbeat_every}")
+        if self.max_failures < 1:
+            raise ValueError(
+                f"fleet.max_failures must be >= 1, got {self.max_failures}")
+        if self.backoff_base < 1:
+            raise ValueError(
+                f"fleet.backoff_base must be >= 1, got {self.backoff_base}")
+        if self.backoff_cap < 1:
+            raise ValueError(
+                f"fleet.backoff_cap must be >= 1, got {self.backoff_cap}")
+        if self.drain_mode not in ("finish", "migrate"):
+            raise ValueError(
+                f"fleet.drain_mode must be 'finish' or 'migrate', got "
+                f"{self.drain_mode!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelConfig:
     """One architecture.  Units follow each model card exactly."""
 
@@ -328,6 +395,7 @@ class ModelConfig:
         default_factory=PagedCacheConfig)
     escalation: EscalationConfig = dataclasses.field(
         default_factory=EscalationConfig)
+    fleet: FleetConfig = dataclasses.field(default_factory=FleetConfig)
 
     # ------------------------------------------------------------------
     @property
@@ -365,6 +433,10 @@ class ModelConfig:
     def with_escalation(self, **kw) -> "ModelConfig":
         return dataclasses.replace(
             self, escalation=dataclasses.replace(self.escalation, **kw))
+
+    def with_fleet(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(
+            self, fleet=dataclasses.replace(self.fleet, **kw))
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

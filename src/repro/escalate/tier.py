@@ -111,6 +111,68 @@ class ModelCascadeTier:
         self._order += 1
         self.engines[0].submit(req)
 
+    # -- fleet member surface --------------------------------------------
+    # A tier can be a FleetScheduler member next to plain engines: the
+    # fleet talks to a tier through its ENTRY stage (stage 0) — that is
+    # where fresh traffic lands, queues, and is admission-gated.  Deeper
+    # stages are internal to the tier (escalated requests carry committed
+    # prefixes the fleet must not requeue), so live/queued accounting
+    # deliberately counts anything past the stage-0 queue as live.
+    # Tiers have no fleet `cancel`, so a drain degrades to "finish" mode.
+    @property
+    def cfg(self):
+        """The ENTRY stage's config — what fleet placement and the
+        aggregator's config_key check see."""
+        return self.engines[0].cfg
+
+    @property
+    def admitting(self) -> bool:
+        return self.engines[0].admitting
+
+    @admitting.setter
+    def admitting(self, value: bool) -> None:
+        self.engines[0].admitting = bool(value)
+
+    def free_slot_count(self) -> int:
+        return self.engines[0].free_slot_count()
+
+    def queued_count(self) -> int:
+        return self.engines[0].queued_count()
+
+    def live_rids(self) -> List[int]:
+        """Tracked rids past the entry queue — decoding on some stage, or
+        escalated (committed prefix held; never fleet-requeueable)."""
+        queued = {r.rid for r in self.engines[0].queue}
+        return [rid for rid in self._tracked if rid not in queued]
+
+    def take_queue(self) -> List[Request]:
+        """Fleet drain hook: remove and return the ENTRY queue's fresh
+        requests (nothing decoded yet) and untrack them, so a scheduler
+        can requeue them to a sibling member.  Escalated requests never
+        sit in the stage-0 queue (escalation only moves forward), so
+        everything returned is an original submission."""
+        taken = self.engines[0].take_queue()
+        for req in taken:
+            self._tracked.pop(req.rid, None)
+        return taken
+
+    def lane_telemetry(self) -> List:
+        """The ENTRY stage's lane telemetry.  Deliberately stage 0 only:
+        deeper stages run different cascades (different mac_prefix /
+        possibly route_final axes), so their telemetry does not merge
+        into a homogeneous fleet histogram — cross-stage solving is the
+        TierThresholdController's composed-histogram job, not the fleet
+        aggregator's."""
+        return self.engines[0].lane_telemetry()
+
+    def current_thresholds(self):
+        return self.engines[0].current_thresholds()
+
+    def push_thresholds(self, thresholds) -> None:
+        """Fleet-pushed thresholds land on the ENTRY stage (the cascade
+        the fleet's merged histogram describes)."""
+        self.engines[0].push_thresholds(thresholds)
+
     def set_escalation_threshold(self, stage: int, threshold: float):
         """Live escalation-threshold swap — plain data, like the engines'
         ``push_thresholds``; the next drain pass uses it."""

@@ -1,0 +1,25 @@
+"""Fleet tier: one scheduler over N serving engines (ROADMAP "fleet
+tier" item — the layer above engines and escalation tiers).
+
+* :mod:`repro.fleet.scheduler` — :class:`FleetScheduler`: depth/load/
+  block-aware placement (the DepthCompactor prior lifted one level up),
+  drain with committed-prefix migration (PR 7's replay path), failure
+  rescue.
+* :mod:`repro.fleet.aggregator` — :class:`TelemetryAggregator`: the
+  ThresholdController run against the whole fleet through the same
+  three-method surface an engine exposes; fixed-bin histograms merge by
+  addition, so one merged solve equals the pooled-sample solve and warms
+  up K-fold faster than any member alone.
+* :mod:`repro.fleet.health` — :class:`EngineHealth`: heartbeat probes,
+  consecutive-failure counting, bounded exponential backoff.
+"""
+from repro.fleet.aggregator import TelemetryAggregator
+from repro.fleet.health import EngineHealth, HealthState
+from repro.fleet.scheduler import FleetScheduler
+
+__all__ = [
+    "EngineHealth",
+    "FleetScheduler",
+    "HealthState",
+    "TelemetryAggregator",
+]

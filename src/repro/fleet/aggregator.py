@@ -1,0 +1,71 @@
+"""Fleet-wide telemetry merge + one shared solve.
+
+:class:`TelemetryAggregator` IS a :class:`~repro.autotune.controller.
+ThresholdController` — the fleet scheduler exposes the same three-method
+surface an engine does (``lane_telemetry()`` concatenating every healthy
+member's lanes, ``current_thresholds()``, ``push_thresholds()`` fanning
+out to every member), so the controller's whole pipeline — window
+accounting, min-shadow / hysteresis / drift guards, histogram build,
+coordinate-descent solve, artifact persistence — runs UNCHANGED one
+level up.  There is no fleet-specific solver: fixed-bin histograms merge
+by elementwise addition (:func:`repro.autotune.solver.merge_histograms`),
+so the merged solve is exactly the pooled-sample solve.
+
+The aggregation win is warm-up: the ``min_shadow`` evidence window fills
+from K engines' shadow samplers at once, so the fleet reaches its first
+stable threshold push in ~1/K the per-engine shadow samples any single
+engine would need — gated in ``BENCH_serving.json``'s ``fleet`` section.
+Artifacts written here carry ``source="fleet"`` so a warm-starting
+engine (or a member added later via ``FleetScheduler.add_member``) can
+tell it is seeding from fleet-scale evidence.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.autotune.controller import ThresholdController
+from repro.autotune.solver import ExitHistogram, merge_histograms
+from repro.autotune.telemetry import merge_telemetry
+
+
+class TelemetryAggregator(ThresholdController):
+    """A ThresholdController whose "engine" is a whole FleetScheduler.
+
+    Construction is the controller's (``cfg``, ``mac_prefix``, the guard
+    overrides, ``artifact_dir``); pass the instance as
+    ``FleetScheduler(..., aggregator=...)`` and the scheduler attaches it
+    (warm-start push fans to every member) and drives
+    :meth:`maybe_update` once per fleet tick.  Members must NOT carry
+    their own controllers — two solvers pushing thresholds at each other
+    through the same engines is churn, and the scheduler refuses the
+    combination at construction.
+    """
+
+    source = "fleet"
+
+    # ------------------------------------------------------------------
+    # introspection helpers (bench/gate instrumentation; the solve path
+    # above never calls these)
+    def per_member_shadow(self, fleet) -> List[float]:
+        """Each member's own accumulated shadow evidence — what that
+        engine would be solving from if it were alone.  The warm-up gate
+        compares ``max(per_member_shadow)`` at first push against the
+        single-engine ``min_shadow`` requirement."""
+        out = []
+        for m in fleet.members:
+            tels = m.lane_telemetry()
+            out.append(float(merge_telemetry(tels)["shadow_steps"])
+                       if tels else 0.0)
+        return out
+
+    def merged_histogram(self, fleet) -> ExitHistogram:
+        """Merge per-member histograms explicitly (members → histograms →
+        :func:`merge_histograms`).  Equivalent to the solve path's merged-
+        telemetry histogram — by construction, since fixed-bin counts sum
+        — but built the long way so tests/benches can pin that equality
+        member-by-member."""
+        hists = [ExitHistogram.from_telemetry(merge_telemetry(tels),
+                                              mac_prefix=self.mac_prefix)
+                 for m in fleet.members
+                 for tels in [m.lane_telemetry()] if tels]
+        return merge_histograms(hists)

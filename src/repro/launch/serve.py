@@ -91,6 +91,18 @@ def main():
                     help="stage-0 escalation threshold: final-component "
                          "answers below it defer to stage 1 (0.0 never, "
                          "1.1 always)")
+    ap.add_argument("--fleet", type=int, default=1,
+                    help="> 1 serves a FleetScheduler over this many "
+                         "engine replicas (repro.fleet): depth/load-aware "
+                         "placement, and with --autotune one "
+                         "TelemetryAggregator solving merged fleet "
+                         "telemetry instead of per-engine controllers")
+    ap.add_argument("--drain", action="store_true",
+                    help="fleet demo: drain engine 0 (mode=migrate) a few "
+                         "ticks into the run — queued work requeues, "
+                         "in-flight committed prefixes replay into "
+                         "siblings, and the run must still finish every "
+                         "request")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -114,7 +126,13 @@ def main():
                                    block_size=args.block_size,
                                    num_blocks=args.num_blocks)
     if escalate:
+        if args.fleet > 1:
+            raise SystemExit("--fleet combines with plain engines; to "
+                             "fleet escalation tiers build them "
+                             "programmatically (repro.fleet)")
         return _serve_tier(args, cfg)
+    if args.fleet > 1 or args.drain:
+        return _serve_fleet(args, cfg)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     controller = None
@@ -162,6 +180,67 @@ def main():
                  mem["reclaimed_by_exit"], mem["reclaimed_at_retire"],
                  stats["admission_wait_mean"] or 0.0)
     assert stats["requests_finished"] == args.requests
+
+
+def _serve_fleet(args, cfg):
+    """N-engine fleet (repro.fleet): one scheduler, one merged solve.
+
+    The replicas share ONE parameter init — fleet placement moves
+    requests between engines, so migrated streams are only bit-exact when
+    every member computes the same function (the production analogue:
+    replicas serving the same checkpoint)."""
+    from repro.core.macs import segment_macs_per_token
+    from repro.fleet import FleetScheduler, TelemetryAggregator
+
+    n_engines = max(2, args.fleet)
+    cfg = cfg.with_fleet(n_engines=n_engines, drain_mode="migrate")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    members = [CascadeServingEngine(cfg, model, params,
+                                    lane_batch=args.lane_batch,
+                                    n_lanes=args.lanes,
+                                    cache_len=args.cache_len,
+                                    runtime=args.runtime,
+                                    chunk=args.chunk)
+               for _ in range(n_engines)]
+    aggregator = None
+    if args.autotune:
+        aggregator = TelemetryAggregator(
+            cfg, segment_macs_per_token(cfg, args.cache_len),
+            # smoke runs are dozens of ticks — resolve early so the lane
+            # exercises the merged solve + fan-out push path
+            resolve_every=8 if args.smoke else None,
+            min_shadow=4 if args.smoke else None,
+            artifact_dir=args.artifacts)
+    fleet = FleetScheduler(members, aggregator=aggregator)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        fleet.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                args.prompt_len).astype(np.int32),
+            max_new_tokens=args.max_new))
+    if args.drain:
+        for _ in range(3):
+            fleet.step()
+        summary = fleet.drain(0, mode="migrate")
+        log.info("drain(0): %s", json.dumps(summary))
+    fleet.run()
+    stats = fleet.stats()
+    log.info("fleet: %d members, %d finished (%d placements, %d "
+             "migrations, %d requeues, %d tokens discarded), drained %s",
+             stats["n_members"], stats["requests_finished"],
+             stats["placements"], stats["migrations"], stats["requeues"],
+             stats["discarded_tokens"], stats["drained"])
+    for i, ms in enumerate(stats["members"]):
+        log.info("member %d: %s", i, json.dumps(ms, default=str))
+    if args.autotune:
+        log.info("aggregator: thresholds %s, %s",
+                 fleet.current_thresholds(),
+                 json.dumps(stats["aggregator"], default=str))
+    assert stats["requests_finished"] == args.requests, stats
+    assert stats["discarded_tokens"] == 0, \
+        "same-config migration must replay, never discard"
 
 
 def _serve_tier(args, cfg0):

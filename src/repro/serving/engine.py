@@ -38,6 +38,7 @@ includes compilation.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import itertools
 import time
@@ -171,6 +172,11 @@ class CascadeServingEngine:
             self.lanes.append(lane)
         self.queue: List[Request] = []
         self.finished: Dict[int, dict] = {}
+        # admission gate (fleet drain hook): False stops _admit() pulling
+        # from the queue while in-flight slots keep decoding to exit or
+        # budget — the "stop admitting, run to completion" half of a drain.
+        # Plain host state; flipping it never touches device buffers.
+        self.admitting = True
         # admission-latency accounting (ticks between submit and admit) and
         # lanes whose block tables changed since their state last synced
         self._tick = 0
@@ -298,6 +304,29 @@ class CascadeServingEngine:
     def submit(self, req: Request):
         self._submit_tick.setdefault(req.rid, self._tick)
         self.queue.append(req)
+
+    # -- fleet surface ----------------------------------------------------
+    def free_slot_count(self) -> int:
+        """Slots a placement could admit into right now (all lanes)."""
+        return sum(1 for ln in self.lanes for s in ln["slots"] if s.done)
+
+    def queued_count(self) -> int:
+        return len(self.queue)
+
+    def live_rids(self) -> List[int]:
+        """Rids currently decoding in a slot (admitted, not finished)."""
+        return [s.request.rid for ln in self.lanes for s in ln["slots"]
+                if not s.done and s.request is not None]
+
+    def take_queue(self) -> List[Request]:
+        """Drain hook: remove and return every still-queued request (FIFO
+        order), clearing their submit-tick bookkeeping so a scheduler can
+        requeue them to a sibling engine without this engine ever counting
+        them as admitted or dropped."""
+        taken, self.queue = self.queue, []
+        for req in taken:
+            self._submit_tick.pop(req.rid, None)
+        return taken
 
     def _predict_depth(self, req: Request) -> float:
         """Expected exit depth for an incoming request: an explicit hint in
@@ -596,9 +625,14 @@ class CascadeServingEngine:
         (tokens past the defer point were decoded from a context the next
         stage re-answers — their compute is already in the MAC window,
         which is honest: it was spent).  Returns the finished record (its
-        ``escalated`` flag set) or None if ``rid`` is not live.  Queued
-        requests are not cancellable — nothing was decoded, so there is
-        nothing to defer on; re-route them before submission instead.
+        ``escalated`` flag set) or None if ``rid`` is not known.  A
+        still-QUEUED request (submitted, never admitted) is removed from
+        the queue and gets a well-formed empty record — no tokens, no
+        lane, escalated=True — so drain-time requeue can treat "cancel
+        then resubmit elsewhere" uniformly whether or not the request ever
+        reached a slot.  Queue cancels do not count toward
+        ``cancelled_for_escalation`` (nothing was decoded, so no
+        escalation accounting applies) and never touch a lane.
 
         Safe between ticks in both runtimes: the slot's ``done`` flag
         drops it from the next dispatch's active mask, and the paged
@@ -615,6 +649,19 @@ class CascadeServingEngine:
                 self._cancelled_for_escalation += 1
                 self._retire(s, lane_id, slot_idx, escalated=True)
                 return self.finished[rid]
+        for qi, req in enumerate(self.queue):
+            if req.rid != rid:
+                continue
+            self.queue.pop(qi)
+            self._submit_tick.pop(rid, None)
+            self.finished[rid] = {
+                "tokens": [],
+                "exit_depths": [],
+                "confs": [],
+                "lane": None,
+                "escalated": True,
+            }
+            return self.finished[rid]
         return None
 
     def _live_mask(self, lane) -> np.ndarray:
@@ -716,7 +763,8 @@ class CascadeServingEngine:
         ThresholdController attached, the tick ends with its (rarely
         firing) telemetry → solver → threshold-push check."""
         self._tick += 1
-        self._admit()
+        if self.admitting:
+            self._admit()
         for lane_id, lane in enumerate(self.lanes):
             if all(s.done for s in lane["slots"]):
                 continue
@@ -923,11 +971,16 @@ class CascadeServingEngine:
         return 1e6 * self._decode_seconds / self._decode_tokens
 
     def stats(self) -> dict:
+        """A SNAPSHOT of the engine's metrics: every nested container is
+        deep-copied, so a fleet poller holding the returned dict across
+        later ``step()`` calls never observes torn state (the live
+        counters — ``_admit_waits``, the paged pool's reclaim window, the
+        escalation counters — keep mutating underneath)."""
         depths = list(itertools.chain.from_iterable(
             r["exit_depths"] for r in self.finished.values()))
         opp = (self._skip_opportunities / self._skip_opportunity_total
                if self._skip_opportunity_total else 0.0)
-        return {
+        return copy.deepcopy({
             "requests_finished": len(self.finished),
             "mean_exit_depth": float(np.mean(depths)) if depths else None,
             "exit_histogram": np.bincount(
@@ -989,7 +1042,7 @@ class CascadeServingEngine:
                 "replay_prefill_macs": self._replay_prefill_macs,
                 "replay_prefill_seconds": self._replay_prefill_seconds,
             },
-        }
+        })
 
     def _autotune_stats(self):
         if not self.cfg.autotune.enabled:

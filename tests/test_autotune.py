@@ -568,6 +568,76 @@ def test_artifact_roundtrip_and_key_guard(tmp_path):
         load_artifact(str(tmp_path), cfg)
 
 
+def test_artifact_cross_process_warm_start(tmp_path):
+    """The fleet contract: a solve saved by one process warm-starts a
+    controller in another process that only shares the config SPEC.  The
+    two processes never share objects — each reconstructs its ModelConfig
+    independently, and config_key must land on the same digest."""
+    def fresh_cfg():
+        # an independent construction chain == "another process"
+        return _tiny_autotune()
+
+    cfg_a = fresh_cfg()
+    art = CalibrationArtifact(
+        config_key=config_key(cfg_a), thresholds=(0.375, 0.0),
+        direction="epsilon", target=0.05, bins=16,
+        mac_prefix=(1.0, 2.0), agreement=0.95, avg_macs=1.3,
+        shadow_steps=512.0, edges=(6,), source="fleet")
+    path = save_artifact(str(tmp_path), art)
+    cfg_b = fresh_cfg()
+    assert cfg_a is not cfg_b
+    assert config_key(cfg_a) == config_key(cfg_b)
+    ctrl = ThresholdController(cfg_b, (1.0, 2.0),
+                               artifact_dir=str(tmp_path))
+    assert ctrl.thresholds == (0.375, 0.0)
+    assert ctrl.warm_artifact.source == "fleet"
+    # pre-fleet artifact files carry no "source" key; they load with the
+    # engine default (format is forward-compatible, not versioned away)
+    with open(path) as f:
+        raw = json.load(f)
+    raw.pop("source")
+    with open(path, "w") as f:
+        json.dump(raw, f)
+    assert load_artifact(str(tmp_path), cfg_a).source == "engine"
+
+
+def test_config_key_ignores_ordering_and_nonsemantic_fields():
+    """config_key is a digest of the cascade's calibration identity:
+    insensitive to dict ordering (sort_keys by construction) and to every
+    knob that does not change what the telemetry measures — serving
+    shapes, dtype, thresholds (the OUTPUT of a solve), autotune guard
+    settings.  Semantic knobs must change it."""
+    cfg = _tiny_autotune()
+    key = config_key(cfg)
+    # ordering: the digest is over a sort_keys dump of the identity dict,
+    # so any permutation of the same fields hashes identically
+    import hashlib
+    ident = {
+        "version": 1,
+        "name": cfg.name,
+        "n_layers": cfg.n_layers,
+        "vocab_size": cfg.vocab_size,
+        "segments": [list(s) for s in cfg.segments],
+        "n_components": cfg.cascade.n_components,
+        "confidence": cfg.cascade.confidence,
+        "bins": cfg.autotune.bins,
+    }
+    reordered = dict(reversed(list(ident.items())))
+    assert (hashlib.sha256(
+        json.dumps(reordered, sort_keys=True).encode()).hexdigest() == key)
+    # non-semantic: same key
+    assert config_key(cfg.replace(dtype="bfloat16")) == key
+    assert config_key(cfg.replace(use_kernels=True)) == key
+    assert config_key(cfg.with_cascade(thresholds=(0.9, 0.0),
+                                       exit_mode="select")) == key
+    assert config_key(cfg.with_autotune(epsilon=0.4, min_shadow=999,
+                                        resolve_every=3)) == key
+    # semantic: different key
+    assert config_key(cfg.with_cascade(confidence="entropy")) != key
+    assert config_key(cfg.with_autotune(bins=8)) != key
+    assert config_key(cfg.replace(name="other")) != key
+
+
 def test_threshold_for_epsilon_validation_split():
     """α* comes from the stats arrays; the threshold is picked on the
     validation curve — a validation set with worse tail accuracy forces a

@@ -1,0 +1,508 @@
+"""Fleet tier (repro.fleet): scheduler, merged telemetry, drain/migration.
+
+Pins the subsystem's contracts: fixed-bin histogram merging is EXACTLY the
+pooled-sample histogram (so the fleet solve equals the pooled solve, not
+approximates it), placement follows the depth/load signals, drain loses
+zero requests and zero committed tokens (migrated prefixes replay through
+PR 7's path), the aggregator fans one merged solve to every member with
+zero retraces, and health tracking backs off / rescues a failing member.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.autotune import (ExitHistogram, load_artifact, merge_histograms,
+                            solve_epsilon)
+from repro.configs import get_config, reduced
+from repro.configs.base import FleetConfig
+from repro.escalate import ModelCascadeTier
+from repro.fleet import EngineHealth, FleetScheduler, TelemetryAggregator
+from repro.models.model import build_model
+from repro.serving import CascadeServingEngine, Request
+
+BINS = 16
+
+
+def _tiny(**cascade):
+    cfg = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
+    return cfg.with_cascade(**cascade)
+
+
+def _tiny_autotune(**kw):
+    cascade = kw.pop("cascade", {})
+    at = dict(enabled=True, bins=BINS, shadow_every=4, min_shadow=8,
+              resolve_every=8)
+    at.update(kw)
+    return _tiny(**cascade).with_autotune(**at)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = _tiny()
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _engines(cfg, model, params, n=2, **kw):
+    kw.setdefault("lane_batch", 2)
+    kw.setdefault("n_lanes", 1)
+    kw.setdefault("cache_len", 32)
+    return [CascadeServingEngine(cfg, model, params, **kw)
+            for _ in range(n)]
+
+
+def _submit(fleet, cfg, n, max_new=6, seed=3, prompt_len=6):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        fleet.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                       prompt_len).astype(np.int32),
+            max_new_tokens=max_new))
+
+
+# ---------------------------------------------------------------------------
+# histogram merge: exact pooled equality
+# ---------------------------------------------------------------------------
+
+def test_merge_histograms_is_exactly_the_pooled_histogram():
+    """bincount(a ++ b) == bincount(a) + bincount(b): a merged fleet
+    histogram IS the pooled-sample histogram, so the merged solve equals
+    the pooled solve edge for edge — equality, not tolerance."""
+    rng = np.random.default_rng(0)
+    mac_prefix = (1.0, 2.0, 3.0)
+    shards = []
+    confs, agrees = [], []
+    for _ in range(4):
+        c = rng.random((2, 2000))
+        a = (rng.random((2, 2000)) < 0.3 + 0.6 * c).astype(np.float64)
+        shards.append(ExitHistogram.from_samples(c, a, mac_prefix, BINS))
+        confs.append(c)
+        agrees.append(a)
+    merged = merge_histograms(shards)
+    pooled = ExitHistogram.from_samples(np.concatenate(confs, axis=1),
+                                        np.concatenate(agrees, axis=1),
+                                        mac_prefix, BINS)
+    np.testing.assert_array_equal(merged.counts, pooled.counts)
+    np.testing.assert_array_equal(merged.agree, pooled.agree)
+    for eps in (0.02, 0.1):
+        assert (solve_epsilon(merged, eps).edges
+                == solve_epsilon(pooled, eps).edges)
+
+
+def test_merge_histograms_refuses_incompatible_grids():
+    rng = np.random.default_rng(1)
+    c = rng.random((1, 100))
+    a = np.ones((1, 100))
+    h16 = ExitHistogram.from_samples(c, a, (1.0, 2.0), 16)
+    h8 = ExitHistogram.from_samples(c, a, (1.0, 2.0), 8)
+    hcost = ExitHistogram.from_samples(c, a, (1.0, 9.0), 16)
+    with pytest.raises(ValueError, match="grid"):
+        merge_histograms([h16, h8])
+    with pytest.raises(ValueError, match="mac_prefix"):
+        merge_histograms([h16, hcost])
+    with pytest.raises(ValueError, match="at least one"):
+        merge_histograms([])
+
+
+# ---------------------------------------------------------------------------
+# engine fleet hooks (the two bugfix satellites ride here)
+# ---------------------------------------------------------------------------
+
+def test_engine_stats_is_a_deep_snapshot(tiny_model):
+    """stats() must be safe to hold across later step()s: mutating the
+    returned dict never writes through to the engine, and nested dicts
+    are fresh objects per call."""
+    model, params = tiny_model
+    cfg = _tiny(thresholds=(0.5, 0.0))
+    eng = CascadeServingEngine(cfg, model, params, lane_batch=2,
+                               n_lanes=1, cache_len=32)
+    eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=4))
+    eng.run(50)
+    s1 = eng.stats()
+    s1["escalation"]["prefill_positions_fresh"] = 10**9
+    s1["memory"]["reclaimed_by_exit"] = 10**9
+    s1["segments_run"][0] = 10**9
+    s2 = eng.stats()
+    assert s2["escalation"]["prefill_positions_fresh"] != 10**9
+    assert s2["memory"]["reclaimed_by_exit"] != 10**9
+    assert s2["segments_run"][0] != 10**9
+    assert s1["escalation"] is not s2["escalation"]
+
+
+def test_engine_cancel_queued_request(tiny_model):
+    """cancel() of a never-admitted request removes it from the queue and
+    returns a well-formed empty record (the drain-time requeue path)."""
+    model, params = tiny_model
+    cfg = _tiny(thresholds=(0.5, 0.0))
+    eng = CascadeServingEngine(cfg, model, params, lane_batch=2,
+                               n_lanes=1, cache_len=32)
+    prompts = [np.arange(4, dtype=np.int32) for _ in range(4)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    # capacity 2: rids 2, 3 still queue after the first tick
+    eng.step()
+    assert 3 in [r.rid for r in eng.queue]
+    before = eng._cancelled_for_escalation
+    rec = eng.cancel(3)
+    assert rec == {"tokens": [], "exit_depths": [], "confs": [],
+                   "lane": None, "escalated": True}
+    assert 3 not in [r.rid for r in eng.queue]
+    assert 3 not in eng._submit_tick
+    # queue cancels are not escalation cancels (nothing was decoded)
+    assert eng._cancelled_for_escalation == before
+    assert eng.cancel(99) is None
+    eng.run(100)
+    assert sorted(eng.finished) == [0, 1, 2, 3]
+    assert len(eng.finished[2]["tokens"]) == 4
+
+
+def test_engine_admitting_gate_and_take_queue(tiny_model):
+    model, params = tiny_model
+    cfg = _tiny(thresholds=(0.5, 0.0))
+    eng = CascadeServingEngine(cfg, model, params, lane_batch=2,
+                               n_lanes=1, cache_len=32)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=4))
+    eng.admitting = False
+    eng.step()
+    assert eng.queued_count() == 3 and not eng.live_rids()
+    taken = eng.take_queue()
+    assert [r.rid for r in taken] == [0, 1, 2]
+    assert eng.queued_count() == 0 and not eng._submit_tick
+    eng.admitting = True
+    for r in taken:
+        eng.submit(r)
+    eng.run(100)
+    assert sorted(eng.finished) == [0, 1, 2]
+    assert eng.free_slot_count() == 2
+
+
+# ---------------------------------------------------------------------------
+# scheduler logic on fake members (deterministic, no device work)
+# ---------------------------------------------------------------------------
+
+class FakeMember:
+    """Minimal fleet-member surface: instant one-token-per-step decode."""
+
+    def __init__(self, cfg, capacity=4):
+        self.cfg = cfg
+        self.capacity = capacity
+        self.admitting = True
+        self.fail = False
+        self.queue = []
+        self.live = {}
+        self.finished = {}
+
+    def submit(self, req):
+        self.queue.append(req)
+
+    def step(self):
+        if self.fail:
+            raise RuntimeError("boom")
+        while (self.admitting and self.queue
+               and len(self.live) < self.capacity):
+            r = self.queue.pop(0)
+            self.live[r.rid] = (r, [])
+        for rid, (r, toks) in list(self.live.items()):
+            toks.append(1000 * rid + len(toks))
+            if len(toks) >= r.max_new_tokens:
+                self.finished[rid] = self._record(toks, escalated=False)
+                del self.live[rid]
+
+    @staticmethod
+    def _record(toks, escalated):
+        return {"tokens": list(toks), "exit_depths": [0] * len(toks),
+                "confs": [1.0] * len(toks), "lane": 0,
+                "escalated": escalated}
+
+    def stats(self):
+        if self.fail:
+            raise RuntimeError("probe boom")
+        return {"requests_finished": len(self.finished)}
+
+    def free_slot_count(self):
+        return self.capacity - len(self.live)
+
+    def queued_count(self):
+        return len(self.queue)
+
+    def live_rids(self):
+        return list(self.live)
+
+    def take_queue(self):
+        taken, self.queue = self.queue, []
+        return taken
+
+    def cancel(self, rid, keep=None):
+        if rid in self.live:
+            r, toks = self.live.pop(rid)
+            toks = toks if keep is None else toks[:keep]
+            self.finished[rid] = self._record(toks, escalated=True)
+            return self.finished[rid]
+        return None
+
+
+def _fake_fleet(n=2, capacity=4, **fleet_kw):
+    cfg = _tiny()
+    fleet_cfg = FleetConfig(n_engines=n, **fleet_kw)
+    members = [FakeMember(cfg, capacity=capacity) for _ in range(n)]
+    return FleetScheduler(members, fleet=fleet_cfg), members
+
+
+def test_placement_follows_depth_signal():
+    fleet, members = _fake_fleet(depth_weight=1.0, load_weight=0.0,
+                                 block_weight=0.0)
+    fleet.compactor.lane_stats[0].depth_ema = 0.0
+    fleet.compactor.lane_stats[1].depth_ema = 1.0
+    fleet.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                         max_new_tokens=2,
+                         extra={"predicted_depth": 1.0}))
+    fleet.submit(Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                         max_new_tokens=2,
+                         extra={"predicted_depth": 0.0}))
+    fleet.step()
+    assert [r.rid for (r, _) in members[1].live.values()] == [0]
+    assert [r.rid for (r, _) in members[0].live.values()] == [1]
+
+
+def test_placement_follows_load_signal():
+    fleet, members = _fake_fleet(depth_weight=0.0, load_weight=1.0,
+                                 block_weight=0.0, capacity=8)
+    for i in range(4):
+        fleet.submit(Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                             max_new_tokens=8))
+    fleet.step()
+    # with equal depth scores the load term must spread the burst
+    assert len(members[0].live) == 2 and len(members[1].live) == 2
+
+
+def test_drain_migrate_on_fakes_finalizes_and_requeues():
+    fleet, members = _fake_fleet(capacity=2)
+    for i in range(5):
+        fleet.submit(Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                             max_new_tokens=4))
+    fleet.step()            # 4 live (2 per member), 1 queued at the fleet
+    lived_on_0 = set(members[0].live)
+    summary = fleet.drain(0, mode="migrate")
+    assert set(summary["migrated"]) == lived_on_0
+    assert not members[0].live and not members[0].queue
+    # the cancel records were migration bookkeeping, not completions
+    assert not members[0].finished
+    fleet.run(50)
+    assert sorted(fleet.finished) == [0, 1, 2, 3, 4]
+    assert 0 in fleet.drained
+    for rid in lived_on_0:
+        rec = fleet.finished[rid]
+        assert rec["migrations"] == 1
+        # committed prefix survived the migration verbatim
+        assert rec["tokens"][0] == 1000 * rid
+        assert len(rec["tokens"]) == 4
+    st = fleet.stats()
+    assert st["requests_finished"] == 5 and st["discarded_tokens"] == 0
+
+
+def test_drain_finish_mode_completes_in_flight_locally():
+    fleet, members = _fake_fleet(capacity=2)
+    for i in range(3):
+        fleet.submit(Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                             max_new_tokens=4))
+    fleet.step()
+    lived_on_0 = set(members[0].live)
+    assert lived_on_0
+    fleet.drain(0, mode="finish")
+    fleet.run(50)
+    assert sorted(fleet.finished) == [0, 1, 2]
+    for rid in lived_on_0:
+        assert fleet.finished[rid]["migrations"] == 0
+        assert fleet.finished[rid]["engine"] == 0
+    assert 0 in fleet.drained
+    # resume re-opens admission
+    fleet.resume(0)
+    assert members[0].admitting and 0 not in fleet.drained
+
+
+def test_unhealthy_member_is_rescued_and_recovers():
+    fleet, members = _fake_fleet(capacity=2, max_failures=2,
+                                 heartbeat_every=1, backoff_base=2,
+                                 backoff_cap=4, load_weight=1.0,
+                                 depth_weight=0.0)
+    for i in range(4):
+        fleet.submit(Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                             max_new_tokens=3))
+    members[1].fail = True
+    fleet.run(60)
+    # every request finished on the healthy member
+    assert sorted(fleet.finished) == [0, 1, 2, 3]
+    assert all(r["engine"] == 0 for r in fleet.finished.values())
+    assert not fleet.health.healthy(1)
+    st = fleet.health.stats()[1]
+    assert st["unhealthy_marks"] == 1 and st["total_failures"] >= 2
+    # recovery: a successful probe restores the member
+    members[1].fail = False
+    tick = fleet._tick + st["backoff"] + 1
+    assert fleet.health.beat(1, tick, members[1].stats) is True
+    assert fleet.health.healthy(1)
+
+
+def test_health_backoff_window_blocks_probes():
+    h = EngineHealth(1, max_failures=3, backoff_base=2, backoff_cap=8)
+    assert h.beat(0, 0, lambda: 1) is True
+    h.note_failure(0, 10)
+    st = h.states[0]
+    assert st.backoff == 2 and st.next_probe_tick == 12
+    assert h.beat(0, 11, lambda: 1) is None     # inside the window
+    h.note_failure(0, 12)
+    assert st.backoff == 4
+    h.note_failure(0, 16)
+    assert st.backoff == 8 and not st.healthy   # capped, unhealthy at 3
+    h.note_failure(0, 24)
+    assert st.backoff == 8                      # stays capped
+    assert h.beat(0, 40, lambda: 1) is True     # recovery resets
+    assert st.healthy and st.failures == 0 and st.backoff == 0
+
+
+# ---------------------------------------------------------------------------
+# real engines: end-to-end fleet, drain mid-decode, merged solve
+# ---------------------------------------------------------------------------
+
+def test_fleet_end_to_end_on_real_engines(tiny_model):
+    model, params = tiny_model
+    cfg = _tiny(thresholds=(0.5, 0.0))
+    fleet = FleetScheduler(_engines(cfg, model, params, n=2))
+    _submit(fleet, cfg, 6, max_new=5)
+    fleet.run(200)
+    assert sorted(fleet.finished) == list(range(6))
+    for rec in fleet.finished.values():
+        assert len(rec["tokens"]) == 5
+        assert rec["migrations"] == 0 and rec["discarded_tokens"] == 0
+    st = fleet.stats()
+    assert st["placements"] == 6
+    # both members actually served traffic (load signal spreads a burst
+    # that exceeds one member's 2 slots)
+    assert {rec["engine"] for rec in fleet.finished.values()} == {0, 1}
+
+
+def test_fleet_drain_mid_decode_replays_committed_prefix(tiny_model):
+    """The acceptance-criteria drain semantics on real engines: drain one
+    engine mid-run, committed prefixes replay into the sibling through
+    build_replay, zero requests dropped, zero tokens lost."""
+    model, params = tiny_model
+    cfg = _tiny(thresholds=(0.5, 0.0))
+    fleet = FleetScheduler(_engines(cfg, model, params, n=2))
+    _submit(fleet, cfg, 6, max_new=8)
+    for _ in range(3):
+        fleet.step()
+    committed = {}
+    for ln in fleet.members[0].lanes:
+        for s in ln["slots"]:
+            if not s.done and s.request is not None:
+                committed[s.request.rid] = list(s.generated)
+    assert committed, "need in-flight work on member 0 to drain"
+    summary = fleet.drain(0, mode="migrate")
+    assert set(summary["migrated"]) >= {
+        r for r, t in committed.items() if len(t) < 8}
+    fleet.run(300)
+    assert sorted(fleet.finished) == list(range(6))
+    for rid, prefix in committed.items():
+        rec = fleet.finished[rid]
+        assert rec["tokens"][:len(prefix)] == prefix   # nothing lost
+        assert len(rec["tokens"]) == 8                 # full budget served
+        assert rec["discarded_tokens"] == 0
+    # the migrated prefill rode the escalation replay accounting
+    esc = fleet.members[1].stats()["escalation"]
+    assert esc["prefill_positions_replayed"] > 0
+    assert 0 in fleet.drained
+
+
+def test_aggregator_merged_solve_fans_out_without_retrace(tiny_model,
+                                                          tmp_path):
+    model, params = tiny_model
+    cfg = _tiny_autotune(cascade=dict(thresholds=(0.5, 0.0),
+                                      exit_mode="cond_batch"))
+    members = _engines(cfg, model, params, n=2)
+    agg = TelemetryAggregator(cfg, members[0].mac_prefix,
+                              resolve_every=4, min_shadow=4,
+                              hysteresis=0.0, artifact_dir=str(tmp_path))
+    fleet = FleetScheduler(members, aggregator=agg)
+    _submit(fleet, cfg, 6, max_new=8)
+    fleet.run(300)
+    assert sorted(fleet.finished) == list(range(6))
+    assert agg.resolves >= 1 and agg.pushes >= 1
+    ths = fleet.current_thresholds()
+    assert ths is not None
+    for m in members:
+        assert m.current_thresholds() == ths       # fan-out reached all
+        assert m._decode._cache_size() == 1        # push never retraced
+    # the merged histogram equals merging per-member histograms
+    per = agg.merged_histogram(fleet)
+    assert per.total == sum(agg.per_member_shadow(fleet))
+    # artifacts carry fleet provenance; a new member warm-starts from the
+    # live fleet thresholds immediately
+    art = load_artifact(str(tmp_path), cfg)
+    assert art is not None and art.source == "fleet"
+    fresh = CascadeServingEngine(cfg, model, params, lane_batch=2,
+                                 n_lanes=1, cache_len=32)
+    idx = fleet.add_member(fresh)
+    assert idx == 2 and fresh.current_thresholds() == ths
+
+
+def test_aggregator_refuses_heterogeneous_or_controllered_members(
+        tiny_model, tmp_path):
+    model, params = tiny_model
+    cfg = _tiny_autotune(cascade=dict(thresholds=(0.5, 0.0)))
+    members = _engines(cfg, model, params, n=2)
+    agg = TelemetryAggregator(cfg, members[0].mac_prefix)
+    plain = CascadeServingEngine(_tiny(), model, params, lane_batch=2,
+                                 n_lanes=1, cache_len=32)
+    with pytest.raises(ValueError, match="autotune disabled"):
+        FleetScheduler([members[0], plain], aggregator=agg)
+    other_cfg = _tiny_autotune(cascade=dict(thresholds=(0.5, 0.0),
+                                            confidence="entropy"))
+    other = CascadeServingEngine(other_cfg, build_model(other_cfg),
+                                 params, lane_batch=2, n_lanes=1,
+                                 cache_len=32)
+    with pytest.raises(ValueError, match="config_key"):
+        FleetScheduler([members[0], other], aggregator=agg)
+
+
+# ---------------------------------------------------------------------------
+# tier as a fleet member
+# ---------------------------------------------------------------------------
+
+def test_tier_exposes_the_fleet_member_surface(tiny_model):
+    model, params = tiny_model
+    cfg = _tiny(thresholds=(0.5, 0.0))
+    eng = CascadeServingEngine(cfg, model, params, lane_batch=2,
+                               n_lanes=1, cache_len=32)
+    tier = ModelCascadeTier([eng])
+    assert tier.cfg is eng.cfg
+    assert tier.free_slot_count() == 2 and tier.queued_count() == 0
+    for i in range(2):
+        tier.submit(Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                            max_new_tokens=3))
+    tier.admitting = False
+    assert not eng.admitting
+    assert tier.queued_count() == 2 and tier.live_rids() == []
+    taken = tier.take_queue()
+    assert [r.rid for r in taken] == [0, 1]
+    assert not tier._tracked            # untracked for fleet requeue
+    tier.admitting = True
+    for r in taken:
+        tier.submit(r)
+    tier.run(100)
+    assert sorted(tier.finished) == [0, 1]
+
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError, match="drain_mode"):
+        FleetConfig(drain_mode="teleport")
+    with pytest.raises(ValueError, match="n_engines"):
+        FleetConfig(n_engines=0)
+    with pytest.raises(ValueError, match="depth_weight"):
+        FleetConfig(depth_weight=-1.0)
+    cfg = _tiny().with_fleet(n_engines=4, drain_mode="migrate")
+    assert dataclasses.asdict(cfg.fleet)["n_engines"] == 4

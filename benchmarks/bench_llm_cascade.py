@@ -331,17 +331,23 @@ def run(quick: bool = False):
     waves = 6 if quick else 8
     # the four compared engines per threshold; measured waves run
     # INTERLEAVED across them (host load drifts on multi-second scales —
-    # back-to-back runs would hand whole waves of drift to one variant)
-    variants = (("host", "host", "major", True),
-                ("major", "device", "major", True),
-                ("copy", "device", "copy", True),
-                ("nokernel", "device", "major", False))
+    # back-to-back runs would hand whole waves of drift to one variant).
+    # the kernels-on cohort-major variants additionally run the per-segment
+    # megakernel + cohort cache scatter (cfg.kernel_tune) — streams_identical
+    # below therefore pins megakernel-vs-unfused end to end, since "copy"
+    # keeps the plain kernel path
+    variants = (("host", "host", "major", True, True),
+                ("major", "device", "major", True, True),
+                ("copy", "device", "copy", True, False),
+                ("nokernel", "device", "major", False, False))
 
     def serve_ablation(th):
         engines = {}
-        for name, runtime, layout, kernels in variants:
+        for name, runtime, layout, kernels, tune in variants:
             c = scfg.replace(use_kernels=kernels).with_cascade(
                 thresholds=(th, th, 0.0), cohort_layout=layout)
+            if tune:
+                c = c.with_kernel_tune(megakernel=True, cohort_scatter=True)
             eng = _drive(c, smodel, sparams, n_req=rt_req, max_new=max_new,
                          runtime=runtime, lane_batch=SERVE_LANE_BATCH,
                          cache_len=SERVE_CACHE_LEN, waves=0)
@@ -356,7 +362,7 @@ def run(quick: bool = False):
                                        max_new_tokens=max_new))
                 eng.run(300)
         stats = {}
-        for name, runtime, layout, kernels in variants:
+        for name, runtime, layout, kernels, _tune in variants:
             st = engines[name].stats()
             stats[name] = st
             rows.append((
@@ -441,6 +447,12 @@ def run(quick: bool = False):
             f"reclaimed_by_exit={out['paged_reclaimed_by_exit']}"))
         return out
 
+    # execution-backend provenance: a kernel_speedup row measured through
+    # the Pallas interpreter (CPU CI) must never be read as a compiled
+    # number — check_bench_serving gates compiled rows strictly and treats
+    # interpret rows as advisory
+    from repro.serving.runtime import kernel_provenance
+    provenance = kernel_provenance(scfg.replace(use_kernels=True))
     for th in SERVE_THRESHOLDS:
         engines, stats = serve_ablation(th)
         paged_row = paged_ablation(th, engines["host"])
@@ -476,6 +488,7 @@ def run(quick: bool = False):
             "mac_speedup": major_st["analytic_speedup"],
             "compile_seconds_host": host_st["compile_seconds"],
             "compile_seconds_device": major_st["compile_seconds"],
+            **provenance,
             **paged_row,
         })
     escalation = _escalation_ablation(rows, quick)
@@ -488,6 +501,8 @@ def run(quick: bool = False):
         "n_cohorts": N_COHORTS,
         "n_components": scfg.cascade.n_components,
         "use_kernels": True,
+        "megakernel": True,
+        "cohort_scatter": True,
         "paged_block_size": PAGED_BLOCK,
         "quick": bool(quick),
         "rows": serving_rows,

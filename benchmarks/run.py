@@ -66,7 +66,9 @@ def main() -> None:
     summary = getattr(bench_llm_cascade, "LAST_SERVING_SUMMARY", None)
     autotune = getattr(bench_autotune, "LAST_AUTOTUNE_SUMMARY", None)
     fleet = getattr(bench_fleet, "LAST_FLEET_SUMMARY", None)
-    if summary is not None or autotune is not None or fleet is not None:
+    kernels = getattr(bench_kernels, "LAST_KERNELS_SUMMARY", None)
+    if (summary is not None or autotune is not None or fleet is not None
+            or kernels is not None):
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         path = os.path.join(root, "BENCH_serving.json")
         # partial runs (--only) update their section and keep the rest
@@ -77,15 +79,20 @@ def main() -> None:
         if summary is not None:
             autotune_keep = data.get("autotune")
             fleet_keep = data.get("fleet")
+            kernels_keep = data.get("kernels")
             data = dict(summary)
             if autotune_keep is not None:
                 data["autotune"] = autotune_keep
             if fleet_keep is not None:
                 data["fleet"] = fleet_keep
+            if kernels_keep is not None:
+                data["kernels"] = kernels_keep
         if autotune is not None:
             data["autotune"] = autotune
         if fleet is not None:
             data["fleet"] = fleet
+        if kernels is not None:
+            data["kernels"] = kernels
         with open(path, "w") as f:
             json.dump(data, f, indent=2)
             f.write("\n")

@@ -13,6 +13,12 @@ Validates EVERY row of the threshold sweep (written by
   cache concat pure overhead;
 * the device while_loop runtime is strictly faster than the host per-token
   runtime at threshold 0.0 (the dispatch-amortization criterion);
+* every row carries kernel execution-backend provenance
+  (``kernel_backend`` interpret|compiled + ``kernel_platform``), and the
+  ``kernel_speedup`` column is gated by it: rows measured through the
+  Pallas interpreter are ADVISORY (printed and labeled — interpreter
+  timings say nothing about Mosaic-compiled performance), rows measured
+  compiled must show kernel_speedup STRICTLY > 1.0;
 * the paged KV layout on every row: ``paged_streams_identical`` (the
   layout is an addressing scheme, not a semantics), peak cache bytes
   STRICTLY below the dense slab at every threshold, and the equal-memory
@@ -21,6 +27,17 @@ Validates EVERY row of the threshold sweep (written by
   elsewhere with the same 0.90 noise headroom the layout gate uses —
   though both admission numbers are tick counts, so in practice they
   either win or tie exactly.
+
+When the summary carries a ``kernels`` section (written whenever
+``benchmarks/bench_kernels.py`` runs), it is validated too:
+
+* every sweep row shows ``tuned_speedup >= 1.0`` — the default tiles are
+  themselves a candidate and both timings come from the same sweep, so a
+  tuned config losing to the default means the sweep or the tile registry
+  is broken, not that the machine was noisy;
+* every row carries backend/platform provenance, and the covered kernel
+  set includes the serving hot path (decode attention, exit update, the
+  per-segment megakernel).
 
 When the summary carries an ``autotune`` section (written whenever
 ``benchmarks/bench_autotune.py`` runs), it is validated too:
@@ -74,6 +91,46 @@ WARMUP_RATIO_MAX = 1.0 / 3.0
 # a BINS-bin histogram and is evaluated on raw samples, so its realized
 # spend can quantize a hair past the shared fit's
 MAC_SLACK = 1.02
+# kernels the microbench sweep must cover — the serving hot path
+KERNEL_MUST_COVER = {"decode_attention", "exit_update", "megakernel"}
+
+
+def check_kernels(kern) -> bool:
+    """Per-kernel sweep gates (written by ``benchmarks/bench_kernels.py``):
+    tuned tiles must never lose to the defaults (>= 1.0x by construction —
+    a violation is a sweep/registry bug, not noise), every row must say
+    which backend measured it, and the sweep must cover the serving hot
+    path kernels."""
+    ok = True
+    rows = kern.get("rows") or []
+    if not rows:
+        print("kernels: summary present but carries no sweep rows",
+              file=sys.stderr)
+        return False
+    covered = set()
+    for r in rows:
+        tag = f"kernels {r.get('kernel')}/{r.get('shape')}"
+        covered.add(r.get("kernel"))
+        if not r.get("backend") or not r.get("platform"):
+            print(f"{tag}: missing backend/platform provenance",
+                  file=sys.stderr)
+            ok = False
+        speedup = float(r.get("tuned_speedup") or 0.0)
+        if speedup < 1.0:
+            print(f"{tag}: tuned tiles LOST to the defaults "
+                  f"({speedup:.4f}x) — the default is a candidate in the "
+                  f"same sweep, so this is a tuner bug", file=sys.stderr)
+            ok = False
+    missing = KERNEL_MUST_COVER - covered
+    if missing:
+        print(f"kernels: sweep missing hot-path kernel(s) "
+              f"{sorted(missing)}", file=sys.stderr)
+        ok = False
+    print(f"kernels sweep [{kern.get('backend')}/{kern.get('platform')}] "
+          "tuned_speedup:",
+          [(f"{r.get('kernel')}", round(float(r.get('tuned_speedup') or 0),
+                                        3)) for r in rows])
+    return ok
 
 
 def check_autotune(auto) -> bool:
@@ -296,6 +353,21 @@ def main() -> int:
             print(f"th={th}: cohort-major stream diverged from the copy "
                   f"layout", file=sys.stderr)
             ok = False
+        backend = r.get("kernel_backend")
+        if backend not in ("interpret", "compiled") or \
+                not r.get("kernel_platform"):
+            print(f"th={th}: missing kernel backend provenance "
+                  f"(kernel_backend={backend!r}, kernel_platform="
+                  f"{r.get('kernel_platform')!r})", file=sys.stderr)
+            ok = False
+        elif backend == "compiled" and \
+                float(r.get("kernel_speedup") or 0.0) <= 1.0:
+            # interpreter rows are advisory (labeled in the printout
+            # below); compiled rows are the real performance claim
+            print(f"th={th}: compiled kernel path not faster than "
+                  f"kernels-off: {float(r.get('kernel_speedup') or 0):.3f}x",
+                  file=sys.stderr)
+            ok = False
         layout = r.get("layout_speedup", 0.0)
         if th == 0.0:
             if layout <= 1.0:
@@ -317,7 +389,10 @@ def main() -> int:
           [round(r.get("device_speedup", 0.0), 3) for r in rows])
     print("layout_speedup:",
           [round(r.get("layout_speedup", 0.0), 3) for r in rows])
-    print("kernel_speedup:",
+    backends = {r.get("kernel_backend") for r in rows}
+    advisory = backends == {"interpret"}
+    print(f"kernel_speedup"
+          f"{' (ADVISORY: interpret backend)' if advisory else ''}:",
           [round(r.get("kernel_speedup", 0.0), 3) for r in rows])
     print("paged admission wait (paged vs dense, ticks):",
           [(round(r.get("paged_admission_wait_mean") or 0.0, 2),
@@ -327,6 +402,8 @@ def main() -> int:
           [round(float(r.get("paged_peak_cache_bytes") or 0)
                  / max(1.0, float(r.get("dense_peak_cache_bytes") or 1)), 3)
            for r in rows])
+    if s.get("kernels") is not None:
+        ok = check_kernels(s["kernels"]) and ok
     if s.get("autotune") is not None:
         ok = check_autotune(s["autotune"]) and ok
     if s.get("escalation") is not None:

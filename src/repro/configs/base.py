@@ -315,6 +315,55 @@ class FleetConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelTuneConfig:
+    """Pallas kernel tile autotuning + fusion knobs (``repro.kernels``).
+
+    ``enabled`` sweeps each kernel's candidate tile shapes on
+    representative shapes at engine build time (or loads a previously
+    swept artifact — :mod:`repro.kernels.autotune`) and installs the
+    winners into the process-wide tile registry every ``kernels/ops.py``
+    wrapper consults.  Tile shapes are *static* kernel parameters, so an
+    install that changes a tile triggers exactly one recompile of that
+    kernel's inner jit at install time; installs that resolve to the same
+    tiles are cache hits (no retrace — the serving loop's
+    ``_cache_size() == 1`` contract holds because installation happens
+    before the decode loop traces).
+
+    ``artifact_dir`` persists the sweep result keyed by a config hash
+    over (artifact version, platform, execution backend, sweep preset):
+    a matching artifact skips the sweep entirely; a mismatched hash falls
+    back to the defaults with a warning (never silently reuses stale
+    tiles).  ``shapes`` picks the sweep preset (``"tiny"`` = CI-sized
+    shapes, ``"serving"`` = the serving-bench shapes).
+
+    ``megakernel`` routes the decode scan's exit-head evaluation through
+    the fused per-segment megakernel (:mod:`repro.kernels.megakernel`):
+    rmsnorm + shared-unembed matmul + softmax confidence + exit-update
+    carry merge in ONE streaming pass over vocab tiles — the (B, V)
+    logits never reach HBM.  Heads outside the fusion boundary
+    (layernorm bias, enhancement MLP) transparently fall back to the
+    unfused path.  ``cohort_scatter`` replaces the mixed-exit cohort
+    re-join (per-cohort slice + ``concatenate``) with the aliased Pallas
+    scatter kernel (:mod:`repro.kernels.cohort_cache`) that writes each
+    cohort's cache rows in place.  Both default off: decode streams are
+    pinned bit-identical either way, but flipping them changes the
+    traced graph.
+    """
+
+    enabled: bool = False
+    artifact_dir: Optional[str] = None
+    shapes: str = "tiny"
+    megakernel: bool = False
+    cohort_scatter: bool = False
+
+    def __post_init__(self):
+        if self.shapes not in ("tiny", "serving"):
+            raise ValueError(
+                f"kernel_tune.shapes must be 'tiny' or 'serving', got "
+                f"{self.shapes!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelConfig:
     """One architecture.  Units follow each model card exactly."""
 
@@ -396,6 +445,8 @@ class ModelConfig:
     escalation: EscalationConfig = dataclasses.field(
         default_factory=EscalationConfig)
     fleet: FleetConfig = dataclasses.field(default_factory=FleetConfig)
+    kernel_tune: KernelTuneConfig = dataclasses.field(
+        default_factory=KernelTuneConfig)
 
     # ------------------------------------------------------------------
     @property
@@ -437,6 +488,10 @@ class ModelConfig:
     def with_fleet(self, **kw) -> "ModelConfig":
         return dataclasses.replace(
             self, fleet=dataclasses.replace(self.fleet, **kw))
+
+    def with_kernel_tune(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(
+            self, kernel_tune=dataclasses.replace(self.kernel_tune, **kw))
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

@@ -225,6 +225,14 @@ class StagedExecutor:
         self.mode = self.cfg.cascade.exit_mode
         self.layout = self.cfg.cascade.cohort_layout
         self.n_components = self.cfg.cascade.n_components
+        # per-segment megakernel route (rmsnorm + unembed matmul + exit
+        # update in one pallas_call) — requires the fused-scan decider;
+        # heads the fusion can't express fall back per segment inside
+        # _scan_exit
+        kt = getattr(self.cfg, "kernel_tune", None)
+        self.use_megakernel = bool(kt and kt.megakernel
+                                   and self.decider.fused_scan)
+        self.use_cohort_scatter = bool(kt and kt.cohort_scatter)
 
     # sentinel: init_state should build fresh telemetry itself
     _AUTO_TELEMETRY = object()
@@ -291,6 +299,33 @@ class StagedExecutor:
         return decision, cache, state
 
     # ------------------------------------------------------------------
+    def _scan_exit(self, si, params, h, ths, sc=None, state=None, live=None):
+        """Measure segment ``si``'s exit from its hidden state ``h``
+        ((B, 1, d)) and fold it into the decision scan — THE exit-head
+        call every decode path routes through.
+
+        With ``cfg.kernel_tune.megakernel`` and a fused-scan decider this
+        takes the per-segment megakernel (:meth:`ExitDecider.scan_hidden`):
+        the (B, V) exit logits never materialize and the per-slot ``live``
+        mask early-outs dead batch blocks before the unembed matmul.  Heads
+        the fusion can't express (enhancement MLP, layernorm bias — see
+        :meth:`~repro.models.model.CascadeModel.exit_head_params`) and
+        non-fused deciders fall back to ``exit_logits`` +
+        :meth:`ExitDecider.scan_logits`, unchanged semantics.
+        """
+        decider, model = self.decider, self.model
+        if self.use_megakernel:
+            hp = model.exit_head_params(params, si)
+            if hp is not None:
+                return decider.scan_hidden(
+                    si, self.n_components, h[:, 0, :], hp[0], hp[1], ths,
+                    carry=sc, state=state, live=live,
+                    eps=self.cfg.norm_eps)
+        lg = model.exit_logits(params, si, h)[:, 0, :]
+        return decider.scan_logits(si, self.n_components, lg, ths, sc,
+                                   state=state)
+
+    # ------------------------------------------------------------------
     def _segment_paths(self, si, ctx_c, params, ths):
         """(run, skip) closures for one deeper segment over one cohort's
         (h, seg_cache, carry) triple — the two ``lax.cond`` branches.
@@ -314,8 +349,8 @@ class StagedExecutor:
 
         def run(h, seg_cache, sc):
             h2, nc2, _ = model.run_segment(si, params, h, ctx_c, seg_cache)
-            lg = model.exit_logits(params, si, h2)[:, 0, :]
-            return h2, nc2, decider.scan_logits(si, n_m, lg, ths, sc)
+            return h2, nc2, self._scan_exit(si, params, h2, ths, sc,
+                                            live=ctx_c.get("live"))
 
         def skip(h, seg_cache, sc):
             if self.cfg.cascade.state_backfill:
@@ -367,8 +402,8 @@ class StagedExecutor:
             # full-depth OBSERVATION: compute from the shadow chain, keep
             # only the telemetry rider row; commit the skip results
             h2s, _, _ = model.run_segment(si, params, hs, ctx_c, seg_cache)
-            lg = model.exit_logits(params, si, h2s)[:, 0, :]
-            sc_obs = decider.scan_logits(si, n_m, lg, ths, sc)
+            sc_obs = self._scan_exit(si, params, h2s, ths, sc,
+                                     live=ctx_c.get("live"))
             sc = {**sc, "tcode": sc_obs["tcode"]}
             h, seg_cache, sc = skip_fn(h, seg_cache, sc)
             return h, seg_cache, sc, h2s
@@ -470,8 +505,8 @@ class StagedExecutor:
         # segment 0 computes for everyone (every cohort needs it)
         h, nc, _ = model.run_segment(0, params, h, ctx, segs[0])
         new_segs.append(nc)
-        sc = decider.scan_logits(0, n_m, model.exit_logits(params, 0, h)
-                                 [:, 0, :], ths, state=state.policy)
+        sc = self._scan_exit(0, params, h, ths, state=state.policy,
+                             live=state.active)
         # the telemetry shadow chain starts at the committed hidden state
         # (segment 0 always computes); None keeps telemetry-off graphs
         # byte-identical to the pre-autotune program
@@ -567,6 +602,15 @@ class StagedExecutor:
                     # paged: no batch dim to view — the SHARED store chains
                     # through the cohorts, each addressing it through its
                     # own table rows (ctx_parts carry the sliced tables).
+                    # the dense re-join is either the legacy concat or, with
+                    # cfg.kernel_tune.cohort_scatter, C aliased partial
+                    # writes into the input slab (bit-identical; PR 4
+                    # documented XLA does not elide the concat's full-slab
+                    # materialization inside while+cond)
+                    scatter = self.use_cohort_scatter and not paged
+                    if scatter:
+                        from repro.kernels.ops import cohort_scatter_tree
+                        scat = seg
                     if not paged:
                         view = jax.tree_util.tree_map(
                             lambda x: x.reshape((x.shape[0], C, Bc)
@@ -586,19 +630,28 @@ class StagedExecutor:
                             hsp[c] = hs_c
                         if paged:
                             seg = nc_c
+                        elif scatter:
+                            scat = cohort_scatter_tree(
+                                scat, nc_c, c, C,
+                                interpret=self.cfg.kernel_interpret)
                         else:
                             parts.append(nc_c)
                         r = r + rc
-                    nc = seg if paged else jax.tree_util.tree_map(
-                        lambda *xs: jnp.concatenate(xs, axis=1), *parts)
+                    if paged:
+                        nc = seg
+                    elif scatter:
+                        nc = scat
+                    else:
+                        nc = jax.tree_util.tree_map(
+                            lambda *xs: jnp.concatenate(xs, axis=1), *parts)
                     return hp, nc, scp, r, hsp
 
                 def _all_run(hp, seg, scp, hsp, _si=si):
                     h2, nc, _ = model.run_segment(
                         _si, params, jnp.concatenate(hp, axis=0), ctx, seg)
-                    lg = model.exit_logits(params, _si, h2)[:, 0, :]
-                    sc2 = decider.scan_logits(
-                        _si, n_m, lg, ths, decider.concat_carry(list(scp)))
+                    sc2 = self._scan_exit(_si, params, h2, ths,
+                                          decider.concat_carry(list(scp)),
+                                          live=ctx["live"])
                     out_parts = [h2[lo:hi] for lo, hi in spans]
                     return (out_parts, nc,
                             [decider.slice_carry(sc2, lo, hi)

@@ -897,6 +897,60 @@ class ExitDecider:
             new["tcode"] = carry["tcode"].at[m].set(outs[6])
         return new
 
+    def scan_hidden(self, m: int, n_components: int, h: jnp.ndarray,
+                    norm_w: jnp.ndarray, head: jnp.ndarray,
+                    thresholds, carry=None, state=None,
+                    ema_decay: float = 0.0, live=None, eps: float = 1e-5):
+        """:meth:`scan_logits` from the segment HIDDEN state: the
+        per-segment megakernel route (rmsnorm + unembed matmul + streaming
+        confidence + exit-update merge in one pallas_call — the (B, V)
+        logits tensor never materializes in HBM).
+
+        ``h`` (B, d); ``norm_w`` / ``head`` from
+        :meth:`~repro.models.model.CascadeModel.exit_head_params` (callers
+        fall back to ``exit_logits`` + :meth:`scan_logits` when that
+        returns None — enhancement-MLP / layernorm-bias heads don't fit
+        the fusion).  ``live`` additionally lifts the per-slot exit mask
+        into the megakernel grid: fully-dead batch blocks skip the matmul,
+        dead rows pass every carry through unchanged.  Requires
+        :attr:`fused_scan`; tile sizes come from the autotune registry.
+        """
+        if not self.fused_scan:
+            raise ValueError("scan_hidden requires a fused-scan decider "
+                             "(use exit_logits + scan_logits instead)")
+        from repro.kernels.ops import exit_head_fused
+        B = h.shape[0]
+        if carry is None:
+            carry = self._init_carry(m, n_components,
+                                     jnp.zeros((B,), jnp.int32),
+                                     jnp.zeros((B,), jnp.float32), state)
+        streak = carry["streak"]
+        srow = streak[m] if streak is not None else jnp.zeros((B,), jnp.int32)
+        has_ema = carry.get("ema") is not None
+        ema = carry["ema"] if has_ema else jnp.zeros((B,), jnp.float32)
+        act = (carry["act"] if carry.get("act") is not None
+               else jnp.ones((B,), bool))
+        th_m = (thresholds[m] if isinstance(thresholds, jax.Array)
+                else float(thresholds[m]))
+        outs = exit_head_fused(
+            h, norm_w, head, carry["answered"], carry["pred"], carry["exit"],
+            carry["conf"], srow, ema, act,
+            threshold=th_m, m=m, n_components=n_components,
+            patience_k=(self.measure.patience_k if self.measure.stateful
+                        else 0),
+            ema_decay=(float(ema_decay) if has_ema else 0.0),
+            tel_bins=self.telemetry_bins, live=live, eps=eps,
+            interpret=self.kernel_interpret)
+        ans, pred, exi, conf, srow_n, ema_n = outs[:6]
+        new = {"answered": ans, "pred": pred, "exit": exi, "conf": conf,
+               "streak": (streak.at[m].set(srow_n) if streak is not None
+                          else None),
+               "ema": ema_n if has_ema else None,
+               "act": carry.get("act")}
+        if carry.get("tcode") is not None:
+            new["tcode"] = carry["tcode"].at[m].set(outs[6])
+        return new
+
     # carry keys laid out (n_components, batch, ...): slice/concat axis 1
     _COMPONENT_MAJOR_KEYS = frozenset(("streak", "tcode"))
 

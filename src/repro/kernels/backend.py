@@ -36,6 +36,18 @@ _ENV = "REPRO_KERNEL_INTERPRET"
 _warned_interpret_on_tpu = False
 
 
+def reset_backend_warnings() -> None:
+    """Re-arm the one-time interpret-on-TPU warning.
+
+    The warning latch is a module global, so a test that legitimately
+    forces interpret mode on a TPU backend would otherwise silence the
+    warning for every later test in the process.  ``tests/conftest.py``
+    calls this between tests; production code never needs to.
+    """
+    global _warned_interpret_on_tpu
+    _warned_interpret_on_tpu = False
+
+
 def on_tpu() -> bool:
     """True when the default jax backend is a TPU."""
     try:

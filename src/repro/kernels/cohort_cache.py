@@ -1,0 +1,99 @@
+"""In-place cohort scatter for the mixed-exit cache re-join (Pallas).
+
+The cohort-major decode path (``core/exec.py`` ``_mixed``) runs each cohort's
+segment step over a zero-copy view of the cache slab, then re-joins the C
+per-cohort outputs into the full slab.  The seeded re-join is
+``jnp.concatenate(parts, axis=1)`` — and PR 4's layout study documented that
+XLA does NOT elide the equivalent ``.at[:, lo:hi].set`` scatter inside the
+surrounding ``while_loop`` + ``cond``: every mixed step paid a full-slab
+materialization even though each cohort only produced ``B/C`` fresh rows.
+
+:func:`cohort_scatter` replaces that re-join with an aliased partial-write
+``pallas_call``: the destination slab is input 0 AND the output buffer
+(``input_output_aliases={0: 0}``), the grid covers only the target cohort's
+blocks, and the kernel copies the cohort's rows into place.  Blocks the grid
+never visits keep the aliased input's bytes — the other cohorts' rows are
+untouched, no full-slab copy is issued by the kernel itself.  Chaining the
+call once per cohort (``dst = cohort_scatter(dst, part, c, C)``) rebuilds the
+slab with C cohort-sized writes instead of one B-sized concat.
+
+``c`` and ``C`` are Python ints (the cohort loop in ``_mixed`` is unrolled),
+so the block index maps are static — no dynamic-slice lowering.
+
+Semantics are bit-identical to the concat (pinned by tests); only the memory
+traffic changes.  Non-array-friendly leaves (cohort axis missing, or a
+trailing extent the TPU layout can't partial-write) fall back to
+``dst.at[...].set(src)`` — same bytes, XLA's choice of copy.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.backend import resolve_interpret
+
+
+def _scatter_kernel(dst_ref, src_ref, out_ref):
+    out_ref[...] = src_ref[...]
+
+
+@partial(jax.jit, static_argnames=("c", "C", "interpret"))
+def _scatter(dst, src, c: int, C: int, interpret: bool):
+    L, B = dst.shape[0], dst.shape[1]
+    Bc = B // C
+    rest = dst.shape[2:]
+    R = 1
+    for r in rest:
+        R *= r
+    d3 = dst.reshape(L, B, R)
+    s3 = src.reshape(L, Bc, R)
+    out = pl.pallas_call(
+        _scatter_kernel,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, Bc, R), lambda l, _c=c: (l, _c, 0)),
+            pl.BlockSpec((1, Bc, R), lambda l: (l, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Bc, R), lambda l, _c=c: (l, _c, 0)),
+        out_shape=jax.ShapeDtypeStruct(d3.shape, d3.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(d3, s3)
+    return out.reshape(dst.shape)
+
+
+def cohort_scatter(dst, src, c: int, C: int, *, interpret=None):
+    """Write cohort ``c``'s rows ``src`` into ``dst`` along axis 1.
+
+    ``dst``: (L, B, ...); ``src``: (L, B // C, ...) — the cohort's segment
+    output.  Returns the updated slab; the destination buffer is aliased so
+    the compiled program updates in place (untouched cohorts keep their
+    bytes).  Bit-identical to ``dst.at[:, c*Bc:(c+1)*Bc].set(src)``.
+    """
+    interpret = resolve_interpret(interpret)
+    if dst.ndim < 2 or dst.shape[1] % C != 0:
+        lo = c * (dst.shape[1] // C) if dst.ndim >= 2 else 0
+        return dst.at[:, lo:lo + src.shape[1]].set(src)
+    Bc = dst.shape[1] // C
+    R = 1
+    for r in dst.shape[2:]:
+        R *= r
+    # compiled TPU lowering needs a lane-aligned trailing extent for a
+    # partial write; oddball leaves take the plain XLA scatter instead
+    if not interpret and (R % 128 != 0 or dst.dtype == jnp.bool_):
+        return dst.at[:, c * Bc:(c + 1) * Bc].set(src)
+    if dst.dtype == jnp.bool_:
+        out = _scatter(dst.astype(jnp.int8), src.astype(jnp.int8), c, C,
+                       interpret)
+        return out.astype(jnp.bool_)
+    return _scatter(dst, src, c, C, interpret)
+
+
+def cohort_scatter_tree(dst_tree, src_tree, c: int, C: int, *, interpret=None):
+    """Tree-mapped :func:`cohort_scatter` over matching cache pytrees."""
+    return jax.tree_util.tree_map(
+        lambda d, s: cohort_scatter(d, s, c, C, interpret=interpret),
+        dst_tree, src_tree)

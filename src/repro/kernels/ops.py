@@ -9,6 +9,13 @@ CPU CI never tries to Mosaic-compile.  Call sites that route through
 Wrappers adapt the model's (B, S, H, hd) layouts to the kernels' tiled
 layouts and fall back to the jnp reference for shapes the kernels don't
 support (e.g. head_dim not a multiple of 8 in interpret tests).
+
+Block sizes come from the autotune tile registry
+(:func:`repro.kernels.autotune.tile`): each wrapper reads its kernel's
+resolved tiles at call time, so ``autotune.install_tiles`` (or
+``ensure_tuned``) swaps every downstream kernel onto the tuned shapes with
+one inner-jit recompile and zero call-site changes.  Untuned processes get
+``DEFAULT_TILES`` — the seeded block sizes, unchanged.
 """
 from __future__ import annotations
 
@@ -18,11 +25,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.autotune import tile as _tile
 from repro.kernels.backend import resolve_interpret
+from repro.kernels.cohort_cache import cohort_scatter, cohort_scatter_tree
 from repro.kernels.confidence import confidence as _confidence
 from repro.kernels.decode_attention import decode_attention as _decode_attn
 from repro.kernels.exit_update import exit_update as _exit_update
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.megakernel import exit_head_update as _exit_head_update
 from repro.kernels.paged_gather import paged_gather as _paged_gather
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 
@@ -32,13 +42,16 @@ def softmax_confidence_fused(logits, *, interpret=None):
     shape = logits.shape[:-1]
     V = logits.shape[-1]
     flat = logits.reshape(-1, V)
-    idx, conf = _confidence(flat, interpret=resolve_interpret(interpret))
+    idx, conf = _confidence(flat, bt=_tile("confidence", "bt"),
+                            vt=_tile("confidence", "vt"),
+                            interpret=resolve_interpret(interpret))
     return idx.reshape(shape), conf.reshape(shape)
 
 
 def rmsnorm_fused(x, w, eps: float = 1e-5, *, interpret=None):
     shape = x.shape
     out = _rmsnorm(x.reshape(-1, shape[-1]), w, eps=eps,
+                   rt=_tile("rmsnorm", "rt"),
                    interpret=resolve_interpret(interpret))
     return out.reshape(shape)
 
@@ -48,7 +61,13 @@ def flash_attention_bshd(q, k, v, *, causal=True, window=0, interpret=None):
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    out = _flash(qt, kt, vt, causal=causal, window=window,
+    S = qt.shape[2]
+    # the flash kernel asserts S % tile == 0 (no internal pad); tuned tiles
+    # apply only when they divide this sequence, else the seeded defaults
+    tq, tk = _tile("flash_attention", "tq"), _tile("flash_attention", "tk")
+    if S % tq or S % tk:
+        tq, tk = 128, 128
+    out = _flash(qt, kt, vt, causal=causal, window=window, tq=tq, tk=tk,
                  interpret=resolve_interpret(interpret))
     return out.transpose(0, 2, 1, 3)
 
@@ -69,8 +88,15 @@ def decode_attention_cache(q, k_cache, v_cache, t, kpos, *, window=0,
     kc = k_cache.transpose(0, 2, 1, 3)
     vc = v_cache.transpose(0, 2, 1, 3)
     out = _decode_attn(qg, kc, vc, t, kpos, live, window=window,
+                       tk=_tile("decode_attention", "tk"),
                        interpret=resolve_interpret(interpret))
     return out.reshape(B, 1, H, hd)
+
+
+@partial(jax.jit, static_argnames=("W",))
+def _take_gather(store, table, W):
+    flat = jnp.take(store, table.reshape(-1), axis=0)
+    return flat.reshape(table.shape[0], W, store.shape[2], store.shape[3])
 
 
 def paged_gather(store, table, *, interpret=None):
@@ -78,7 +104,13 @@ def paged_gather(store, table, *, interpret=None):
     table (B, nblk) -> the slot-logical (B, W, kv, hd) ring view the dense
     decode-attention kernel consumes unchanged (see
     :mod:`repro.kernels.paged_gather` for why attention is NOT re-tiled
-    to block granularity)."""
+    to block granularity).
+
+    The gather has no free tile axis; its autotune knob is implementation
+    selection — the scalar-prefetch Pallas kernel vs a plain
+    ``jnp.take`` reshape (XLA's fused gather wins on some hosts)."""
+    if _tile("paged_gather", "impl") == "take":
+        return _take_gather(store, table, table.shape[1] * store.shape[1])
     return _paged_gather(store, table, interpret=resolve_interpret(interpret))
 
 
@@ -99,4 +131,26 @@ def exit_update_fused(logits, answered, pred, exit_idx, conf, streak, ema,
                         active, threshold=threshold, m=m,
                         n_components=n_components, patience_k=patience_k,
                         ema_decay=ema_decay, tel_bins=tel_bins,
+                        bt=_tile("exit_update", "bt"),
+                        vt=_tile("exit_update", "vt"),
                         interpret=resolve_interpret(interpret))
+
+
+def exit_head_fused(h, norm_w, head, answered, pred, exit_idx, conf, streak,
+                    ema, active, *, threshold, m, n_components, patience_k=0,
+                    ema_decay=0.0, tel_bins=0, live=None, eps=1e-5,
+                    interpret=None):
+    """Per-segment exit-head megakernel (see
+    :mod:`repro.kernels.megakernel`): rmsnorm + shared-unembed matmul
+    streamed over vocab tiles + online confidence + the fused exit-update
+    merge, one pallas_call — the (B, V) logits tensor never materializes.
+    ``live`` lifts the per-slot exit mask to the megakernel grid: a fully
+    dead batch block early-outs before the matmul and its rows pass every
+    carry through unchanged."""
+    return _exit_head_update(
+        h, norm_w, head, answered, pred, exit_idx, conf, streak, ema,
+        active, threshold=threshold, m=m, n_components=n_components,
+        patience_k=patience_k, ema_decay=ema_decay, tel_bins=tel_bins,
+        live=live, eps=eps, bt=_tile("megakernel", "bt"),
+        vt=_tile("megakernel", "vt"),
+        interpret=resolve_interpret(interpret))

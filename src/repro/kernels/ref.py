@@ -74,6 +74,31 @@ def ref_decode_attention(q, k_cache, v_cache, t, kpos, window: int = 0,
     return o.astype(q.dtype)
 
 
+def ref_exit_head_update(h, norm_w, head, answered, pred, exit_idx, conf,
+                         streak, ema, active, *, threshold, m, n_components,
+                         patience_k=0, ema_decay=0.0, eps=1e-5, live=None):
+    """Fused exit-head megakernel oracle: rmsnorm -> shared-unembed matmul
+    -> :func:`ref_exit_update`, with dead (``live`` False) rows passing
+    every carry through unchanged (the megakernel's grid early-out
+    contract — a retired slot's outputs are never read)."""
+    x = ref_rmsnorm(h, norm_w, eps)
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    outs = ref_exit_update(
+        logits, answered, pred, exit_idx, conf, streak, ema, active,
+        threshold=threshold, m=m, n_components=n_components,
+        patience_k=patience_k, ema_decay=ema_decay)
+    if live is None:
+        return outs
+    lv = jnp.asarray(live, bool)
+    carry_in = (jnp.asarray(answered, bool),
+                jnp.asarray(pred, jnp.int32),
+                jnp.asarray(exit_idx, jnp.int32),
+                jnp.asarray(conf, jnp.float32),
+                jnp.asarray(streak, jnp.int32),
+                jnp.asarray(ema, jnp.float32))
+    return tuple(jnp.where(lv, o, i) for o, i in zip(outs, carry_in))
+
+
 def ref_exit_update(logits, answered, pred, exit_idx, conf, streak, ema,
                     active, *, threshold, m, n_components, patience_k=0,
                     ema_decay=0.0):

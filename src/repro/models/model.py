@@ -239,6 +239,26 @@ class CascadeModel:
         head = e["head"] if "head" in e else self._unembed(params)
         return x @ head.astype(x.dtype)
 
+    def exit_head_params(self, params, m: int):
+        """``(norm_w, head)`` when exit head ``m`` is megakernel-eligible.
+
+        The per-segment megakernel (:mod:`repro.kernels.megakernel`) fuses
+        exactly rmsnorm + one unembed matmul + exit update; heads with a
+        layernorm bias or an enhancement MLP between norm and unembed do
+        not fit that shape, so they return ``None`` and the caller falls
+        back to ``exit_logits`` + the fused exit-update kernel.
+        """
+        if m >= self.n_exits - 1:
+            norm = params["final_norm"]
+            if "b" in norm:
+                return None
+            return norm["w"], self._unembed(params)
+        e = params["exits"][m]
+        if "b" in e["norm"] or "enh_w1" in e:
+            return None
+        head = e["head"] if "head" in e else self._unembed(params)
+        return e["norm"]["w"], head
+
     # ------------------------------------------------------------------
     # embedding & extras
     # ------------------------------------------------------------------

@@ -137,6 +137,11 @@ class CascadeServingEngine:
         self.cohorts = effective_cohorts(cfg.cascade.n_cohorts, lane_batch,
                                          warn=True)
         self.compactor = DepthCompactor(n_lanes, cfg.cascade.n_components)
+        # tuned kernel tiles install BEFORE anything traces (tiles are
+        # static kernel params — installing later would retrace every lane)
+        if cfg.kernel_tune.enabled:
+            from repro.kernels.autotune import ensure_tuned
+            ensure_tuned(cfg)
         self.executor = StagedExecutor(model, cfg)
         self.decider = self.executor.decider
         self.mac_prefix = segment_macs_per_token(cfg, cache_len)

@@ -56,6 +56,19 @@ from repro.utils import get_logger
 log = get_logger("serving.runtime")
 
 
+def kernel_provenance(cfg) -> dict:
+    """The kernel execution backend this config actually runs — recorded
+    in every serving bench row so a speedup number can never be read
+    without knowing whether it was measured through the Pallas interpreter
+    (CPU CI: advisory) or the compiled Mosaic path (gated strictly)."""
+    from repro.kernels.backend import resolve_interpret
+    interpret = resolve_interpret(cfg.kernel_interpret)
+    return {
+        "kernel_backend": "interpret" if interpret else "compiled",
+        "kernel_platform": jax.default_backend(),
+    }
+
+
 @dataclasses.dataclass
 class DecodeChunk:
     """Host view of one device-loop dispatch, trimmed to the steps that ran.
@@ -102,6 +115,13 @@ class DeviceDecodeLoop:
         self.chunk = int(chunk)
         self.cache_len = int(cache_len)
         self.mesh = mesh
+        # install tuned tiles BEFORE the loop program traces: tiles are
+        # static kernel params, so installing later would force a retrace;
+        # installing here keeps _cache_size() == 1 for the lane lifetime
+        kt = getattr(cfg, "kernel_tune", None)
+        if kt is not None and kt.enabled:
+            from repro.kernels.autotune import ensure_tuned
+            ensure_tuned(cfg)
         self._fn = make_decode_loop_step(model, cfg, self.chunk,
                                          self.cache_len)
         self._jitted = None

@@ -5,8 +5,21 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def _reset_kernel_state():
+    """Re-arm the one-shot interpret-on-TPU warning and restore default
+    tiles between tests: a test that forces interpret mode or installs
+    tuned tiles must not leak that state into every later test."""
+    yield
+    from repro.kernels.autotune import reset_tiles
+    from repro.kernels.backend import reset_backend_warnings
+    reset_backend_warnings()
+    reset_tiles()
 
 try:  # the image may lack hypothesis; fall back to the deterministic stub
     import hypothesis  # noqa: F401

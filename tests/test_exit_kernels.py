@@ -27,10 +27,13 @@ from repro.core.policy import (ConfidenceMeasure, ExitDecider,
                                register_measure)
 from repro.kernels import ref
 from repro.kernels.backend import resolve_interpret
+from repro.kernels.cohort_cache import cohort_scatter
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.exit_update import exit_update
+from repro.kernels.megakernel import exit_head_update
+from repro.kernels.ops import exit_update_fused, rmsnorm_fused
 from repro.models.model import build_model
-from repro.serving import CascadeServingEngine
+from repro.serving import CascadeServingEngine, Request
 from repro.serving.batching import cohort_capacity
 
 RNG = np.random.default_rng(7)
@@ -157,6 +160,134 @@ def test_fused_scan_matches_dense_decider(measure):
 
 
 # ---------------------------------------------------------------------------
+# per-segment exit-head megakernel
+# ---------------------------------------------------------------------------
+
+def _head_args(B, V, n):
+    return (jnp.asarray(RNG.integers(0, 2, B), bool),
+            jnp.asarray(RNG.integers(0, V, B), jnp.int32),
+            jnp.asarray(RNG.integers(0, n, B), jnp.int32),
+            jnp.asarray(RNG.random(B), jnp.float32),
+            jnp.asarray(RNG.integers(0, 3, B), jnp.int32),
+            jnp.asarray(RNG.random(B), jnp.float32),
+            jnp.asarray(RNG.integers(0, 2, B), bool))
+
+
+@pytest.mark.parametrize("B,d,V", [(8, 64, 512), (6, 32, 300)])
+@pytest.mark.parametrize("m,n,k,decay", [
+    (0, 3, 0, 0.0),        # stateless mid-scan component
+    (1, 3, 2, 0.0),        # patience@2 rewrite
+    (2, 3, 0, 0.8),        # final component + EMA fold
+])
+@pytest.mark.parametrize("live_pat", ["none", "rand", "block_dead"])
+def test_exit_head_megakernel_vs_oracle(B, d, V, m, n, k, decay, live_pat):
+    """The fused exit-head megakernel (rmsnorm + unembed matmul + streaming
+    confidence + exit-update merge in ONE pallas_call) vs its pure-jnp
+    oracle, including the live-mask early-out contract (dead rows pass
+    every carry through unchanged; a fully dead batch block skips the
+    matmul)."""
+    h = _arr((B, d))
+    w = jnp.asarray(1.0 + 0.1 * RNG.standard_normal(d), jnp.float32)
+    head = _arr((d, V), scale=0.3)
+    args = _head_args(B, V, n)
+    live = {"none": None,
+            "rand": jnp.asarray(RNG.integers(0, 2, B), bool),
+            # the first full bt-block dead -> the grid early-out path
+            "block_dead": jnp.asarray([0] * (B // 2) + [1] * (B - B // 2),
+                                      bool)}[live_pat]
+    kw = dict(threshold=0.5, m=m, n_components=n, patience_k=k,
+              ema_decay=decay, live=live)
+    got = exit_head_update(h, w, head, *args, bt=4, vt=128, **kw)
+    want = ref.ref_exit_head_update(h, w, head, *args, **kw)
+    names = ("answered", "pred", "exit", "conf", "streak", "ema")
+    for g, x, name in zip(got, want, names):
+        if np.asarray(g).dtype.kind in "bi":
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(x),
+                                          err_msg=f"{name} ({live_pat})")
+        else:
+            np.testing.assert_allclose(
+                np.asarray(g, np.float64), np.asarray(x, np.float64),
+                rtol=1e-5, atol=1e-6, err_msg=f"{name} ({live_pat})")
+
+
+def test_exit_head_megakernel_bitwise_vs_fused_kernels():
+    """With MATCHING vocab tiles (the shipped defaults: both the megakernel
+    and exit_update stream vt=2048 columns) the megakernel is BIT-identical
+    to the unfused kernel pipeline rmsnorm_fused -> XLA matmul ->
+    exit_update_fused — same streaming accumulation order, same rounding.
+    This is the contract that lets cfg.kernel_tune.megakernel flip on
+    without perturbing any pinned stream."""
+    for (B, d, V) in [(8, 64, 512), (6, 32, 300), (16, 128, 2048)]:
+        for (m, n, k, decay) in [(0, 3, 0, 0.0), (1, 3, 2, 0.0),
+                                 (2, 3, 0, 0.8)]:
+            h = _arr((B, d))
+            w = jnp.asarray(1.0 + 0.1 * RNG.standard_normal(d), jnp.float32)
+            head = _arr((d, V), scale=0.3)
+            args = _head_args(B, V, n)
+            kw = dict(threshold=0.5, m=m, n_components=n, patience_k=k,
+                      ema_decay=decay)
+            got = exit_head_update(h, w, head, *args, **kw)
+            xn = rmsnorm_fused(h, w, interpret=True)
+            want = exit_update_fused(xn @ head, *args, interpret=True, **kw)
+            for gi, (g, x) in enumerate(zip(got, want)):
+                np.testing.assert_array_equal(
+                    np.asarray(g), np.asarray(x),
+                    err_msg=f"output {gi} (B={B}, V={V}, m={m})")
+
+
+def test_scan_hidden_matches_scan_logits():
+    """ExitDecider.scan_hidden (megakernel route) == exit-head matmul +
+    scan_logits (fused exit-update route) across a full scan, bitwise."""
+    n_m, B, d, V = 3, 8, 64, 512
+    ths = (0.04, 0.04, 0.0)
+    dec = ExitDecider("patience@2", thresholds=ths, use_kernels=True,
+                      kernel_interpret=True)
+    assert dec.fused_scan
+    hs = [_arr((B, d)) for _ in range(n_m)]
+    w = jnp.asarray(1.0 + 0.1 * RNG.standard_normal(d), jnp.float32)
+    head = _arr((d, V), scale=0.3)
+    ca = cb = None
+    for m in range(n_m):
+        lg = rmsnorm_fused(hs[m], w, interpret=True) @ head
+        ca = dec.scan_logits(m, n_m, lg, ths, ca)
+        cb = dec.scan_hidden(m, n_m, hs[m], w, head, ths, cb)
+    for key in ("answered", "pred", "exit", "conf", "streak"):
+        np.testing.assert_array_equal(np.asarray(ca[key]),
+                                      np.asarray(cb[key]), err_msg=key)
+
+
+# ---------------------------------------------------------------------------
+# cohort cache scatter (mixed-exit re-join)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,C", [((3, 8, 16, 2, 8), 4), ((2, 6, 5), 3),
+                                     ((4, 8), 2)])
+def test_cohort_scatter_matches_at_set(shape, C):
+    L, B = shape[0], shape[1]
+    Bc = B // C
+    dst = _arr(shape)
+    for c in range(C):
+        src = _arr((L, Bc) + shape[2:])
+        got = cohort_scatter(dst, src, c, C, interpret=True)
+        want = dst.at[:, c * Bc:(c + 1) * Bc].set(src)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        dst = got
+
+
+def test_cohort_scatter_chain_equals_concat():
+    """Chaining one scatter per cohort rebuilds exactly the concat of the
+    per-cohort parts — the _mixed re-join replacement contract."""
+    L, B, C = 2, 8, 4
+    Bc = B // C
+    parts = [_arr((L, Bc, 4, 8)) for _ in range(C)]
+    cur = _arr((L, B, 4, 8))
+    for c in range(C):
+        cur = cohort_scatter(cur, parts[c], c, C, interpret=True)
+    want = jnp.concatenate(parts, axis=1)
+    np.testing.assert_array_equal(np.asarray(cur), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
 # cohort-layout bit-identity (the tentpole contract)
 # ---------------------------------------------------------------------------
 
@@ -244,6 +375,112 @@ def test_select_matches_cond_batch_in_major_layout(tiny3):
             np.testing.assert_array_equal(x, y)
     np.testing.assert_array_equal(np.asarray(s0.ema_conf),
                                   np.asarray(s1.ema_conf))
+
+
+# ---------------------------------------------------------------------------
+# megakernel / cohort-scatter end-to-end stream identity
+# ---------------------------------------------------------------------------
+
+def _caches_equal(c0, c1):
+    for a, b in zip(jax.tree_util.tree_leaves(c0),
+                    jax.tree_util.tree_leaves(c1)):
+        assert bool(jnp.all(a == b)), "cache bytes diverged"
+
+
+@pytest.mark.parametrize("measure,ths", [
+    ("softmax_max", (0.02, 0.02, 0.0)),
+    ("patience@2", (0.04, 0.04, 0.0)),
+])
+@pytest.mark.parametrize("exit_mode", ["cond_batch", "select"])
+def test_megakernel_decode_streams_bit_identical(tiny3, measure, ths,
+                                                 exit_mode):
+    """Flipping cfg.kernel_tune.megakernel must not perturb ANY stream:
+    tokens, exit indices, confidences, EMA, segment counts, cache bytes —
+    the megakernel and the unfused kernel path share tile sizes, hence
+    accumulation order, hence bits."""
+    cfg, model, params = tiny3
+    base = cfg.replace(use_kernels=True).with_cascade(
+        thresholds=ths, confidence=measure, exit_mode=exit_mode,
+        cohort_layout="major")
+    on = base.with_kernel_tune(megakernel=True)
+    assert StagedExecutor(model, on).use_megakernel
+    assert model.exit_head_params(params, 0) is not None
+    o0, s0, c0 = _decode_trace(model, params, base)
+    o1, s1, c1 = _decode_trace(model, params, on)
+    for a, b in zip(o0, o1):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+    np.testing.assert_array_equal(np.asarray(s0.segments_run),
+                                  np.asarray(s1.segments_run))
+    np.testing.assert_array_equal(np.asarray(s0.ema_conf),
+                                  np.asarray(s1.ema_conf))
+    _caches_equal(c0, c1)
+
+
+def test_cohort_scatter_decode_bit_identical(tiny3):
+    """cfg.kernel_tune.cohort_scatter replaces the mixed-branch per-cohort
+    concat with aliased partial writes — streams and cache bytes must not
+    move (the parity measure forces the mixed dispatch every step)."""
+    cfg, model, params = tiny3
+    base = cfg.replace(use_kernels=True).with_cascade(
+        thresholds=(0.5, 0.5, 0.0), confidence="exit_kernels_parity",
+        exit_mode="cond_batch", cohort_layout="major")
+    on = base.with_kernel_tune(cohort_scatter=True)
+    assert StagedExecutor(model, on).use_cohort_scatter
+    o0, s0, c0 = _decode_trace(model, params, base)
+    o1, s1, c1 = _decode_trace(model, params, on)
+    for a, b in zip(o0, o1):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+    np.testing.assert_array_equal(np.asarray(s0.segments_run),
+                                  np.asarray(s1.segments_run))
+    _caches_equal(c0, c1)
+
+
+@pytest.fixture(scope="module")
+def eng_params():
+    cfg = reduced(get_config("qwen2.5-3b")).replace(dtype="float32")
+    model = build_model(cfg)
+    return cfg, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("paged,runtime", [
+    (False, "host"), (True, "host"), (False, "device"), (True, "device"),
+])
+def test_megakernel_engine_streams_identical(eng_params, paged, runtime):
+    """The serving engine's token/exit streams are identical with the
+    megakernel + cohort scatter on vs off, across dense/paged caches and
+    the host/device decode runtimes."""
+    cfg0, params = eng_params
+    cascade = dict(thresholds=(0.6, 0.0), confidence="patience@2",
+                   exit_mode="cond_batch", n_cohorts=2)
+    fins = {}
+    for mk in (False, True):
+        cfg = cfg0.replace(use_kernels=True,
+                           kernel_interpret=True).with_cascade(**cascade)
+        if paged:
+            cfg = cfg.with_paged_cache(layout="paged", block_size=8,
+                                       num_blocks=0)
+        if mk:
+            cfg = cfg.with_kernel_tune(megakernel=True, cohort_scatter=True)
+        kw = dict(lane_batch=2, n_lanes=2, cache_len=32)
+        if runtime == "device":
+            kw.update(runtime="device", chunk=4)
+        model = build_model(cfg)
+        eng = CascadeServingEngine(cfg, model, params, **kw)
+        rng = np.random.default_rng(3)
+        for i in range(4):
+            eng.submit(Request(
+                rid=i,
+                prompt=rng.integers(1, 50, size=rng.integers(2, 7))
+                .astype(np.int32),
+                max_new_tokens=4))
+        fins[mk] = eng.run(max_ticks=200)
+    assert set(fins[False]) == set(fins[True]) == {0, 1, 2, 3}
+    for rid in fins[False]:
+        assert fins[False][rid]["tokens"] == fins[True][rid]["tokens"], rid
+        assert (fins[False][rid]["exit_depths"]
+                == fins[True][rid]["exit_depths"]), rid
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,116 @@
+"""Kernel autotuner: sweep invariants, tile registry, artifact round-trip.
+
+The load-bearing contracts:
+
+* ``tuned_speedup >= 1.0`` on every bench row BY CONSTRUCTION (the default
+  tiles are always in the candidate set and both timings come from the same
+  sweep) — the BENCH gate relies on this;
+* installed tiles flow through the ``kernels/ops.py`` wrappers;
+* artifacts round-trip through disk keyed by the tune key, and a key
+  mismatch falls back to default tiles WITH a warning (stale tiles are
+  never silently installed).
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import KernelTuneConfig, get_config, reduced
+from repro.kernels import autotune as at
+from repro.kernels.ops import rmsnorm_fused
+
+
+def _small(monkeypatch):
+    """Restrict the sweep to two cheap kernels (test-speed only)."""
+    keep = ("rmsnorm", "paged_gather")
+    monkeypatch.setattr(at, "DEFAULT_TILES",
+                        {k: at.DEFAULT_TILES[k] for k in keep})
+
+
+def test_sweep_rows_speedup_and_provenance(monkeypatch):
+    _small(monkeypatch)
+    winners, rows = at.sweep(reps=1)
+    assert set(winners) == {"rmsnorm", "paged_gather"}
+    assert rows
+    for r in rows:
+        assert r["tuned_speedup"] >= 1.0, r
+        assert r["backend"] in ("interpret", "compiled")
+        assert r["platform"]
+        assert r["default_us"] > 0 and r["tuned_us"] > 0
+        assert r["tiles"] == winners[r["kernel"]]
+
+
+def test_tile_registry_install_and_reset():
+    assert at.tile("rmsnorm", "rt") == 8
+    at.install_tiles({"rmsnorm": {"rt": 32}})
+    assert at.tile("rmsnorm", "rt") == 32
+    # untouched kernels keep their defaults
+    assert at.tile("exit_update", "vt") == at.DEFAULT_TILES["exit_update"]["vt"]
+    # the ops-layer wrapper actually consumes the installed tile (same
+    # output bits — rmsnorm is row-wise, tiling only regroups rows)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((48, 64)),
+                    jnp.float32)
+    w = jnp.ones((64,), jnp.float32)
+    tuned = rmsnorm_fused(x, w, interpret=True)
+    at.reset_tiles()
+    assert at.tile("rmsnorm", "rt") == 8
+    np.testing.assert_array_equal(
+        np.asarray(tuned), np.asarray(rmsnorm_fused(x, w, interpret=True)))
+
+
+def test_artifact_roundtrip_and_load_skips_sweep(tmp_path, monkeypatch):
+    _small(monkeypatch)
+    art = at.ensure_tuned(artifact_dir=str(tmp_path), reps=1)
+    path = at.tile_artifact_path(str(tmp_path), art.config_key)
+    with open(path) as f:
+        on_disk = at.TileArtifact.from_json(json.load(f))
+    assert on_disk.tiles == art.tiles
+    assert on_disk.config_key == art.config_key == at.tune_key()
+    assert all(r["tuned_speedup"] >= 1.0 for r in on_disk.rows)
+
+    # second call must LOAD, not re-sweep
+    def boom(*a, **k):
+        raise AssertionError("re-swept despite a matching artifact")
+    monkeypatch.setattr(at, "sweep", boom)
+    art2 = at.ensure_tuned(artifact_dir=str(tmp_path), reps=1)
+    assert art2.tiles == art.tiles
+    assert at.current_tiles() == art.tiles
+
+
+def test_mismatched_key_warns_and_falls_back(tmp_path, caplog):
+    key = at.tune_key()
+    stale = at.TileArtifact(
+        config_key="0" * 64, platform="tpu", interpret=False, shapes="tiny",
+        tiles={"rmsnorm": {"rt": 64}}, rows=[])
+    # place the stale artifact exactly where this process would look
+    path = at.tile_artifact_path(str(tmp_path), key)
+    with open(path, "w") as f:
+        json.dump(stale.to_json(), f)
+    with caplog.at_level("WARNING"):
+        assert at.load_tile_artifact(str(tmp_path)) is None
+    assert any("falling back to default tiles" in r.getMessage()
+               for r in caplog.records)
+    # and nothing was installed
+    assert at.tile("rmsnorm", "rt") == 8
+
+
+def test_artifact_version_check():
+    d = at.TileArtifact(config_key="x", platform="cpu", interpret=True,
+                        shapes="tiny", tiles={}, rows=[]).to_json()
+    d["version"] = at.TILE_ARTIFACT_VERSION + 1
+    with pytest.raises(ValueError, match="version"):
+        at.TileArtifact.from_json(d)
+
+
+def test_kernel_tune_config():
+    cfg = reduced(get_config("qwen2.5-3b"))
+    assert cfg.kernel_tune == KernelTuneConfig()
+    assert not cfg.kernel_tune.enabled
+    on = cfg.with_kernel_tune(enabled=True, megakernel=True,
+                              cohort_scatter=True, shapes="serving")
+    assert on.kernel_tune.enabled and on.kernel_tune.megakernel
+    assert on.kernel_tune.cohort_scatter
+    assert cfg.kernel_tune == KernelTuneConfig()  # frozen, not mutated
+    with pytest.raises(ValueError):
+        KernelTuneConfig(shapes="huge")

@@ -1,0 +1,233 @@
+"""Observability benchmark: flight-recorder overhead + trace validity.
+
+Two measurements, persisted to ``BENCH_serving.json`` (under ``obs``)
+by ``benchmarks/run.py`` and gated by
+``scripts/check_bench_serving.py::check_obs``:
+
+* **recorder overhead** — the serving engine (device runtime,
+  cond_batch, kernels on, a genuinely mixed-exit operating point)
+  decodes identical traffic with ``cfg.obs.enabled`` on vs off, measured
+  in interleaved waves at TICK granularity like the autotune telemetry
+  bench.  The gate requires tokens/s with the recorder within 3%
+  (median of per-wave paired ratios), token streams bit-identical, and
+  the device loop's host-sync discipline unchanged: exactly ONE
+  ``jax.device_get`` per decode chunk, recorder on or off (counted, not
+  assumed) — the recorder only reads data the chunk sync already
+  fetched, plus ``perf_counter`` stamps.
+
+* **fleet trace** — a 2-member device-runtime fleet with recorders on
+  serves a workload through a mid-run ``drain(0, mode="migrate")``; the
+  Perfetto/Chrome trace-event export must validate against the schema
+  with the ``drain`` instant present, and a migrated request's flight
+  dump must show BOTH members (terminal ``migrate`` on the source,
+  ``exit`` on the target).
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models.model import build_model
+from repro.serving import CascadeServingEngine, Request
+
+LANE_BATCH = 2
+CHUNK = 8
+
+# set by run(): machine-readable summary merged into BENCH_serving.json
+LAST_OBS_SUMMARY = None
+
+
+def _base_cfg():
+    # mirror the autotune overhead bench's MIXED-exit operating point —
+    # the streams gate is only meaningful where exits span depths
+    return reduced(get_config("qwen2.5-3b"), n_layers=3).replace(
+        dtype="float32", use_kernels=True).with_cascade(
+            n_components=3, exit_boundaries=(1, 2), exit_mode="cond_batch",
+            thresholds=(0.021, 0.021, 0.0))
+
+
+def _recorder_overhead(quick):
+    """tokens/s with the flight recorder on vs off over identical
+    interleaved traffic, plus the per-chunk host-sync count (must be
+    exactly 1 either way — recording happens at the existing sync)."""
+    base = _base_cfg()
+    cfg_on = base.with_obs()
+    model = build_model(base)
+    params = model.init(jax.random.PRNGKey(1))
+    n_req = 2 * LANE_BATCH
+    max_new = 12 if quick else 16
+    waves = 4 if quick else 8
+
+    sync_counts = {}
+    engines = {}
+    for name, cfg in (("off", base), ("on", cfg_on)):
+        eng = CascadeServingEngine(cfg, model, params,
+                                   lane_batch=LANE_BATCH, n_lanes=2,
+                                   cache_len=128, runtime="device",
+                                   chunk=CHUNK)
+        counts = {"get": 0, "chunks": 0}
+        real_run = eng.loop.run_chunk
+
+        def wrap_run(*a, _real=real_run, _c=counts, **k):
+            _c["chunks"] += 1
+            real_get = jax.device_get
+            try:
+                def wg(x):
+                    _c["get"] += 1
+                    return real_get(x)
+                jax.device_get = wg
+                return _real(*a, **k)
+            finally:
+                jax.device_get = real_get
+        eng.loop.run_chunk = wrap_run
+        sync_counts[name] = counts
+        engines[name] = eng
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, base.vocab_size, 8).astype(np.int32)
+               for _ in range((waves + 1) * n_req)]
+    # warm-up wave per engine (pays jit)
+    for eng in engines.values():
+        for i in range(n_req):
+            eng.submit(Request(rid=i, prompt=prompts[i],
+                               max_new_tokens=max_new))
+        eng.run(300)
+        eng.reset_metrics()
+    # measured waves, interleaved at TICK granularity; the reported ratio
+    # is the MEDIAN of per-wave paired ratios (robust to one noisy wave)
+    wave_ratios = []
+    for w in range(1, waves + 1):
+        for eng in engines.values():
+            eng.reset_metrics()
+            for i in range(w * n_req, (w + 1) * n_req):
+                eng.submit(Request(rid=i, prompt=prompts[i],
+                                   max_new_tokens=max_new))
+        for _ in range(300):
+            busy = False
+            for eng in engines.values():
+                if eng.queue or any(not s.done for ln in eng.lanes
+                                    for s in ln["slots"]):
+                    eng.step()
+                    busy = True
+            if not busy:
+                break
+        w_on = engines["on"].stats()["wallclock_us_per_token"]
+        w_off = engines["off"].stats()["wallclock_us_per_token"]
+        if w_on and w_off:
+            wave_ratios.append(w_off / w_on)
+
+    us_on = engines["on"].stats()["wallclock_us_per_token"]
+    us_off = engines["off"].stats()["wallclock_us_per_token"]
+    ratio = float(np.median(wave_ratios)) if wave_ratios else 1.0
+    extra = {name: c["get"] - c["chunks"] for name, c in sync_counts.items()}
+    streams_equal = (
+        {r: tuple(v["tokens"]) for r, v in engines["on"].finished.items()}
+        == {r: tuple(v["tokens"]) for r, v in engines["off"].finished.items()})
+    on = engines["on"]
+    exit_hist = [int(c) for c in on.stats()["exit_histogram"]]
+    flights = on.flight.stats()
+    return {
+        "recorder_on_us_per_token": us_on,
+        "recorder_off_us_per_token": us_off,
+        "tokens_per_s_ratio": ratio,          # on/off throughput; 1.0 = free
+        "extra_host_syncs_per_chunk_on": extra["on"],
+        "extra_host_syncs_per_chunk_off": extra["off"],
+        "streams_identical": streams_equal,
+        "flights_recorded": flights["flights_done"] +
+        flights["flights_evicted"],
+        "flights_evicted": flights["flights_evicted"],
+        "max_flights": cfg_on.obs.max_flights,
+        "exit_histogram": exit_hist,
+        # the streams gate is vacuous unless exits actually span depths
+        "mixed_exits": bool(exit_hist[0] > 0 and sum(exit_hist[1:]) > 0),
+    }
+
+
+def _fleet_trace(quick):
+    """Fleet run with one mid-decode drain/migration; the exported trace
+    must validate with the drain visible, and the migrated request's
+    flight must span both members."""
+    from repro.fleet import FleetScheduler
+    from repro.obs import export_trace, validate_trace_events
+
+    cfg = _base_cfg().with_obs().with_fleet(n_engines=2,
+                                            drain_mode="migrate")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    members = [CascadeServingEngine(cfg, model, params,
+                                    lane_batch=LANE_BATCH, n_lanes=2,
+                                    cache_len=128, runtime="device",
+                                    chunk=2)
+               for _ in range(2)]
+    fleet = FleetScheduler(members)
+    rng = np.random.default_rng(0)
+    n_req = 6
+    for i in range(n_req):
+        fleet.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+            max_new_tokens=8))
+    for _ in range(2):
+        fleet.step()
+    drain = fleet.drain(0, mode="migrate")
+    fleet.run(500)
+    st = fleet.stats()
+
+    fd, path = tempfile.mkstemp(suffix=".json", prefix="obs_trace_")
+    os.close(fd)
+    try:
+        doc = export_trace(path, fleet._recorders(),
+                           extra_events=fleet.events.snapshot())
+        evs = doc["traceEvents"]
+        validate_trace_events(evs, require_names=("drain",))
+        trace_valid = True
+        trace_bytes = os.path.getsize(path)
+    finally:
+        os.unlink(path)
+
+    migrated = list(drain.get("migrated") or [])
+    both = False
+    for rid in migrated:
+        fl = fleet.dump_flight(rid)
+        memb = {m["member"] for m in (fl or {}).get("members", [])}
+        kinds = {m.get("terminal") for m in (fl or {}).get("members", [])}
+        if len(memb) >= 2 and {"migrate", "exit"} <= kinds:
+            both = True
+            break
+    return {
+        "submitted": n_req,
+        "finished": st["requests_finished"],
+        "migrated": len(migrated),
+        "discarded_tokens": st["discarded_tokens"],
+        "trace_valid": trace_valid,
+        "trace_events": len(evs),
+        "trace_bytes": trace_bytes,
+        "drain_visible": True,   # validate() raised otherwise
+        "migrated_shows_both_members": both,
+        "fleet_events": dict(fleet.events.counts),
+    }
+
+
+def run(quick: bool = False):
+    global LAST_OBS_SUMMARY
+    overhead = _recorder_overhead(quick)
+    trace = _fleet_trace(quick)
+    rows = [
+        ("obs/recorder_overhead",
+         overhead["recorder_on_us_per_token"] or 0.0,
+         f"ratio={overhead['tokens_per_s_ratio']:.3f};"
+         f"extra_syncs={overhead['extra_host_syncs_per_chunk_on']};"
+         f"streams_identical={overhead['streams_identical']}"),
+        ("obs/fleet_trace", 0.0,
+         f"events={trace['trace_events']};"
+         f"migrated={trace['migrated']};"
+         f"both_members={trace['migrated_shows_both_members']}"),
+    ]
+    LAST_OBS_SUMMARY = {
+        "quick": bool(quick),
+        "overhead": overhead,
+        "trace": trace,
+    }
+    return rows

@@ -23,6 +23,24 @@ import traceback
 # runnable as `python benchmarks/run.py` from the repo root
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
+# BENCH_serving.json summary schema: bump when a section's shape changes
+# incompatibly.  The checker warns (not fails) on versions it does not
+# know, so an old checker can still gate what it understands.
+SCHEMA_VERSION = 2
+
+
+def _run_meta() -> dict:
+    """Run provenance stamped into the summary: which stack measured it."""
+    import platform
+
+    import jax
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -34,11 +52,13 @@ def main() -> None:
 
     from benchmarks import (bench_table2, bench_fig3, bench_fig4,
                             bench_llm_cascade, bench_kernels,
-                            bench_ablation, bench_autotune, bench_fleet)
+                            bench_ablation, bench_autotune, bench_fleet,
+                            bench_obs)
     mods = [("table2", bench_table2), ("fig3", bench_fig3),
             ("fig4", bench_fig4), ("ablation", bench_ablation),
             ("llm_cascade", bench_llm_cascade), ("kernels", bench_kernels),
-            ("autotune", bench_autotune), ("fleet", bench_fleet)]
+            ("autotune", bench_autotune), ("fleet", bench_fleet),
+            ("obs", bench_obs)]
     if args.only:
         wanted = {w.strip() for w in args.only.split(",") if w.strip()}
         unknown = wanted - {n for n, _ in mods}
@@ -67,8 +87,10 @@ def main() -> None:
     autotune = getattr(bench_autotune, "LAST_AUTOTUNE_SUMMARY", None)
     fleet = getattr(bench_fleet, "LAST_FLEET_SUMMARY", None)
     kernels = getattr(bench_kernels, "LAST_KERNELS_SUMMARY", None)
-    if (summary is not None or autotune is not None or fleet is not None
-            or kernels is not None):
+    obs = getattr(bench_obs, "LAST_OBS_SUMMARY", None)
+    sections = {"autotune": autotune, "fleet": fleet, "kernels": kernels,
+                "obs": obs}
+    if summary is not None or any(v is not None for v in sections.values()):
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         path = os.path.join(root, "BENCH_serving.json")
         # partial runs (--only) update their section and keep the rest
@@ -77,22 +99,16 @@ def main() -> None:
             with open(path) as f:
                 data = json.load(f)
         if summary is not None:
-            autotune_keep = data.get("autotune")
-            fleet_keep = data.get("fleet")
-            kernels_keep = data.get("kernels")
+            keep = {k: data.get(k) for k in sections}
             data = dict(summary)
-            if autotune_keep is not None:
-                data["autotune"] = autotune_keep
-            if fleet_keep is not None:
-                data["fleet"] = fleet_keep
-            if kernels_keep is not None:
-                data["kernels"] = kernels_keep
-        if autotune is not None:
-            data["autotune"] = autotune
-        if fleet is not None:
-            data["fleet"] = fleet
-        if kernels is not None:
-            data["kernels"] = kernels
+            for k, v in keep.items():
+                if v is not None:
+                    data[k] = v
+        for k, v in sections.items():
+            if v is not None:
+                data[k] = v
+        data["schema_version"] = SCHEMA_VERSION
+        data["meta"] = _run_meta()
         with open(path, "w") as f:
             json.dump(data, f, indent=2)
             f.write("\n")

@@ -60,6 +60,19 @@ llm_cascade bench runs), the cross-model tier is validated too:
   average MACs than always running the target, and gives up no accuracy
   doing it.
 
+When the summary carries an ``obs`` section (written whenever
+``benchmarks/bench_obs.py`` runs), the flight recorder is validated too:
+
+* recorder overhead within 3% tokens/s of the recorder-off engine, zero
+  added host syncs per decode chunk, bit-identical token streams;
+* the fleet trace export passes the Chrome trace-event schema check with
+  the drain instant present, and a migrated request's flight spans both
+  members.
+
+The summary also carries ``schema_version`` + run ``meta`` (jax version,
+backend); an unknown version prints a warning and gates only the
+sections this checker recognizes — never a KeyError.
+
 Exit code 1 on violation so CI can retry once — the strict margins are
 real but finite (~5–10%), and a shared runner's scheduler noise can eat
 them in a single unlucky run.  (The escalation gates are deterministic
@@ -83,6 +96,14 @@ MIN_THRESHOLDS = 3
 MIN_BUDGETS = 3
 # the acceptance bar: telemetry accumulation may cost at most 3% tokens/s
 TELEMETRY_RATIO_MIN = 0.97
+# same bar for the flight recorder (repro.obs): recording at the existing
+# host-sync boundaries may cost at most 3% tokens/s, with streams
+# bit-identical and zero added host syncs per chunk
+OBS_RATIO_MIN = 0.97
+# summary schema versions this checker knows how to gate; an UNKNOWN (or
+# newer) version warns instead of failing — sections it still recognizes
+# are gated, sections it does not are someone else's job
+KNOWN_SCHEMA_VERSIONS = (1, 2)
 # fleet gates: a 4-engine fleet must reach its first merged-solve push on
 # <= 1/3 the per-member shadow evidence a lone engine needs
 MIN_FLEET_ENGINES = 4
@@ -292,6 +313,66 @@ def check_fleet(fl) -> bool:
     return ok
 
 
+def check_obs(obs) -> bool:
+    """Observability gates (written by ``benchmarks/bench_obs.py``): the
+    flight recorder must be effectively free — within 3% tokens/s of the
+    recorder-off engine on interleaved traffic, ZERO added host syncs
+    per decode chunk (counted, not assumed), token streams bit-identical
+    — and the fleet trace export must validate against the Chrome
+    trace-event schema with the drain visible and a migrated request's
+    flight spanning both members."""
+    ok = True
+    ov = obs.get("overhead") or {}
+    ratio = float(ov.get("tokens_per_s_ratio") or 0.0)
+    if ratio < OBS_RATIO_MIN:
+        print(f"obs: recorder overhead beyond 3%: tokens/s ratio "
+              f"{ratio:.3f} < {OBS_RATIO_MIN}", file=sys.stderr)
+        ok = False
+    if ov.get("extra_host_syncs_per_chunk_on", 1) != 0:
+        print(f"obs: recorder added host syncs per chunk: "
+              f"{ov.get('extra_host_syncs_per_chunk_on')}", file=sys.stderr)
+        ok = False
+    if not ov.get("streams_identical"):
+        print("obs: recorder-on token streams diverged from recorder-off",
+              file=sys.stderr)
+        ok = False
+    if not ov.get("mixed_exits"):
+        print("obs: overhead bench ran at a non-mixed exit point — the "
+              "streams_identical gate is vacuous there (exit_histogram "
+              f"{ov.get('exit_histogram')})", file=sys.stderr)
+        ok = False
+    if int(ov.get("flights_recorded") or 0) < 1:
+        print("obs: recorder-on engine recorded no flights", file=sys.stderr)
+        ok = False
+    tr = obs.get("trace") or {}
+    if not tr.get("trace_valid"):
+        print("obs: fleet trace export failed schema validation",
+              file=sys.stderr)
+        ok = False
+    if int(tr.get("migrated") or 0) < 1:
+        print("obs: fleet trace run migrated no requests — the bench must "
+              "show a drain/migration on the timeline", file=sys.stderr)
+        ok = False
+    if not tr.get("migrated_shows_both_members"):
+        print("obs: migrated request's flight does not span both members "
+              "(want terminal migrate on the source, exit on the target)",
+              file=sys.stderr)
+        ok = False
+    if int(tr.get("finished") or 0) != int(tr.get("submitted") or -1):
+        print(f"obs: trace run dropped requests: "
+              f"{tr.get('finished')}/{tr.get('submitted')} finished",
+              file=sys.stderr)
+        ok = False
+    print(f"obs recorder ratio: {ratio:.3f} (extra syncs "
+          f"{ov.get('extra_host_syncs_per_chunk_on')}, "
+          f"{ov.get('flights_recorded')} flights, "
+          f"{ov.get('flights_evicted')} evicted)")
+    print(f"obs fleet trace: {tr.get('trace_events')} events, "
+          f"{tr.get('migrated')} migrated, both_members="
+          f"{bool(tr.get('migrated_shows_both_members'))}")
+    return ok
+
+
 def check_paged_row(r, th) -> bool:
     """Paged-vs-dense gates for one threshold row (see module docstring)."""
     ok = True
@@ -333,6 +414,17 @@ def main() -> int:
     path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_serving.json"
     with open(path) as f:
         s = json.load(f)
+    ver = s.get("schema_version")
+    if ver is not None and ver not in KNOWN_SCHEMA_VERSIONS:
+        # a newer writer may carry sections this checker has never heard
+        # of — gate what is recognized, warn about the rest, never KeyError
+        print(f"WARNING: {path} has schema_version {ver!r}; this checker "
+              f"knows {list(KNOWN_SCHEMA_VERSIONS)} — gating only the "
+              f"sections it recognizes", file=sys.stderr)
+    meta = s.get("meta") or {}
+    if meta:
+        print(f"bench meta: jax {meta.get('jax')} "
+              f"({meta.get('backend')}), python {meta.get('python')}")
     rows = s.get("rows") or []
     ok = True
     if len(rows) < MIN_THRESHOLDS:
@@ -410,6 +502,8 @@ def main() -> int:
         ok = check_escalation(s["escalation"]) and ok
     if s.get("fleet") is not None:
         ok = check_fleet(s["fleet"]) and ok
+    if s.get("obs") is not None:
+        ok = check_obs(s["obs"]) and ok
     return 0 if ok else 1
 
 

@@ -187,6 +187,10 @@ class ThresholdController:
             res = solve_epsilon(hist, self.epsilon)
         self.resolves += 1
         self.last_result = res
+        # flight-recorder hook (repro.obs): solver resolves are recorded
+        # on the engine/fleet event log even when the hysteresis guard
+        # swallows the push — the timeline shows WHY thresholds held still
+        obs_log = getattr(engine, "obs_events", None)
 
         cur = engine.current_thresholds()
         if (not force and cur is not None
@@ -195,11 +199,24 @@ class ThresholdController:
                        for a, b in zip(res.thresholds[:-1], cur[:-1]))
             if move < self.hysteresis:
                 self.skipped_small += 1
+                if obs_log is not None:
+                    obs_log.add("autotune_resolve", {
+                        "pushed": False, "reason": "hysteresis",
+                        "thresholds": [float(t) for t in res.thresholds],
+                        "agreement": float(res.agreement),
+                        "avg_macs": float(res.avg_macs)})
                 return None
         engine.push_thresholds(res.thresholds)
         self.pushes += 1
         self.thresholds = res.thresholds
         self.last_shadow = float(base["shadow_steps"])
+        if obs_log is not None:
+            obs_log.add("autotune_resolve", {
+                "pushed": True,
+                "thresholds": [float(t) for t in res.thresholds],
+                "agreement": float(res.agreement),
+                "avg_macs": float(res.avg_macs),
+                "shadow_steps": float(base["shadow_steps"])})
         log.info("pushed thresholds %s (%s=%s, agreement %.4f, avg MACs "
                  "%.3g, %d shadow obs)", res.thresholds, self.direction,
                  self.mac_budget or self.epsilon, res.agreement,

@@ -1,12 +1,12 @@
 from repro.configs.base import (AutotuneConfig, CascadeConfig,
                                 EscalationConfig, InputShape, INPUT_SHAPES,
-                                KernelTuneConfig, ModelConfig,
+                                KernelTuneConfig, ModelConfig, ObsConfig,
                                 PagedCacheConfig, default_exit_boundaries,
                                 get_config, list_configs, reduced, register)
 
 __all__ = [
     "AutotuneConfig", "CascadeConfig", "EscalationConfig", "InputShape",
-    "INPUT_SHAPES", "KernelTuneConfig", "ModelConfig", "PagedCacheConfig",
-    "default_exit_boundaries", "get_config", "list_configs", "reduced",
-    "register",
+    "INPUT_SHAPES", "KernelTuneConfig", "ModelConfig", "ObsConfig",
+    "PagedCacheConfig", "default_exit_boundaries", "get_config",
+    "list_configs", "reduced", "register",
 ]

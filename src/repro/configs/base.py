@@ -315,6 +315,48 @@ class FleetConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Observability knobs (``repro.obs``): the cascade flight recorder.
+
+    With ``enabled``, the serving engine assembles a structured span tree
+    per request — submit → queue-wait → admit(lane, cohort, predicted
+    depth) → prefill → per-chunk decode (tokens, exit components,
+    confidence at exit) → exit | escalate | migrate → finalize — entirely
+    host-side, from data the jitted programs already return at existing
+    host-sync boundaries plus ``perf_counter`` stamps around them.  The
+    device programs gain ZERO new host syncs and ZERO retraces: recording
+    never touches a traced graph, so token/exit/confidence streams are
+    bit-identical recorder-on vs recorder-off (pinned by
+    ``tests/test_obs.py`` and gated ≥ 0.97 throughput ratio in
+    ``BENCH_serving.json["obs"]``).
+
+    ``max_flights`` bounds the ring buffer of COMPLETED flight records
+    (live flights are bounded by slot capacity); the oldest record is
+    evicted when the ring is full, so a long-running engine's postmortem
+    memory stays O(max_flights).  ``max_events`` bounds the engine-level
+    event log (threshold pushes, drains, chunk slices for the Perfetto
+    timeline).  ``reservoir`` bounds the per-metric latency reservoirs
+    the p50/p95/p99 summaries are computed from (newest-wins).
+    """
+
+    enabled: bool = False
+    max_flights: int = 64
+    max_events: int = 1024
+    reservoir: int = 1024
+
+    def __post_init__(self):
+        if self.max_flights < 1:
+            raise ValueError(
+                f"obs.max_flights must be >= 1, got {self.max_flights}")
+        if self.max_events < 1:
+            raise ValueError(
+                f"obs.max_events must be >= 1, got {self.max_events}")
+        if self.reservoir < 1:
+            raise ValueError(
+                f"obs.reservoir must be >= 1, got {self.reservoir}")
+
+
+@dataclasses.dataclass(frozen=True)
 class KernelTuneConfig:
     """Pallas kernel tile autotuning + fusion knobs (``repro.kernels``).
 
@@ -447,6 +489,7 @@ class ModelConfig:
     fleet: FleetConfig = dataclasses.field(default_factory=FleetConfig)
     kernel_tune: KernelTuneConfig = dataclasses.field(
         default_factory=KernelTuneConfig)
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
 
     # ------------------------------------------------------------------
     @property
@@ -492,6 +535,12 @@ class ModelConfig:
     def with_kernel_tune(self, **kw) -> "ModelConfig":
         return dataclasses.replace(
             self, kernel_tune=dataclasses.replace(self.kernel_tune, **kw))
+
+    def with_obs(self, **kw) -> "ModelConfig":
+        if not kw:
+            kw = {"enabled": True}
+        return dataclasses.replace(
+            self, obs=dataclasses.replace(self.obs, **kw))
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)

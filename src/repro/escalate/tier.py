@@ -283,6 +283,19 @@ class ModelCascadeTier:
         tr.escalations += 1
         tr.pending_regen = rejected if share else None
         self._escalations_total += 1
+        # flight recorder (repro.obs): the source engine's flight already
+        # carries the terminal ("escalate" via cancel, or "exit" when the
+        # defer fired after a natural finish); stamp the routing context
+        # only the tier knows, and log the hop on the source event track
+        flight = getattr(self.engines[stage], "flight", None)
+        if flight is not None:
+            flight.annotate(base.rid, {
+                "escalated_to_stage": stage + 1, "deferred_at": d,
+                "replayed": replayed, "committed": len(tr.committed)})
+            flight.on_event("escalate", {
+                "rid": base.rid, "from_stage": stage,
+                "to_stage": stage + 1, "deferred_at": d,
+                "replayed": replayed, "kept": share})
         del orig
 
     def _base_request(self, tr: _TierRequest) -> Request:
@@ -388,6 +401,18 @@ class ModelCascadeTier:
                 continue
             slack, d = max(donors)
             self.donate_blocks(d, s, min(self.donate_quantum, slack))
+
+    # -- observability (repro.obs) ----------------------------------------
+    def dump_flight(self, rid: int):
+        """Every stage's flight for ``rid`` (an escalated request shows
+        one per stage it touched), or None when no stage knows it."""
+        out = []
+        for k, eng in enumerate(self.engines):
+            dump = getattr(eng, "dump_flight", None)
+            d = dump(rid) if dump is not None else None
+            if d is not None:
+                out.append({"stage": k, **d})
+        return out or None
 
     # -- metrics ---------------------------------------------------------
     def stats(self) -> dict:

@@ -58,6 +58,27 @@ class TelemetryAggregator(ThresholdController):
                        if tels else 0.0)
         return out
 
+    def metrics_into(self, reg, fleet) -> None:
+        """Contribute the aggregator's view to a fleet scrape: solver
+        counters plus each member's own shadow evidence (the per-member
+        share of the merged solve's evidence pool)."""
+        st = self.stats()
+        reg.counter("repro_fleet_autotune_resolves_total",
+                    "Merged telemetry solves attempted.", st["resolves"])
+        reg.counter("repro_fleet_autotune_pushes_total",
+                    "Merged solves that pushed thresholds.", st["pushes"])
+        reg.counter("repro_fleet_autotune_drift_resets_total",
+                    "Confidence-drift telemetry rebases.",
+                    st["drift_resets"])
+        try:
+            shadows = self.per_member_shadow(fleet)
+        except Exception:                             # noqa: BLE001
+            return
+        for i, s in enumerate(shadows):
+            reg.gauge("repro_fleet_member_shadow_steps",
+                      "Shadow full-depth evidence accumulated per member.",
+                      s, {"member": str(i)})
+
     def merged_histogram(self, fleet) -> ExitHistogram:
         """Merge per-member histograms explicitly (members → histograms →
         :func:`merge_histograms`).  Equivalent to the solve path's merged-

@@ -98,3 +98,19 @@ class EngineHealth:
 
     def stats(self) -> List[dict]:
         return [dataclasses.asdict(st) for st in self.states]
+
+    def summary(self, idx: int) -> dict:
+        """One member's health in the shape the fleet surfaces per-member
+        (stats()["members"][idx] and the Prometheus scrape): a flapping
+        member is visible as nonzero consecutive failures / backoff
+        without reading logs."""
+        st = self.states[idx]
+        return {
+            "healthy": st.healthy,
+            "consecutive_failures": st.failures,
+            "total_failures": st.total_failures,
+            "backoff": st.backoff,
+            "next_probe_tick": st.next_probe_tick,
+            "unhealthy_marks": st.unhealthy_marks,
+            "last_error": st.last_error,
+        }

@@ -53,11 +53,22 @@ import numpy as np
 
 from repro.escalate.replay import build_replay, resolve_share_prefix
 from repro.fleet.health import EngineHealth
+from repro.obs.recorder import EventLog
 from repro.serving.batching import DepthCompactor, LaneStats
 from repro.serving.engine import Request
 from repro.utils import get_logger
 
 log = get_logger("fleet")
+
+
+def _cancel_member(m, rid: int, reason: str):
+    """Call a member's ``cancel`` with the terminal reason when it takes
+    one (the engine stamps it on the flight's terminal span) and without
+    it for members predating the kwarg."""
+    try:
+        return m.cancel(rid, reason=reason)
+    except TypeError:
+        return m.cancel(rid)
 
 
 @dataclasses.dataclass
@@ -117,6 +128,12 @@ class FleetScheduler:
         self.migrations = 0
         self.requeues = 0
         self.placements = 0
+        # fleet-level event log (repro.obs): drains, migrations, rescues,
+        # threshold pushes — always on (bounded host bookkeeping), shown
+        # as the `fleet` track in the Perfetto export
+        obs_cfg = getattr(members[0].cfg, "obs", None)
+        self.events = EventLog(obs_cfg.max_events if obs_cfg is not None
+                               else 1024)
         self.aggregator = aggregator
         if aggregator is not None:
             from repro.autotune.artifacts import config_key
@@ -350,7 +367,7 @@ class FleetScheduler:
             requeued.append(req.rid)
         if mode == "migrate" and hasattr(m, "cancel"):
             for rid in list(m.live_rids()):
-                rec = m.cancel(rid)
+                rec = _cancel_member(m, rid, "migrate")
                 if rec is None:
                     continue
                 # the cancel record is migration bookkeeping, not a
@@ -378,8 +395,15 @@ class FleetScheduler:
         log.info("drain(%d, mode=%s): %d requeued, %d migrated, %d "
                  "completed-at-drain", idx, mode, len(requeued),
                  len(migrated), len(completed))
-        return {"engine": idx, "mode": mode, "requeued": requeued,
-                "migrated": migrated, "completed": completed}
+        summary = {"engine": idx, "mode": mode, "requeued": requeued,
+                   "migrated": migrated, "completed": completed}
+        self.events.add("drain", {"member": idx, "mode": mode,
+                                  "requeued": len(requeued),
+                                  "migrated": len(migrated),
+                                  "completed": len(completed),
+                                  "rids_migrated": migrated,
+                                  "tick": self._tick})
+        return summary
 
     def _finish_drains(self) -> None:
         for idx in list(self.draining):
@@ -401,6 +425,7 @@ class FleetScheduler:
         self.draining.discard(idx)
         self.drained.discard(idx)
         m.admitting = True
+        self.events.add("resume", {"member": idx, "tick": self._tick})
         if (self._live_thresholds is not None
                 and hasattr(m, "push_thresholds")):
             m.push_thresholds(self._live_thresholds)
@@ -451,7 +476,7 @@ class FleetScheduler:
             rec = None
             if hasattr(m, "cancel"):
                 try:
-                    rec = m.cancel(rid)
+                    rec = _cancel_member(m, rid, "migrate")
                     m.finished.pop(rid, None)
                 except Exception:                     # noqa: BLE001
                     rec = None
@@ -472,6 +497,9 @@ class FleetScheduler:
             else:
                 self.queue.append(fr)
         self.queue.sort(key=lambda f: f.order)
+        self.events.add("rescue", {"member": idx, "requeued": len(taken),
+                                   "live_recovered": len(live),
+                                   "tick": self._tick})
         log.warning("rescued member %d: %d queued requeued, %d live "
                     "recovered", idx, len(taken), len(live))
 
@@ -511,6 +539,8 @@ class FleetScheduler:
             except Exception as e:                    # noqa: BLE001
                 self.health.note_failure(idx, self._tick, e)
         self._live_thresholds = pushed
+        self.events.add("threshold_push", {"thresholds": list(pushed),
+                                           "tick": self._tick})
 
     # -- driving / reporting ----------------------------------------------
     def run(self, max_ticks: int = 1000) -> Dict[int, dict]:
@@ -519,6 +549,124 @@ class FleetScheduler:
                 break
             self.step()
         return self.finished
+
+    # -- observability (repro.obs) ----------------------------------------
+    @property
+    def obs_events(self):
+        """The fleet-level event log — also the hook a fleet-attached
+        ThresholdController/TelemetryAggregator records resolves into."""
+        return self.events
+
+    def _recorders(self):
+        """(name, FlightRecorder) per member that has one (obs enabled)."""
+        out = []
+        for i, m in enumerate(self.members):
+            fl = getattr(m, "flight", None)
+            if fl is not None:
+                out.append((f"member{i}", fl))
+        return out
+
+    def dump_flight(self, rid: int) -> Optional[dict]:
+        """Every member's flight for ``rid`` (a migrated request shows
+        one per member it touched) stitched with the fleet-level record
+        — None when nobody recorded it."""
+        flights = []
+        for i, m in enumerate(self.members):
+            dump = getattr(m, "dump_flight", None)
+            d = dump(rid) if dump is not None else None
+            if isinstance(d, list):          # tier member: one per stage
+                flights.extend({"member": i, **x} for x in d)
+            elif d is not None:
+                flights.append({"member": i, **d})
+        if not flights and rid not in self.finished:
+            return None
+        return {"rid": rid, "members": flights,
+                "record": self.finished.get(rid)}
+
+    def scrape(self) -> str:
+        """Prometheus text: per-member metrics (``member=`` label), the
+        merged latency summaries (``member="merged"``) and fleet-level
+        placement/drain/health metrics."""
+        return self._registry().render_text()
+
+    def scrape_json(self) -> dict:
+        return self._registry().render_json()
+
+    def _registry(self):
+        from repro.obs.metrics import MetricsRegistry, engine_metrics_into
+        reg = MetricsRegistry()
+        merged = {}
+        for i, m in enumerate(self.members):
+            try:
+                engine_metrics_into(reg, m, {"member": str(i)})
+            except Exception as e:                    # noqa: BLE001
+                self.health.note_failure(i, self._tick, e)
+            fl = getattr(m, "flight", None)
+            if fl is not None:
+                for key, res in fl.reservoirs.items():
+                    agg = merged.setdefault(key, ([], [0], [0.0]))
+                    agg[0].extend(res.values())
+                    agg[1][0] += res.count
+                    agg[2][0] += res.total
+        names = {"e2e_seconds": ("repro_request_latency_seconds",
+                                 "Submit-to-finalize latency per request."),
+                 "per_token_seconds": (
+                     "repro_token_latency_seconds",
+                     "Decode wall-clock attributed per generated token."),
+                 "macs_per_request": (
+                     "repro_macs_per_request",
+                     "Analytic decode MACs spent per finished request.")}
+        for key, (vals, cnt, tot) in merged.items():
+            if key not in names:
+                continue
+            name, help_ = names[key]
+            reg.summary(name, help_, vals, {"member": "merged"},
+                        count=cnt[0], total=tot[0])
+        for i in range(len(self.members)):
+            h = self.health.summary(i)
+            lm = {"member": str(i)}
+            reg.gauge("repro_fleet_member_healthy",
+                      "1 while the member passes health probes.",
+                      1.0 if h["healthy"] else 0.0, lm)
+            reg.gauge("repro_fleet_member_consecutive_failures",
+                      "Consecutive probe/step failures (resets on a "
+                      "successful probe).", h["consecutive_failures"], lm)
+            reg.gauge("repro_fleet_member_backoff_ticks",
+                      "Current exponential-backoff window before the "
+                      "next probe.", h["backoff"], lm)
+            reg.counter("repro_fleet_member_unhealthy_marks_total",
+                        "Times the member crossed max_failures.",
+                        h["unhealthy_marks"], lm)
+        reg.gauge("repro_fleet_queue_depth",
+                  "Requests waiting in the fleet queue.", len(self.queue))
+        reg.counter("repro_fleet_placements_total",
+                    "Requests placed onto members.", self.placements)
+        reg.counter("repro_fleet_migrations_total",
+                    "Live requests migrated off a member.", self.migrations)
+        reg.counter("repro_fleet_requeues_total",
+                    "Queued requests pulled back to the fleet queue.",
+                    self.requeues)
+        for name in ("drain", "rescue", "resume", "threshold_push"):
+            reg.counter(f"repro_fleet_{name}_events_total",
+                        f"Fleet-level {name} events.",
+                        self.events.counts.get(name, 0))
+        if self.aggregator is not None and hasattr(self.aggregator,
+                                                   "metrics_into"):
+            self.aggregator.metrics_into(reg, self)
+        return reg
+
+    def trace_events(self) -> List[dict]:
+        """Chrome trace-event list: one process per member (lane tracks,
+        chunk slices) plus the fleet event track (drains, migrations,
+        pushes) — ready for Perfetto."""
+        from repro.obs.traceviz import trace_events
+        return trace_events(self._recorders(),
+                            extra_events=self.events.snapshot())
+
+    def export_trace(self, path: str) -> dict:
+        from repro.obs.traceviz import export_trace
+        return export_trace(path, self._recorders(),
+                            extra_events=self.events.snapshot())
 
     def stats(self) -> dict:
         members = []
@@ -530,9 +678,13 @@ class FleetScheduler:
                     "live": len(m.live_rids()),
                     "finished": len(m.finished),
                     "depth_ema": self.compactor.lane_stats[idx].depth_ema,
+                    # the EngineHealth satellite: flapping is visible per
+                    # member without digging into stats()["health"]
+                    **self.health.summary(idx),
                 })
             except Exception as e:                    # noqa: BLE001
-                members.append({"error": repr(e)})
+                members.append({"error": repr(e),
+                                **self.health.summary(idx)})
         return {
             "n_members": len(self.members),
             "requests_finished": len(self.finished),
@@ -550,5 +702,6 @@ class FleetScheduler:
             "aggregator": (self.aggregator.stats()
                            if self.aggregator is not None else None),
             "health": self.health.stats(),
+            "events": dict(self.events.counts),
             "members": members,
         }

@@ -103,7 +103,27 @@ def main():
                          "in-flight committed prefixes replay into "
                          "siblings, and the run must still finish every "
                          "request")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the flight recorder (repro.obs): a "
+                         "bounded per-request span tree assembled at the "
+                         "existing host-sync boundaries — zero extra "
+                         "device syncs, zero retraces")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics (Prometheus text), /metrics.json, "
+                         "/flights and /trace on 127.0.0.1:<port> and "
+                         "round-trip one scrape before exiting (0 picks a "
+                         "free port); implies --obs")
+    ap.add_argument("--flight-dump", type=int, default=None, metavar="RID",
+                    help="after the run, dump this request's recorded "
+                         "span tree as JSON; implies --obs")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="after the run, export the recording as Chrome "
+                         "trace-event JSON (load in Perfetto or "
+                         "chrome://tracing); implies --obs")
     args = ap.parse_args()
+    if (args.metrics_port is not None or args.flight_dump is not None
+            or args.trace_out):
+        args.obs = True
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -125,6 +145,8 @@ def main():
         cfg = cfg.with_paged_cache(layout="paged",
                                    block_size=args.block_size,
                                    num_blocks=args.num_blocks)
+    if args.obs:
+        cfg = cfg.with_obs()
     if escalate:
         if args.fleet > 1:
             raise SystemExit("--fleet combines with plain engines; to "
@@ -179,7 +201,59 @@ def main():
                  / max(1, mem["dense_slab_bytes"]),
                  mem["reclaimed_by_exit"], mem["reclaimed_at_retire"],
                  stats["admission_wait_mean"] or 0.0)
+    if args.obs:
+        lat = stats["latency"]
+        log.info("latency: admission %s ticks, e2e %s s",
+                 json.dumps(lat["admission_wait_ticks"]),
+                 json.dumps(lat["e2e_seconds"]))
+        _obs_wrapup(args, scrape_text=engine.scrape,
+                    scrape_json=engine.scrape_json,
+                    recorders=[("engine", engine.flight)],
+                    dump=engine.dump_flight, flights=engine.flights)
     assert stats["requests_finished"] == args.requests
+
+
+def _obs_wrapup(args, *, scrape_text, scrape_json=None, recorders=(),
+                extra_events=None, dump=None, flights=None):
+    """Shared --metrics-port / --trace-out / --flight-dump epilogue.
+
+    The metrics server round-trips one scrape through a real socket (the
+    CI obs-smoke lane pins that the text parses back), the trace export
+    validates against the Chrome trace-event schema before writing, and
+    the flight dump prints one request's span tree."""
+    if args.metrics_port is not None:
+        from urllib.request import urlopen
+
+        from repro.obs import MetricsServer, parse_prometheus, trace_events
+        with MetricsServer(args.metrics_port, scrape_text,
+                           scrape_json=scrape_json,
+                           flights=flights, flight=dump,
+                           trace=(lambda: trace_events(
+                               recorders, extra_events=extra_events))
+                           if recorders else None) as srv:
+            body = urlopen(f"http://127.0.0.1:{srv.port}/metrics",
+                           timeout=10).read().decode()
+            samples = parse_prometheus(body)
+            log.info("metrics: %d samples served on port %d "
+                     "(scrape round-trip OK)", len(samples), srv.port)
+    if args.trace_out:
+        recs = [(n, r) for n, r in recorders if r is not None]
+        if recs or extra_events:
+            from repro.obs import export_trace
+            doc = export_trace(args.trace_out, recs,
+                               extra_events=extra_events)
+            log.info("trace: %d events -> %s",
+                     len(doc["traceEvents"]), args.trace_out)
+        else:
+            log.warning("trace: nothing recorded (pass --obs)")
+    if args.flight_dump is not None and dump is not None:
+        fl = dump(args.flight_dump)
+        if fl is None:
+            log.warning("flight %d: not recorded (evicted, or recorder "
+                        "off)", args.flight_dump)
+        else:
+            log.info("flight %d: %s", args.flight_dump,
+                     json.dumps(fl, indent=2, default=str))
 
 
 def _serve_fleet(args, cfg):
@@ -238,6 +312,13 @@ def _serve_fleet(args, cfg):
         log.info("aggregator: thresholds %s, %s",
                  fleet.current_thresholds(),
                  json.dumps(stats["aggregator"], default=str))
+    if args.obs:
+        log.info("fleet events: %s", json.dumps(stats["events"]))
+        _obs_wrapup(args, scrape_text=fleet.scrape,
+                    scrape_json=fleet.scrape_json,
+                    recorders=fleet._recorders(),
+                    extra_events=fleet.events.snapshot(),
+                    dump=fleet.dump_flight)
     assert stats["requests_finished"] == args.requests, stats
     assert stats["discarded_tokens"] == 0, \
         "same-config migration must replay, never discard"
@@ -276,6 +357,8 @@ def _serve_tier(args, cfg0):
         cfg1 = cfg1.with_paged_cache(layout="paged",
                                      block_size=args.block_size,
                                      num_blocks=args.num_blocks)
+    if args.obs:
+        cfg1 = cfg1.with_obs()
 
     engines = []
     for s, cfg in enumerate((cfg0, cfg1)):
@@ -322,6 +405,21 @@ def _serve_tier(args, cfg0):
     if args.autotune:
         log.info("tier controller: %s",
                  json.dumps(stats["controller"], default=str))
+    if args.obs:
+        from repro.obs import MetricsRegistry, engine_metrics_into
+
+        def _tier_scrape(as_json=False):
+            reg = MetricsRegistry()
+            for s, e in enumerate(tier.engines):
+                engine_metrics_into(reg, e, {"stage": str(s)})
+            return reg.render_json() if as_json else reg.render_text()
+
+        _obs_wrapup(args, scrape_text=_tier_scrape,
+                    scrape_json=lambda: _tier_scrape(as_json=True),
+                    recorders=[(f"stage{s}", e.flight)
+                               for s, e in enumerate(tier.engines)
+                               if e.flight is not None],
+                    dump=tier.dump_flight)
     assert stats["requests_finished"] == args.requests
 
 

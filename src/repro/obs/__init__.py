@@ -1,0 +1,42 @@
+"""Observability for the cascade serving stack (DESIGN.md §10).
+
+Three layers, all host-side and all assembled from data the jitted
+programs already return at existing host-sync boundaries:
+
+* :mod:`repro.obs.recorder` — the **flight recorder**: a structured span
+  tree per request (submit → queue-wait → admit → prefill → per-chunk
+  decode → exit | escalate | migrate → finalize) kept in a bounded ring,
+  plus an engine-level event log (threshold pushes, drains) and bounded
+  latency reservoirs.
+* :mod:`repro.obs.metrics` — a small metrics registry (counters /
+  gauges / quantile summaries) rendered as Prometheus text exposition
+  or JSON; ``engine_metrics_into`` maps an engine's ``stats()`` +
+  recorder onto it, ``parse_prometheus`` round-trips the text format.
+* :mod:`repro.obs.traceviz` — Perfetto / Chrome trace-event JSON export
+  (one track per lane/member, chunk-level slices, instant markers for
+  threshold pushes and drains) plus a schema validator.
+
+Nothing in here may touch a traced graph: recording adds ZERO new host
+syncs and ZERO retraces, so streams are bit-identical recorder-on vs
+off (``tests/test_obs.py``) and the overhead ratio is gated ≥ 0.97 in
+``BENCH_serving.json["obs"]``.
+"""
+from repro.obs.metrics import (MetricsRegistry, engine_metrics_into,
+                               parse_prometheus)
+from repro.obs.recorder import EventLog, FlightRecorder, Span
+from repro.obs.server import MetricsServer
+from repro.obs.traceviz import (export_trace, trace_events,
+                                validate_trace_events)
+
+__all__ = [
+    "EventLog",
+    "FlightRecorder",
+    "MetricsRegistry",
+    "MetricsServer",
+    "Span",
+    "engine_metrics_into",
+    "export_trace",
+    "parse_prometheus",
+    "trace_events",
+    "validate_trace_events",
+]

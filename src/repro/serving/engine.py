@@ -54,10 +54,14 @@ from repro.core.macs import segment_macs_per_token
 from repro.models.model import CascadeModel, extra_input_shapes
 from repro.serving.batching import DepthCompactor, cohort_capacity
 from repro.serving.paged import PagedCascadeCache
-from repro.serving.runtime import DeviceDecodeLoop
+from repro.serving.runtime import DeviceDecodeLoop, kernel_provenance
 from repro.utils import get_logger
 
 log = get_logger("serving")
+
+# flight-recorder process naming (traceviz tracks / fleet scrape labels):
+# engines number themselves in construction order
+_ENGINE_SEQ = itertools.count()
 
 
 @dataclasses.dataclass
@@ -137,6 +141,16 @@ class CascadeServingEngine:
         self.cohorts = effective_cohorts(cfg.cascade.n_cohorts, lane_batch,
                                          warn=True)
         self.compactor = DepthCompactor(n_lanes, cfg.cascade.n_components)
+        # flight recorder (repro.obs): host-side span assembly at the
+        # existing sync points — never touches a traced graph, so enabling
+        # it can neither retrace nor change streams (tests/test_obs.py)
+        self.flight = None
+        self._provenance = None
+        if cfg.obs.enabled:
+            from repro.obs.recorder import FlightRecorder
+            self.flight = FlightRecorder.from_config(
+                cfg.obs, name=f"engine{next(_ENGINE_SEQ)}")
+            self._provenance = kernel_provenance(cfg)
         # tuned kernel tiles install BEFORE anything traces (tiles are
         # static kernel params — installing later would retrace every lane)
         if cfg.kernel_tune.enabled:
@@ -309,6 +323,8 @@ class CascadeServingEngine:
     def submit(self, req: Request):
         self._submit_tick.setdefault(req.rid, self._tick)
         self.queue.append(req)
+        if self.flight is not None:
+            self.flight.on_submit(req.rid, self._tick)
 
     # -- fleet surface ----------------------------------------------------
     def free_slot_count(self) -> int:
@@ -331,6 +347,13 @@ class CascadeServingEngine:
         taken, self.queue = self.queue, []
         for req in taken:
             self._submit_tick.pop(req.rid, None)
+            if self.flight is not None:
+                # the rid leaves this engine without ever being admitted;
+                # finalize its flight so the recorder holds no dangling
+                # live entry (the sibling that picks it up records anew)
+                self.flight.on_finish(req.rid, "cancelled",
+                                      {"queued": True, "reason": "requeue",
+                                       "n_tokens": 0})
         return taken
 
     def _predict_depth(self, req: Request) -> float:
@@ -341,11 +364,28 @@ class CascadeServingEngine:
         hint = (req.extra or {}).get("predicted_depth")
         return self.compactor.predict_depth(hint)
 
-    def _record_admit(self, req: Request):
+    def _record_admit(self, req: Request, lane_id: Optional[int] = None,
+                      slot_idx: Optional[int] = None,
+                      depth: Optional[float] = None):
         sub = self._submit_tick.pop(req.rid, self._tick)
-        self._admit_waits.append(self._tick - sub)
-        if _escalation_extra(req) is not None:
+        wait = self._tick - sub
+        self._admit_waits.append(wait)
+        esc = _escalation_extra(req)
+        if esc is not None:
             self._escalated_admitted += 1
+        if self.flight is not None:
+            per = max(1, self.lane_batch // self.cohorts)
+            attrs = dict(self._provenance or {})
+            if esc is not None:
+                attrs["escalated_from"] = esc.get("rid")
+                attrs["replayed"] = esc.get("replayed")
+                attrs["migrated"] = bool(esc.get("migrated"))
+            self.flight.on_admit(
+                req.rid, lane=lane_id, slot=slot_idx,
+                cohort=(slot_idx // per if slot_idx is not None else None),
+                predicted_depth=(float(depth) if depth is not None
+                                 else None),
+                wait_ticks=wait, tick=self._tick, attrs=attrs)
 
     def _replayed_len(self, req: Request) -> int:
         """Trailing prompt tokens another stage already decoded (0 for
@@ -392,8 +432,9 @@ class CascadeServingEngine:
             # band matches — cohort-split skip predicates (n_cohorts > 1)
             # only fire when a cohort's co-residents exit together
             free_slots = [i for i, s in enumerate(lane["slots"]) if s.done]
-            slot = lane["slots"][self.compactor.pick_slot(
-                depth, free_slots, self.lane_batch, self.cohorts)]
+            slot_idx = self.compactor.pick_slot(
+                depth, free_slots, self.lane_batch, self.cohorts)
+            slot = lane["slots"][slot_idx]
             slot.request = req
             slot.generated = []
             slot.exit_depths = []
@@ -402,7 +443,7 @@ class CascadeServingEngine:
             # cache is shared per-lane, so we prefill the whole lane
             # when admission changes (simple + correct).
             lane["dirty"] = True
-            self._record_admit(req)
+            self._record_admit(req, lane_id, slot_idx, depth)
 
     # -- paged admission --------------------------------------------------
     def _free_per_cohort(self, lane) -> List[int]:
@@ -485,6 +526,10 @@ class CascadeServingEngine:
             cands = [i for i in live if self._continuous_feasible(i, req)]
             if cands:
                 lane_id = self.compactor.assign(depth, cands)
+                # _admit_continuous records the admit itself (it knows the
+                # slot, and it may retire the request in the same call —
+                # the flight's admit span must land before its terminal)
+                self.queue.pop(0)
                 self._admit_continuous(lane_id, req, depth)
             else:
                 cands = [i for i in whole if self._lane_plan_fits(i, req)]
@@ -494,17 +539,18 @@ class CascadeServingEngine:
                 lane = self.lanes[lane_id]
                 free_slots = [i for i, s in enumerate(lane["slots"])
                               if s.done]
-                slot = lane["slots"][self.compactor.pick_slot(
+                slot_idx = self.compactor.pick_slot(
                     depth, free_slots, self.lane_batch, self.cohorts,
-                    free_per_cohort=self._free_per_cohort(lane))]
+                    free_per_cohort=self._free_per_cohort(lane))
+                slot = lane["slots"][slot_idx]
                 slot.request = req
                 slot.generated = []
                 slot.exit_depths = []
                 slot.confs = []
                 slot.done = False
                 lane["dirty"] = True
-            self.queue.pop(0)
-            self._record_admit(req)
+                self.queue.pop(0)
+                self._record_admit(req, lane_id, slot_idx, depth)
 
     def _admit_continuous(self, lane_id: int, req: Request, depth: float):
         """Prefill ``req`` into a single freed slot of a live lane.
@@ -528,6 +574,7 @@ class CascadeServingEngine:
         slot_idx = self.compactor.pick_slot(
             depth, free_slots, self.lane_batch, self.cohorts,
             free_per_cohort=self._free_per_cohort(lane))
+        self._record_admit(req, lane_id, slot_idx, depth)
         ok = self.pcache.alloc_slot(lane_id, slot_idx, t0 - P_pad,
                                     t0 + req.max_new_tokens)
         assert ok, "continuous admission raced the feasibility check"
@@ -553,6 +600,9 @@ class CascadeServingEngine:
         dt_pre = time.perf_counter() - t_pre
         self.pcache.segments = new_segs
         self._account_prefill(req, dt_pre, P_pad)
+        if self.flight is not None:
+            self.flight.on_prefill(lane_id, t_pre, dt_pre, [req.rid],
+                                   [req.rid], P_pad)
         d, _ = self.decider.decide_with_carry(
             logits, thresholds=state.thresholds,
             state=self.decider.measure.init_state(
@@ -597,7 +647,7 @@ class CascadeServingEngine:
             self._retire(s, lane_id, slot_idx)
 
     def _retire(self, s: _Slot, lane_id: int, slot_idx: int,
-                escalated: bool = False):
+                escalated: bool = False, reason: str = "escalate"):
         s.done = True
         self.finished[s.request.rid] = {
             "tokens": list(s.generated),
@@ -606,6 +656,21 @@ class CascadeServingEngine:
             "lane": lane_id,
             "escalated": escalated,
         }
+        if self.flight is not None:
+            ds = np.asarray(s.exit_depths, np.int64)
+            self.flight.on_finish(
+                s.request.rid, reason if escalated else "exit", {
+                    "n_tokens": len(s.generated),
+                    "exit_component_last": (int(ds[-1]) if ds.size
+                                            else None),
+                    "mean_exit_depth": (float(ds.mean()) if ds.size
+                                        else None),
+                    "macs": (float(np.sum(
+                        np.asarray(self.mac_prefix)[ds])) if ds.size
+                        else 0.0),
+                    "lane": lane_id,
+                    "slot": slot_idx,
+                })
         # retiring traffic decays the lane's depth EMA toward the
         # population prior so the lane doesn't keep repelling traffic
         # that no longer matches its drained residents
@@ -620,7 +685,8 @@ class CascadeServingEngine:
                                      max_exit_depth=md)
             self._tables_stale.add(lane_id)
 
-    def cancel(self, rid: int, keep: Optional[int] = None) -> Optional[dict]:
+    def cancel(self, rid: int, keep: Optional[int] = None,
+               reason: str = "escalate") -> Optional[dict]:
         """Escalation re-admission hook: retire a live request early,
         keeping only its first ``keep`` generated tokens (None = all).
 
@@ -652,7 +718,8 @@ class CascadeServingEngine:
                     s.exit_depths = s.exit_depths[:keep]
                     s.confs = s.confs[:keep]
                 self._cancelled_for_escalation += 1
-                self._retire(s, lane_id, slot_idx, escalated=True)
+                self._retire(s, lane_id, slot_idx, escalated=True,
+                             reason=reason)
                 return self.finished[rid]
         for qi, req in enumerate(self.queue):
             if req.rid != rid:
@@ -666,6 +733,12 @@ class CascadeServingEngine:
                 "lane": None,
                 "escalated": True,
             }
+            if self.flight is not None:
+                # never admitted: terminal "cancelled" regardless of why —
+                # no lane, no tokens, nothing to escalate or migrate
+                self.flight.on_finish(rid, "cancelled",
+                                      {"queued": True, "reason": reason,
+                                       "n_tokens": 0})
             return self.finished[rid]
         return None
 
@@ -739,6 +812,12 @@ class CascadeServingEngine:
         # newly admitted escalated requests riding in it (if any)
         for s in fresh_admits:
             self._account_prefill(s.request, dt_pre, self.lane_batch * S)
+        if self.flight is not None:
+            # before the slot loop below, which may retire flights
+            self.flight.on_prefill(
+                lane_id, t_pre, dt_pre,
+                [s.request.rid for s in slots if not s.done],
+                [s.request.rid for s in fresh_admits], S)
         for i, s in enumerate(slots):
             if not s.done:
                 if not s.generated:
@@ -822,6 +901,52 @@ class CascadeServingEngine:
         # controller/artifact values (e.g. the 1.1 never-exit sentinel)
         # must round-trip through current_thresholds() exactly
         self._live_thresholds = pushed
+        if self.flight is not None:
+            self.flight.on_event("threshold_push",
+                                 {"thresholds": list(pushed),
+                                  "tick": self._tick})
+
+    # -- observability surface (repro.obs) --------------------------------
+    @property
+    def obs_events(self):
+        """The engine-level event log (None with the recorder off) —
+        the hook ThresholdController uses to record solver resolves."""
+        return self.flight.events if self.flight is not None else None
+
+    def dump_flight(self, rid: int) -> Optional[dict]:
+        """One request's span tree (live or from the done ring), or None
+        if unknown / ring-evicted / recorder off."""
+        return self.flight.dump(rid) if self.flight is not None else None
+
+    def flights(self, include_live: bool = False) -> List[dict]:
+        return (self.flight.flights(include_live)
+                if self.flight is not None else [])
+
+    def latency_stats(self) -> dict:
+        """p50/p95/p99 latency summaries.  ``admission_wait_ticks`` comes
+        from the window counter (available with the recorder off, resets
+        with :meth:`reset_metrics`); the rest come from the recorder's
+        lifetime reservoirs (None with it off)."""
+        from repro.obs.recorder import quantiles
+        out = {"admission_wait_ticks": quantiles(self._admit_waits)}
+        if self.flight is not None:
+            lat = self.flight.latency()
+            lat.pop("admission_wait_ticks", None)
+            out.update(lat)
+        else:
+            out.update({"e2e_seconds": None, "per_token_seconds": None,
+                        "macs_per_request": None,
+                        "tokens_per_request": None})
+        return out
+
+    def scrape(self) -> str:
+        """Prometheus text exposition of this engine's metrics."""
+        from repro.obs.metrics import MetricsRegistry, engine_metrics_into
+        return engine_metrics_into(MetricsRegistry(), self).render_text()
+
+    def scrape_json(self) -> dict:
+        from repro.obs.metrics import MetricsRegistry, engine_metrics_into
+        return engine_metrics_into(MetricsRegistry(), self).render_json()
 
     def _account(self, lane_id: int, depths: np.ndarray, n_tokens: int,
                  ran: np.ndarray, steps: int, max_depths):
@@ -880,6 +1005,15 @@ class CascadeServingEngine:
         lane["state"] = state
         depths = exit_idx[live]
         ran = np.asarray(state.segments_run) - run_before
+        if self.flight is not None:
+            # stamped around the dispatch that just synced — the slot loop
+            # below may retire flights, so the chunk span lands first
+            self.flight.on_chunk(
+                lane_id, t0, dt, 1,
+                [(s.request.rid, [int(tok[i])], [int(exit_idx[i])],
+                  [float(conf[i])])
+                 for i, s in enumerate(lane["slots"]) if not s.done],
+                compiled=not warm, segments_run=ran)
         if warm:
             # the warm-up dispatch is excluded from EVERY window metric
             # (MAC, skip, opportunity, wallclock) so stats() rates all
@@ -928,6 +1062,21 @@ class CascadeServingEngine:
             if self.paged:
                 self.pcache.pool.end_chunk()
             return
+        if self.flight is not None:
+            entries = []
+            for i, s in enumerate(slots):
+                if s.done:
+                    continue
+                rows = [step for step in range(n) if chunk.live[step, i]]
+                entries.append((
+                    s.request.rid,
+                    [int(chunk.tokens[r, i]) for r in rows],
+                    [int(chunk.exits[r, i]) for r in rows],
+                    [float(chunk.confs[r, i]) for r in rows]))
+            self.flight.on_chunk(
+                lane_id, chunk.t_host, chunk.seconds, n, entries,
+                compiled=chunk.compiled,
+                segments_run=np.asarray(state.segments_run) - run_before)
         if not chunk.compiled:
             # like the host tick: the compile chunk is excluded from every
             # window metric so all stats() rates cover the same steps
@@ -1034,6 +1183,11 @@ class CascadeServingEngine:
             "lane_conf_ema": [
                 float(np.mean(np.asarray(lane["state"].ema_conf)))
                 for lane in self.lanes],
+            # per-request latency distributions (satellite of PR 10):
+            # queueing + end-to-end p50/p95/p99 next to the per-token mean
+            "latency": self.latency_stats(),
+            "obs": (self.flight.stats() if self.flight is not None
+                    else None),
             "autotune": self._autotune_stats(),
             # cross-model escalation accounting: replayed-prefix prefill is
             # attributed to the escalated request (fresh vs replayed

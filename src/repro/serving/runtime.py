@@ -77,9 +77,11 @@ class DecodeChunk:
     ``live`` marks the slots that were still generating when step i's token
     was produced (a slot's valid outputs are exactly its True rows).
     ``seconds`` is the host-measured wall-clock of the dispatch including
-    the single per-chunk sync; ``compiled`` marks the warm-up call that
-    paid jit compilation (callers should report its time as compile cost,
-    not decode cost).
+    the single per-chunk sync; ``t_host`` is the ``perf_counter`` stamp at
+    dispatch start (so the flight recorder can place the chunk's slice on
+    a wall-clock timeline without adding any sync of its own); ``compiled``
+    marks the warm-up call that paid jit compilation (callers should
+    report its time as compile cost, not decode cost).
     """
 
     tokens: np.ndarray
@@ -90,6 +92,7 @@ class DecodeChunk:
     remaining: np.ndarray
     seconds: float
     compiled: bool
+    t_host: float = 0.0
 
 
 class DeviceDecodeLoop:
@@ -175,5 +178,6 @@ class DeviceDecodeLoop:
                       seconds, self.chunk)
         return (DecodeChunk(tokens=toks, exits=exits, confs=confs,
                             live=live, n_steps=n, remaining=rem,
-                            seconds=seconds, compiled=compiled),
+                            seconds=seconds, compiled=compiled,
+                            t_host=t0),
                 cache, state)
